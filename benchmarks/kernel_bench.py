@@ -1,0 +1,53 @@
+"""Kernel microbenchmark: gc_encode / gc_decode us-per-call + effective
+GB/s on this host (jnp oracle path — the TPU path is the Pallas kernel,
+validated in interpret mode by the test suite).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _bench(fn, *args, iters: int = 20) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(0)
+    rows = []
+    for k, d, dt in [(4, 1 << 20, jnp.float32), (8, 1 << 22, jnp.float32),
+                     (4, 1 << 22, jnp.bfloat16)]:
+        g = jnp.asarray(rng.standard_normal((k, d)), dt)
+        b = jnp.asarray(rng.standard_normal((1, k)), dt)
+        a = jnp.asarray(rng.standard_normal(k), dt)
+        t_enc = _bench(ref.encode_ref, b, g)
+        t_dec = _bench(ref.decode_ref, a, g)
+        nbytes = g.size * g.dtype.itemsize
+        rows.append(("gc_encode", k, d, str(dt.__name__), t_enc * 1e6,
+                     nbytes / t_enc / 1e9))
+        rows.append(("gc_decode", k, d, str(dt.__name__), t_dec * 1e6,
+                     nbytes / t_dec / 1e9))
+    if verbose:
+        for r in rows:
+            print(f"{r[0]},K={r[1]},D={r[2]},{r[3]},{r[4]:.1f}us,{r[5]:.1f}GB/s")
+    return rows
+
+
+def main():
+    run()
+    print("kernel_bench: OK")
+
+
+if __name__ == "__main__":
+    main()

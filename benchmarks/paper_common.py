@@ -1,0 +1,48 @@
+"""Shared setup for the paper-figure benchmarks (§VI settings):
+T_n ~ shifted-exponential(mu, t0=50), M=50, b=1, L=2e4 coordinates.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    ShiftedExponential,
+    expected_tau_hat,
+    round_x,
+    scheme_bank,
+    solve_xf,
+    solve_xt,
+    spsg,
+    tau_hat_batch,
+)
+
+T0 = 50.0
+L = 20_000
+EVAL_SAMPLES = 40_000
+EVAL_SEED = 20210
+
+
+def dist_at(mu: float) -> ShiftedExponential:
+    return ShiftedExponential(mu=mu, t0=T0)
+
+
+def eval_runtime(x, dist, n_workers: int, n_samples: int = EVAL_SAMPLES,
+                 seed: int = EVAL_SEED) -> float:
+    draws = dist.sample(np.random.default_rng(seed), (n_samples, n_workers))
+    return float(tau_hat_batch(np.asarray(x, np.float64), draws).mean())
+
+
+def proposed_solutions(dist, n_workers: int, total: int = L, rng: int = 0):
+    """x_dagger (SPSG), x_t (Thm 2), x_f (Thm 3) — integer-rounded."""
+    xd = spsg(dist, n_workers, total, n_iters=3000, batch=128, rng=rng).x
+    return {
+        "x_dagger (SPSG)": round_x(xd, total),
+        "x_t (Thm 2)": round_x(solve_xt(dist, n_workers, total), total),
+        "x_f (Thm 3)": round_x(solve_xf(dist, n_workers, total), total),
+    }
+
+
+def all_schemes(dist, n_workers: int, total: int = L, rng: int = 0):
+    out = proposed_solutions(dist, n_workers, total, rng)
+    out.update(scheme_bank(dist, n_workers, total, rng=rng))
+    return out

@@ -1,0 +1,118 @@
+"""Roofline report: reads artifacts/dryrun/*.json and emits the
+per-(arch x shape x mesh) table of the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS utilization, and a one-line
+"what would move the dominant term" note.  (EXPERIMENTS.md §Roofline.)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.models.params import count_params
+
+ART = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+
+def model_flops(rec) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N*D for inference."""
+    cfg = get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    n_params = active_params(cfg, rec.get("params_b", 0))
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        base = 6.0 * n_params * tokens
+        if rec.get("step") == "train_coded":
+            base *= rec.get("s_max", 0) + 1  # the redundancy work is real work
+        return base
+    if shape.kind == "prefill":
+        return 2.0 * n_params * shape.seq_len * shape.global_batch
+    return 2.0 * n_params * 1 * shape.global_batch  # decode: 1 token
+
+
+def active_params(cfg, total_params: float) -> float:
+    """Activated parameter count (MoE: shared + top_k of routed)."""
+    moe_specs = [l.moe for l in cfg.layers if l.moe is not None]
+    if not moe_specs:
+        return total_params
+    # routed expert params per MoE layer
+    inactive = 0.0
+    for m in moe_specs:
+        per_expert = 3 * cfg.d_model * m.d_ff
+        inactive += (m.num_experts - m.top_k) * per_expert
+    return max(total_params - inactive, 0.0)
+
+
+def suggestion(rec, dom: str) -> str:
+    if dom == "memory":
+        return ("remat/fuse: shrink per-chunk attention materialization, "
+                "bf16 intermediates, bigger effective arithmetic intensity")
+    if dom == "collective":
+        return ("shard activations over seq (sequence parallelism) or "
+                "overlap TP all-reduces with compute; MoE: fuse a2a")
+    return "MXU-align tiles; raise per-chip batch; cut causal-mask waste"
+
+
+def load() -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, verbose: bool = True) -> list[dict]:
+    rows = []
+    for r in recs:
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                         "step": r.get("step"), "status": r["status"],
+                         "note": r.get("reason", r.get("error", ""))[:80]})
+            continue
+        n = r["n_chips"]
+        terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(r)
+        hlo_total = r["per_device_flops"] * n
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "step": r.get("step"), "status": "ok",
+            "compute_s": round(terms["compute"], 4),
+            "memory_s": round(terms["memory"], 4),
+            "collective_s": round(terms["collective"], 4),
+            "dominant": dom,
+            "model_flops": mf,
+            "useful_ratio": round(mf / hlo_total, 3) if hlo_total else 0.0,
+            "note": suggestion(r, dom),
+        })
+    if verbose:
+        hdr = (f"{'arch':22s} {'shape':12s} {'mesh':6s} {'step':12s} "
+               f"{'compute_s':>10s} {'memory_s':>10s} {'collect_s':>10s} "
+               f"{'dominant':>10s} {'useful':>7s}")
+        print(hdr)
+        for row in rows:
+            if row["status"] != "ok":
+                print(f"{row['arch']:22s} {row['shape']:12s} {row['mesh']:6s} "
+                      f"{row.get('step') or '':12s} -- {row['status']}: {row['note']}")
+                continue
+            print(f"{row['arch']:22s} {row['shape']:12s} {row['mesh']:6s} "
+                  f"{row['step']:12s} {row['compute_s']:10.4f} "
+                  f"{row['memory_s']:10.4f} {row['collective_s']:10.4f} "
+                  f"{row['dominant']:>10s} {row['useful_ratio']:7.3f}")
+    return rows
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("roofline: no dry-run artifacts found (run repro.launch.dryrun)")
+        return
+    rows = table(recs)
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    print(f"roofline: {ok} ok rows of {len(rows)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark runner — one entry per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run`` prints a ``name,metric,value``
+CSV summary plus the per-benchmark detail above it.
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from . import fig3_partitions, fig4a_runtime_vs_n, fig4b_runtime_vs_mu
+    from . import kernel_bench, roofline
+
+    rows = []
+
+    def section(name, fn):
+        print(f"\n===== {name} =====")
+        t0 = time.perf_counter()
+        try:
+            fn()
+            rows.append((name, "seconds", f"{time.perf_counter()-t0:.1f}", "ok"))
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rows.append((name, "seconds", f"{time.perf_counter()-t0:.1f}",
+                         f"FAIL {type(e).__name__}"))
+
+    section("fig3_partitions", fig3_partitions.main)       # Fig. 3
+    section("fig4a_runtime_vs_n", fig4a_runtime_vs_n.main) # Fig. 4(a)
+    section("fig4b_runtime_vs_mu", fig4b_runtime_vs_mu.main)  # Fig. 4(b)
+    section("kernel_bench", kernel_bench.main)             # encode/decode hot spot
+    section("roofline", roofline.main)                     # §Roofline table
+
+    print("\nname,metric,value,status")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Quickstart: the paper in two minutes.
+
+1. Optimize a block partition x for N straggling workers (Thm 2/3 + SPSG).
+2. Build the per-level Tandon cyclic codes and show exact decode.
+3. Fig. 1-style timeline for one straggler realization: coordinate
+   gradient coding finishes earlier than single-level gradient coding.
+4. Train a tiny LM for a few steps with the coded trainer and verify the
+   coded gradient equals the uncoded data-parallel gradient exactly.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (
+    GradientCode, ShiftedExponential, expected_tau_hat, round_x, solve_xf,
+    solve_xt, spsg, tau, x_to_s, completion_trace,
+)
+from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
+from repro.train.coded import StragglerSim, build_plan, make_coded_grad_fn, uncoded_grad_fn
+from repro.train.state import init_train_state
+
+
+def part1_partition():
+    print("=" * 72)
+    print("1) Optimal block partition (N=8 workers, L=1000 coordinate units)")
+    n, total = 8, 1000
+    dist = ShiftedExponential(mu=1e-3, t0=50.0)
+    for name, x in [
+        ("x_t  (Thm 2)", round_x(solve_xt(dist, n, total), total)),
+        ("x_f  (Thm 3)", round_x(solve_xf(dist, n, total), total)),
+        ("x_dagger SPSG", round_x(spsg(dist, n, total, n_iters=800).x, total)),
+    ]:
+        ev = expected_tau_hat(np.asarray(x, float), dist, n, n_samples=20000)
+        print(f"  {name}: x={x.tolist()}  E[tau]={ev:.3g}")
+    uncoded = np.zeros(n); uncoded[0] = total
+    print(f"  uncoded      : E[tau]={expected_tau_hat(uncoded, dist, n, n_samples=20000):.3g}"
+          f"  (waits for the slowest worker)")
+
+
+def part2_codes():
+    print("=" * 72)
+    print("2) Tandon cyclic codes: exact decode from any N-s workers")
+    codes = GradientCode(n_workers=6, prefer_fractional=False)
+    g = np.random.default_rng(0).standard_normal((6, 5))  # 6 shard-gradients
+    for s in (1, 3):
+        b = codes.b(s)
+        coded = b @ g  # worker n sends sum_j B[n,j] g_j
+        drop = np.random.default_rng(s).choice(6, size=s, replace=False)
+        fastest = np.setdiff1d(np.arange(6), drop)
+        a = codes.decode(s, fastest)
+        err = np.abs(a @ coded - g.sum(0)).max()
+        print(f"  s={s}: dropped workers {drop.tolist()} -> decode err {err:.2e}")
+
+
+def part3_timeline():
+    print("=" * 72)
+    print("3) Fig.1-style runtime, T = (0.1, 0.1, 0.25, 1)*T0  (N=4, L=4)")
+    times = np.array([0.1, 0.1, 0.25, 1.0]) * 500
+    for name, s in [
+        ("gradient coding s=1", np.array([1, 1, 1, 1])),
+        ("gradient coding s=2", np.array([2, 2, 2, 2])),
+        ("coordinate GC s=(1,1,2,2)", np.array([1, 1, 2, 2])),
+    ]:
+        t = tau(s, times, )
+        print(f"  {name:28s} tau = {t:.1f}")
+    _, master_done = completion_trace(np.array([1, 1, 2, 2]), times)
+    print(f"  per-coordinate recovery times: {np.round(master_done, 1).tolist()}")
+
+
+def part4_coded_training():
+    print("=" * 72)
+    print("4) Coded training step == uncoded data-parallel step (exactly)")
+    cfg = get_config("gc-lm-110m").reduced(n_layers=2, d_model=128)
+    dist = ShiftedExponential(mu=1e-3, t0=50.0)
+    n = 4
+    state, _ = init_train_state(cfg, jax.random.PRNGKey(0))
+    plan = build_plan(state.params, dist, n, solver="xf")
+    data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8))
+    wb = jnp.asarray(coded_worker_batches(data, 0, n, plan.s_max))
+    sim = StragglerSim(plan, dist, seed=7)
+    dec_w, rec = sim.step()
+    g_coded = jax.jit(make_coded_grad_fn(cfg, plan, mode="sim"))(state.params, wb, dec_w)
+    shards = jnp.asarray(np.stack([data.shard(0, i, n) for i in range(n)]))
+    g_ref = jax.jit(uncoded_grad_fn(cfg, n))(state.params, shards)
+    err = max(jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), g_coded, g_ref)))
+    print(f"  plan: x={plan.x.tolist()} levels_in_use={plan.used_levels.tolist()}")
+    print(f"  straggler realization tau_coded={rec['tau_coded']:.3g} "
+          f"vs tau_uncoded={rec['tau_uncoded']:.3g} "
+          f"(speedup {rec['tau_uncoded']/rec['tau_coded']:.2f}x on this draw; "
+          f">1x in expectation)")
+    print(f"  max |coded_grad - uncoded_grad| = {err:.2e}")
+
+
+if __name__ == "__main__":
+    part1_partition()
+    part2_codes()
+    part3_timeline()
+    part4_coded_training()
+    print("=" * 72)
+    print("quickstart: all four parts OK")

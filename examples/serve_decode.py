@@ -1,0 +1,55 @@
+"""Batched serving demo: prefill + KV-cache decode on a reduced config.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch gemma3-27b --new 24
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.model import init_model
+from repro.serve.engine import generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-27b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params, _ = init_model(cfg, key)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    aux = None
+    if cfg.vision is not None:
+        aux = jax.random.normal(key, (args.batch, cfg.vision.n_patches,
+                                      cfg.vision.d_vision))
+    if cfg.encoder is not None:
+        aux = jax.random.normal(key, (args.batch, cfg.encoder.n_frames, cfg.d_model))
+
+    t0 = time.time()
+    out = generate(cfg, params, prompt, max_new=args.new, temperature=0.0,
+                   aux_inputs=aux)
+    wall = time.time() - t0
+    toks = args.batch * args.new
+    print(f"arch={cfg.name} (reduced) batch={args.batch} "
+          f"prompt={args.prompt_len} new={args.new}")
+    print(f"output shape {out.shape}; {toks} tokens in {wall:.1f}s "
+          f"({toks/wall:.1f} tok/s on CPU)")
+    print("first row tail:", out[0, -args.new:].tolist())
+    assert out.shape == (args.batch, args.prompt_len + args.new)
+    print("serve_decode: OK")
+
+
+if __name__ == "__main__":
+    main()

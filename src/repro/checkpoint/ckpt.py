@@ -1,0 +1,108 @@
+"""Checkpointing: pytree -> step-numbered directory of .npz + json meta.
+
+No orbax dependency: leaves are saved as a flat npz keyed by tree path,
+metadata (step, config name, tree structure) as json.  Atomic via
+write-to-tmp + rename.  Works for TrainState or any pytree of arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "restore_train_state"]
+
+
+_UINT_FOR_SIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _flatten_with_paths(tree):
+    """Returns (key->array, key->dtype-string).  Non-native dtypes (bf16,
+    fp8, ...) are stored as same-width uint views so np.savez survives."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out, dtypes = {}, {}
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        dtypes[key] = str(arr.dtype)
+        if arr.dtype.kind not in "biufc":  # exotic (ml_dtypes) -> uint view
+            arr = arr.view(_UINT_FOR_SIZE[arr.dtype.itemsize])
+        out[key] = arr
+    return out, dtypes
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays, dtypes = _flatten_with_paths(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": int(step), "n_leaves": len(arrays), "dtypes": dtypes,
+            "extra": extra or {}}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: Optional[int] = None) -> tuple[dict, dict]:
+    """Returns (flat path->array dict, meta)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    import ml_dtypes  # jax dependency; restores bf16/fp8 views
+
+    for k, dt in meta.get("dtypes", {}).items():
+        if k in arrays and str(arrays[k].dtype) != dt:
+            arrays[k] = arrays[k].view(np.dtype(dt))
+    return arrays, meta
+
+
+def restore_train_state(template: Any, ckpt_dir: str, step: Optional[int] = None) -> Any:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    arrays, _ = load_checkpoint(ckpt_dir, step)
+    flat = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat[0]:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat[1], leaves)

@@ -1,0 +1,277 @@
+"""Config system: per-layer specs, model configs, input shapes, registry.
+
+Every assigned architecture is a ``ModelConfig`` built from per-layer
+``LayerSpec``s (mixer kind x attention variant x FFN kind), so the stack
+builder can scan homogeneous runs and the dry-run can reason about
+heterogenous interleaves (gemma3 5:1, jamba 1:7, xlstm mLSTM/sLSTM).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+# --------------------------------------------------------------------- specs
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_ff: int  # per-expert hidden size
+    num_shared: int = 0  # always-on shared experts (deepseek)
+    capacity_factor: float = 1.25
+    router: str = "softmax"  # 'softmax' | 'sigmoid' (deepseek-v3)
+    aux_loss_coef: float = 0.01
+
+
+@dataclass(frozen=True)
+class MLASpec:
+    """DeepSeek multi-head latent attention."""
+
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class MambaSpec:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class XLSTMSpec:
+    kind: str = "mlstm"  # 'mlstm' | 'slstm'
+    proj_factor: float = 2.0  # mLSTM up-projection
+    conv_kernel: int = 4
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One decoder layer = mixer + FFN.
+
+    mixer: 'attn' | 'mla' | 'mamba' | 'mlstm' | 'slstm' | 'cross_attn'
+    window: None = global attention; int = sliding-window size.
+    moe: None = dense FFN (d_ff from ModelConfig); else MoESpec.
+    d_ff == 0 (xlstm) -> no FFN sublayer (mixer contains the projection).
+    """
+
+    mixer: str = "attn"
+    window: Optional[int] = None
+    moe: Optional[MoESpec] = None
+    use_ffn: bool = True
+    cross_source: bool = False  # add a cross-attn sublayer (whisper decoder)
+
+
+@dataclass(frozen=True)
+class EncoderSpec:
+    """Whisper-style encoder consuming STUBBED frame embeddings."""
+
+    n_layers: int = 6
+    n_frames: int = 1500  # post-conv frames (30 s audio)
+
+
+@dataclass(frozen=True)
+class VisionSpec:
+    """VLM cross-attention source: STUBBED patch embeddings."""
+
+    n_patches: int = 1601  # 1 tile x (224/14)^2 + cls, llama-3.2 style
+    d_vision: int = 7680  # pre-projector width (projector is real)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | vlm | hybrid | audio | ssm
+    source: str  # citation bracket from the assignment
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    layers: tuple  # tuple[LayerSpec, ...], length n_layers
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    # attention details
+    qkv_bias: bool = False
+    attn_softcap: float = 0.0  # gemma2: 50.0
+    final_softcap: float = 0.0  # gemma2: 30.0
+    qk_norm: bool = False  # gemma3
+    rope_base: float = 10_000.0
+    rope_base_local: float = 0.0  # gemma3 uses a different base on local layers
+    # FFN / embedding details
+    activation: str = "silu"  # 'silu' (SwiGLU) | 'gelu' (GeGLU) | 'gelu_mlp'
+    norm: str = "rms"
+    post_norm: bool = False  # gemma2/3 sandwich norms
+    tie_embeddings: bool = True
+    scale_embed: bool = False  # gemma family: x *= sqrt(d_model)
+    # aux specs
+    mla: Optional[MLASpec] = None
+    mamba: Optional[MambaSpec] = None
+    xlstm_blocks: tuple = ()  # per-layer XLSTMSpec for ssm archs
+    encoder: Optional[EncoderSpec] = None
+    vision: Optional[VisionSpec] = None
+    mtp_depth: int = 0  # deepseek multi-token-prediction heads
+    # numerics / distribution
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: str = "none"  # 'none' | 'dots' | 'full'
+    fsdp: bool = False  # additionally shard params over the data axis
+    shard_experts: bool = True  # experts dim over 'model' (needs E % shards == 0)
+    moe_impl: str = "gspmd"  # 'gspmd' | 'manual' (shard_map local-capacity dispatch)
+    shard_vocab: bool = True  # vocab dim over 'model' (off: XLA partial-manual
+    #                           PartitionGather bug workaround, see EXPERIMENTS)
+    attn_chunk: int = 1024  # KV chunk for online-softmax attention
+    attn_chunk_remat: bool = False  # recompute chunk scores in backward
+    #   (flash-attention backward structure: no per-chunk prob residuals)
+    attn_probs_bf16: bool = False  # materialize chunk probs in bf16
+    #   (halves the dominant prob stream; max/log-sum stats stay f32)
+    scan_chunk: int = 256  # time-chunk for SSM/xLSTM scans
+    max_seq: int = 131_072
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if len(self.layers) != self.n_layers:
+            raise ValueError(
+                f"{self.name}: len(layers)={len(self.layers)} != n_layers={self.n_layers}"
+            )
+        if self.n_kv_heads and self.n_heads % self.n_kv_heads != 0:
+            raise ValueError(f"{self.name}: n_heads % n_kv_heads != 0")
+
+    # ------------------------------------------------------------- helpers
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.encoder is not None
+
+    def sub_quadratic(self) -> bool:
+        """True if every layer is windowed or recurrent (long_500k eligible).
+
+        Global-attention layers are allowed for *decode* shapes when the
+        arch also has a recurrent/windowed majority (gemma2/3 hybrid
+        local:global) — decode against a long cache is linear per token.
+        We gate long_500k on: no layer requires a quadratic *prefill*,
+        i.e. decode-only usage; pure full-attention stacks return False.
+        """
+        kinds = {l.mixer for l in self.layers}
+        if kinds & {"mamba", "mlstm", "slstm"}:
+            return True
+        windows = [l.window for l in self.layers if l.mixer in ("attn", "mla")]
+        return any(w is not None for w in windows)
+
+    def reduced(self, n_layers: int = 2, d_model: int = 256, seq_cap: int = 512) -> "ModelConfig":
+        """Smoke-test variant: same family, tiny dims (per instructions)."""
+        scale = d_model / self.d_model
+        n_heads = max(2, min(4, self.n_heads))
+        n_kv = 1 if self.n_kv_heads == 1 else max(1, min(2, self.n_kv_heads))
+        while n_heads % n_kv:
+            n_kv -= 1
+        head_dim = max(16, d_model // n_heads)
+
+        def shrink_layer(l: LayerSpec) -> LayerSpec:
+            moe = None
+            if l.moe is not None:
+                moe = dataclasses.replace(
+                    l.moe,
+                    num_experts=min(4, l.moe.num_experts),
+                    top_k=min(2, l.moe.top_k),
+                    num_shared=min(1, l.moe.num_shared),
+                    d_ff=max(32, int(l.moe.d_ff * scale)),
+                    capacity_factor=8.0,  # no token drops -> exact decode checks
+                )
+            window = None if l.window is None else min(l.window, seq_cap // 2)
+            return dataclasses.replace(l, moe=moe, window=window)
+
+        layers = tuple(shrink_layer(l) for l in self.layers[:n_layers])
+        kw = dict(
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=head_dim,
+            d_ff=0 if self.d_ff == 0 else max(64, int(self.d_ff * scale)),
+            vocab=512,
+            layers=layers,
+            max_seq=seq_cap * 2,
+            attn_chunk=128,
+            scan_chunk=64,
+            remat="none",
+            fsdp=False,
+            dtype="float32",
+            mtp_depth=min(self.mtp_depth, 1),
+        )
+        if self.mla is not None:
+            kw["mla"] = MLASpec(
+                q_lora_rank=64, kv_lora_rank=32, qk_nope_head_dim=head_dim,
+                qk_rope_head_dim=16, v_head_dim=head_dim,
+            )
+        if self.mamba is not None:
+            kw["mamba"] = dataclasses.replace(self.mamba, d_state=8)
+        if self.xlstm_blocks:
+            kw["xlstm_blocks"] = self.xlstm_blocks[:n_layers]
+        if self.encoder is not None:
+            kw["encoder"] = EncoderSpec(n_layers=2, n_frames=64)
+        if self.vision is not None:
+            kw["vision"] = VisionSpec(n_patches=16, d_vision=64)
+        return self.replace(**kw)
+
+
+# ------------------------------------------------------------- input shapes
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ----------------------------------------------------------------- registry
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str):
+    def deco(fn: Callable[[], ModelConfig]):
+        _REGISTRY[arch_id] = fn
+        return fn
+
+    return deco
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populates the registry)
+
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Dry-run eligibility of (arch, shape) with the documented skips."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic():
+        return False, "long_500k needs sub-quadratic attention (skip, see DESIGN.md)"
+    return True, ""

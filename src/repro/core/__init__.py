@@ -1,0 +1,53 @@
+"""Core library: the paper's contribution as an importable module.
+
+Optimization-based Block Coordinate Gradient Coding (Wang et al.,
+GLOBECOM 2021): coordinate/block gradient coding schemes, the runtime
+cost model, the block-partition optimizers, and the paper's baselines.
+"""
+from .assignment import assign_levels_to_layers, round_x, s_to_x, x_to_s
+from .baselines import (
+    ferdinand_x,
+    scheme_bank,
+    single_bcgc,
+    tandon_alpha_level,
+    tandon_alpha_x,
+)
+from .coding import (
+    GradientCode,
+    cyclic_B,
+    cyclic_shards,
+    decode_weights,
+    frac_repetition_B,
+    identity_B,
+    make_code,
+    verify_code,
+)
+from .distributions import (
+    BernoulliStraggler,
+    EmpiricalStraggler,
+    LogNormalStraggler,
+    ParetoStraggler,
+    ShiftedExponential,
+    StragglerDistribution,
+    UniformStraggler,
+)
+from .runtime import (
+    CostModel,
+    completion_trace,
+    expected_tau_hat,
+    subgradient_tau_hat,
+    tau,
+    tau_hat,
+    tau_hat_batch,
+)
+from .solvers import (
+    SPSGResult,
+    brute_force_int,
+    closed_form_x,
+    project_block_simplex,
+    solve_xf,
+    solve_xt,
+    spsg,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

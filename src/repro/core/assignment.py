@@ -1,0 +1,91 @@
+"""Coordinate <-> block maps (Theorem 1), integer rounding, layer blocks.
+
+Theorem 1 change of variables:
+    x_n = #{l : s_l = n}                       (eq. 6)
+    s_l = min{ i : sum_{n<=i} x_n >= l }       (eq. 7)
+
+For neural networks the paper's footnotes 2-3 replace the scalar
+coordinate with a *block of coordinates associated with one layer*.
+``assign_levels_to_layers`` maps a block solution x (over L abstract
+units) onto a model's layer list, weighting each layer by its gradient
+compute cost so eq. (2)'s cumulative-work term stays faithful.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "x_to_s",
+    "s_to_x",
+    "round_x",
+    "assign_levels_to_layers",
+]
+
+
+def x_to_s(x: np.ndarray, total: int | None = None) -> np.ndarray:
+    """Eq. (7).  x : (N,) nonneg ints with sum L -> s : (L,) nondecreasing."""
+    x = np.asarray(x, dtype=np.int64)
+    if total is not None and int(x.sum()) != int(total):
+        raise ValueError(f"sum(x)={x.sum()} != L={total}")
+    return np.repeat(np.arange(x.shape[0]), x)
+
+
+def s_to_x(s: np.ndarray, n_workers: int) -> np.ndarray:
+    """Eq. (6)."""
+    s = np.asarray(s, dtype=np.int64)
+    return np.bincount(s, minlength=n_workers).astype(np.int64)
+
+
+def round_x(x: np.ndarray, total: int) -> np.ndarray:
+    """Round a continuous feasible x (sum = L) to integers with exact sum.
+
+    Largest-remainder rounding — the integer point adjacent to x in the
+    simplex {x >= 0, sum x = L}, per the relax-and-round recipe the paper
+    cites (Boyd & Vandenberghe, p. 386).  Good whenever N << L.
+    """
+    x = np.maximum(np.asarray(x, dtype=np.float64), 0.0)
+    if x.sum() <= 0:
+        raise ValueError("x must have positive mass")
+    x = x * (total / x.sum())
+    base = np.floor(x).astype(np.int64)
+    short = int(total - base.sum())
+    if short > 0:
+        order = np.argsort(-(x - base), kind="stable")
+        base[order[:short]] += 1
+    elif short < 0:  # numerically possible after rescale
+        order = np.argsort(x - base, kind="stable")
+        take = 0
+        for idx in order:
+            if take == -short:
+                break
+            if base[idx] > 0:
+                base[idx] -= 1
+                take += 1
+    assert base.sum() == total and (base >= 0).all()
+    return base
+
+
+def assign_levels_to_layers(
+    layer_costs: Sequence[float], x: np.ndarray, total_units: int | None = None
+) -> np.ndarray:
+    """Redundancy level per layer from a block solution x over L units.
+
+    ``layer_costs[j]`` is the relative gradient-compute cost of layer j
+    (e.g. backward FLOPs).  We lay the layers out along the abstract
+    coordinate axis in order, each occupying a cost-proportional stretch
+    of the L units, and give layer j the level of the unit at its
+    midpoint.  Monotone in j by Lemma 1, so earlier layers get lower
+    redundancy — matching the paper's compute-and-stream order.
+    """
+    costs = np.asarray(layer_costs, dtype=np.float64)
+    if (costs < 0).any() or costs.sum() <= 0:
+        raise ValueError("layer costs must be nonnegative with positive sum")
+    x = np.asarray(x, dtype=np.float64)
+    total = float(total_units if total_units is not None else x.sum())
+    cum_mid = (np.cumsum(costs) - 0.5 * costs) / costs.sum() * total  # unit midpoint
+    cum_x = np.cumsum(x)
+    # level of unit u = min{ i : cum_x[i] >= u }
+    levels = np.searchsorted(cum_x, cum_mid, side="left")
+    return np.clip(levels, 0, x.shape[0] - 1).astype(np.int64)

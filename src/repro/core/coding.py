@@ -1,0 +1,180 @@
+"""Gradient-coding encode/decode matrices (Tandon et al., ICML'17).
+
+For a redundancy level ``s`` over ``N`` workers / data shards, the code
+is an N x N matrix ``B`` whose row ``n`` is supported on the cyclic
+window {n, n+1, ..., n+s} (mod N).  Worker ``n`` transmits the coded
+value  c_n = sum_j B[n, j] * g_j  where g_j is the partial gradient of
+data shard j.  The defining property: for EVERY "fastest" set
+F ⊂ [N], |F| = N - s, there exists a ∈ R^{N-s} with  aᵀ B_F = 1ᵀ,
+so the master recovers  sum_j g_j  from any N - s workers.
+
+Constructions implemented:
+  * ``identity_B``            s = 0 (no redundancy).
+  * ``frac_repetition_B``     Tandon's fractional-repetition scheme,
+                              requires (s+1) | N; B is a 0/1 matrix.
+  * ``cyclic_B``              Tandon's Algorithm 1: random H ∈ R^{s x N}
+                              with H @ 1 = 0; row n solves a local
+                              s x s system so that B Hᵀ = 0.  Works for
+                              any (N, s), decodable w.p. 1.
+  * ``make_code``             dispatcher (identity / fractional / cyclic).
+
+Decoding is *online*: given the realized fastest set F, ``decode_weights``
+solves the small (N-s) system by least squares — O(N^3) worst case at the
+aggregation point, negligible next to the gradient compute (paper §III
+omits encode/decode cycles from the cost model for the same reason).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "identity_B",
+    "frac_repetition_B",
+    "cyclic_B",
+    "make_code",
+    "decode_weights",
+    "verify_code",
+    "GradientCode",
+    "cyclic_shards",
+]
+
+
+def cyclic_shards(n_workers: int, worker: int, s: int) -> np.ndarray:
+    """Shard indices I_n assigned to ``worker`` (0-based) at redundancy s.
+
+    Paper §III sample-allocation phase: worker n holds the s+1 cyclically
+    consecutive shards starting at its own index.
+    """
+    return (worker + np.arange(s + 1)) % n_workers
+
+
+def identity_B(n_workers: int) -> np.ndarray:
+    return np.eye(n_workers, dtype=np.float64)
+
+
+def frac_repetition_B(n_workers: int, s: int) -> np.ndarray:
+    """Fractional repetition code; requires (s+1) | N.
+
+    Workers are split into N/(s+1) groups of (s+1); every worker in group
+    g holds (and sums) the same chunk of (s+1) shards.  Any s stragglers
+    leave >= 1 survivor per group, so the master adds one representative
+    per group.  B is 0/1, hence numerically exact.
+    """
+    if (s + 1) <= 0 or n_workers % (s + 1) != 0:
+        raise ValueError(f"fractional repetition needs (s+1)|N, got N={n_workers} s={s}")
+    b = np.zeros((n_workers, n_workers), dtype=np.float64)
+    group = s + 1
+    for w in range(n_workers):
+        g = w // group
+        b[w, g * group : (g + 1) * group] = 1.0
+    return b
+
+
+def cyclic_B(n_workers: int, s: int, rng=0) -> np.ndarray:
+    """Tandon et al. Algorithm 1 (cyclic repetition code).
+
+    Draw H ∈ R^{s x N} i.i.d. Gaussian, then force H @ 1 = 0 by setting
+    the last column to minus the sum of the others.  Row n of B is
+    supported on the window {n..n+s}; its leading entry is 1 and the rest
+    solve  H[:, win[1:]] y = -H[:, win[0]]  so that B Hᵀ = 0.  Then
+    rowspace(B) = null(H) ∋ 1, and any N-s rows of B are a.s. a basis,
+    giving decodability for every straggler pattern.
+    """
+    if s == 0:
+        return identity_B(n_workers)
+    if not (0 < s < n_workers):
+        raise ValueError(f"need 0 <= s < N, got s={s}, N={n_workers}")
+    rng = np.random.default_rng(rng)
+    h = rng.standard_normal((s, n_workers))
+    h[:, -1] = -h[:, :-1].sum(axis=1)
+    b = np.zeros((n_workers, n_workers), dtype=np.float64)
+    for n in range(n_workers):
+        win = (n + np.arange(s + 1)) % n_workers
+        rhs = -h[:, win[0]]
+        sol = np.linalg.solve(h[:, win[1:]], rhs)
+        b[n, win[0]] = 1.0
+        b[n, win[1:]] = sol
+    return b
+
+
+def make_code(n_workers: int, s: int, rng=0, prefer_fractional: bool = True) -> np.ndarray:
+    """Best available B for (N, s): identity, fractional (exact 0/1) or cyclic."""
+    if s == 0:
+        return identity_B(n_workers)
+    if prefer_fractional and n_workers % (s + 1) == 0:
+        return frac_repetition_B(n_workers, s)
+    return cyclic_B(n_workers, s, rng)
+
+
+def decode_weights(b: np.ndarray, fastest: np.ndarray) -> np.ndarray:
+    """Full-length decode vector a ∈ R^N with zeros on stragglers.
+
+    Solves  aᵀ B[fastest, :] = 1ᵀ  by least squares and embeds the
+    result at the surviving indices, so that
+        sum_n a[n] * c_n  =  sum_j g_j          (exactly, for any F).
+    """
+    n_workers = b.shape[0]
+    fastest = np.asarray(fastest, dtype=np.int64)
+    sub = b[fastest, :]  # (N-s, N)
+    coeff, *_ = np.linalg.lstsq(sub.T, np.ones(n_workers), rcond=None)
+    a = np.zeros(n_workers, dtype=np.float64)
+    a[fastest] = coeff
+    return a
+
+
+def verify_code(b: np.ndarray, s: int, exhaustive_limit: int = 20_000, rng=0) -> float:
+    """Max decode residual over straggler patterns (exhaustive or sampled)."""
+    n_workers = b.shape[0]
+    n_patterns = math.comb(n_workers, s)
+    worst = 0.0
+    if n_patterns <= exhaustive_limit:
+        patterns = itertools.combinations(range(n_workers), s)
+    else:
+        rng = np.random.default_rng(rng)
+        patterns = (
+            tuple(rng.choice(n_workers, size=s, replace=False)) for _ in range(exhaustive_limit)
+        )
+    for stragglers in patterns:
+        fastest = np.setdiff1d(np.arange(n_workers), np.asarray(stragglers, dtype=np.int64))
+        a = decode_weights(b, fastest)
+        resid = float(np.max(np.abs(a @ b - 1.0)))
+        worst = max(worst, resid)
+    return worst
+
+
+@dataclass
+class GradientCode:
+    """A bank of codes, one per redundancy level in use.
+
+    ``levels`` maps redundancy s -> B matrix; built lazily.  This is the
+    object the trainer holds: block k with redundancy s_k encodes with
+    ``codes.b(s_k)`` and decodes with ``codes.decode(s_k, fastest)``.
+    """
+
+    n_workers: int
+    rng_seed: int = 0
+    prefer_fractional: bool = True
+    _bank: dict = field(default_factory=dict, repr=False)
+
+    def b(self, s: int) -> np.ndarray:
+        if s not in self._bank:
+            self._bank[s] = make_code(
+                self.n_workers, s, rng=self.rng_seed + 7919 * s, prefer_fractional=self.prefer_fractional
+            )
+        return self._bank[s]
+
+    def encode_row(self, s: int, worker: int) -> np.ndarray:
+        """Nonzero coding coefficients for ``worker``'s s+1 shards (dense row)."""
+        return self.b(s)[worker]
+
+    def decode(self, s: int, fastest: np.ndarray) -> np.ndarray:
+        return decode_weights(self.b(s), fastest)
+
+    def fastest_set(self, s: int, times: np.ndarray) -> np.ndarray:
+        """Indices of the N - s fastest workers for a realization T."""
+        order = np.argsort(times, kind="stable")
+        return np.sort(order[: self.n_workers - s])

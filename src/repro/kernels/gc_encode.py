@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: gradient-coding ENCODE.
+
+Worker-local hot spot of the paper's collaborative-training phase: form
+the coded gradient blocks  C = B_code @ G  where
+
+  G      : (K, D)   per-shard flat gradients held by this worker
+                    (K = s+1 cyclic shards; D = block width, huge)
+  B_code : (NB, K)  this worker's coding rows, one per redundancy level
+                    in flight (NB small, typically <= N)
+
+The op is memory-bound (arithmetic intensity ~= NB, small): one pass
+over G in HBM.  TPU mapping: tile the D axis into lane-aligned TILE_D
+columns resident in VMEM; the (NB, K) coefficient matrix is tiny and
+stays resident across the whole grid.  The MXU sees a skinny
+(NB, K) x (K, TILE_D) matmul per tile with fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_D = 512  # lanes: multiple of 128; 512 keeps VMEM use < 1 MiB
+
+
+def _encode_kernel(b_ref, g_ref, out_ref):
+    b = b_ref[...]  # (NB, K)
+    g = g_ref[...]  # (K, TILE_D)
+    acc = jax.lax.dot_general(
+        b, g, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def encode_pallas(b_code: jax.Array, g: jax.Array, *, tile_d: int = DEFAULT_TILE_D,
+                  interpret: bool = False) -> jax.Array:
+    """C = B_code @ G via pl.pallas_call.  Pads D to a tile multiple."""
+    nb, k = b_code.shape
+    k2, d = g.shape
+    assert k == k2, (b_code.shape, g.shape)
+    d_pad = -(-d // tile_d) * tile_d
+    if d_pad != d:
+        g = jnp.pad(g, ((0, 0), (0, d_pad - d)))
+    grid = (d_pad // tile_d,)
+    out = pl.pallas_call(
+        _encode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb, k), lambda i: (0, 0)),       # coefficients: resident
+            pl.BlockSpec((k, tile_d), lambda i: (0, i)),   # gradient tile
+        ],
+        out_specs=pl.BlockSpec((nb, tile_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nb, d_pad), g.dtype),
+        interpret=interpret,
+    )(b_code.astype(g.dtype), g)
+    return out[:, :d]

@@ -1,0 +1,41 @@
+"""Public kernel entry points.
+
+On TPU these dispatch to the Pallas kernels; elsewhere (this container
+is CPU) they run the kernels in interpret mode when ``interpret=True``
+is requested (tests do this to validate the kernel bodies) and otherwise
+fall back to the jnp oracle — same math, no per-call interpret overhead
+in the hot training loop.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .gc_decode import decode_pallas
+from .gc_encode import encode_pallas
+
+__all__ = ["encode", "decode", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def encode(b_code: jax.Array, g: jax.Array, *, tile_d: int = 512,
+           force_pallas: bool = False) -> jax.Array:
+    """Coded blocks C = B_code @ G.  b_code: (NB, K), g: (K, D)."""
+    if on_tpu():
+        return encode_pallas(b_code, g, tile_d=tile_d)
+    if force_pallas:
+        return encode_pallas(b_code, g, tile_d=tile_d, interpret=True)
+    return ref.encode_ref(b_code, g)
+
+
+def decode(a: jax.Array, c: jax.Array, *, tile_d: int = 512,
+           force_pallas: bool = False) -> jax.Array:
+    """Decoded gradient y = a @ C.  a: (N,), c: (N, D)."""
+    if on_tpu():
+        return decode_pallas(a, c, tile_d=tile_d)
+    if force_pallas:
+        return decode_pallas(a, c, tile_d=tile_d, interpret=True)
+    return ref.decode_ref(a, c)

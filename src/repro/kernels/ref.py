@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the gradient-coding kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def encode_ref(b_code: jax.Array, g: jax.Array) -> jax.Array:
+    """C = B_code @ G with fp32 accumulation (matches kernel numerics)."""
+    return jax.lax.dot_general(
+        b_code.astype(g.dtype), g, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(g.dtype)
+
+
+@jax.jit
+def decode_ref(a: jax.Array, c: jax.Array) -> jax.Array:
+    """y = a @ C with fp32 accumulation."""
+    return jax.lax.dot_general(
+        a.astype(c.dtype)[None, :], c, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[0].astype(c.dtype)

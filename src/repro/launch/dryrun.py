@@ -1,0 +1,366 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+against 512 placeholder host devices; record memory/cost/collective
+figures for the roofline (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--coded]
+
+Artifacts: one JSON per combination under --out (default
+artifacts/dryrun/), consumed by benchmarks/roofline.py.
+"""
+# The first two lines MUST run before any other import touches jax —
+# device count is locked at first backend init.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs, shape_supported
+from repro.core import ShiftedExponential
+from repro.dist.sharding import make_rules, pspec_for_axes, use_mesh
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import HW, make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models.model import train_loss
+from repro.models.params import AxesLeaf, count_params
+from repro.serve.engine import make_serve_step
+from repro.train.coded import build_plan, make_coded_grad_fn
+from repro.train.state import abstract_train_state, state_shardings
+from repro.train.trainer import TrainConfig, make_coded_train_step, make_train_step
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output-shape bytes per collective op kind from post-SPMD HLO."""
+    out = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.lstrip()
+        if not (ls.startswith("%") or ls.startswith("ROOT")):
+            continue
+        for kind in _COLLECTIVES:
+            token = f" {kind}("
+            if token not in line:
+                continue
+            # left of the op keyword: "%name = <shape> kind(...)"
+            lhs = line.split(token)[0]
+            if "=" not in lhs:
+                continue
+            shape_part = lhs.split("=", 1)[1]
+            nbytes = 0
+            for dt, dims in _SHAPE_RE.findall(shape_part):
+                if dt not in _DTYPE_BYTES:
+                    continue
+                n = 1
+                if dims:
+                    for d in dims.split(","):
+                        n *= int(d)
+                nbytes += n * _DTYPE_BYTES[dt]
+            out[kind]["bytes"] += nbytes
+            out[kind]["count"] += 1
+            break
+    return out
+
+
+def _shardings_for(mesh, tree_shapes, tree_axes):
+    from jax.sharding import NamedSharding
+
+    def one(shape_struct, axes):
+        if axes is None:
+            return NamedSharding(mesh, pspec_for_axes((), ()))
+        return NamedSharding(mesh, pspec_for_axes(tuple(axes), shape_struct.shape))
+
+    return jax.tree.map(one, tree_shapes, tree_axes,
+                        is_leaf=lambda x: x is None)
+
+
+def build_case(cfg, shape, mesh, *, coded: bool, n_workers: int,
+               coded_opts: dict | None = None):
+    """Returns (fn, arg_shapes tuple, arg_shardings tuple, extra_info)."""
+    state_shapes, state_axes = abstract_train_state(cfg)
+    extra = {"params_b": count_params(state_shapes.params)}
+
+    if shape.kind == "train" and coded:
+        dist = ShiftedExponential(mu=1e-3, t0=50.0)
+        s_cap = (coded_opts or {}).pop("s_cap", None) if coded_opts else None
+        plan = build_plan(state_shapes.params, dist, n_workers, solver="xf",
+                          s_cap=s_cap)
+        extra.update(s_max=plan.s_max, n_levels=len(plan.used_levels),
+                     x=[int(v) for v in plan.x])
+        specs, axes = input_specs(cfg, shape, coded=True, n_workers=n_workers,
+                                  s_max=plan.s_max)
+        specs["dec_w"] = jax.ShapeDtypeStruct((len(plan.used_levels), n_workers),
+                                              jnp.float32)
+        opts = dict(coded_opts or {})
+        if opts.get("grad_dtype") == "bf16":
+            opts["grad_dtype"] = jnp.bfloat16
+        step = make_coded_train_step(cfg, TrainConfig(), plan, mesh=mesh,
+                                     mode="spmd",
+                                     param_shapes=state_shapes.params,
+                                     param_axes=state_axes.params, **opts)
+        args = [state_shapes, specs["worker_batches"], specs["dec_w"]]
+        shardings = [
+            state_shardings(mesh, state_shapes, state_axes),
+            _shardings_for(mesh, specs["worker_batches"], axes["worker_batches"]),
+            _shardings_for(mesh, specs["dec_w"], axes["dec_w"]),
+        ]
+        if cfg.vision is not None or cfg.encoder is not None:
+            k = plan.s_max + 1
+            rows = shape.global_batch // n_workers
+            if cfg.vision is not None:
+                aux_shape = (n_workers, k, rows, cfg.vision.n_patches,
+                             cfg.vision.d_vision)
+            else:
+                aux_shape = (n_workers, k, rows, cfg.encoder.n_frames, cfg.d_model)
+            aux_spec = jax.ShapeDtypeStruct(aux_shape, jnp.float32)
+            aux_ax = AxesLeaf(("workers", None, "batch", None, None))
+            fn = lambda state, wb, dw, aux: step(state, wb, dw, aux)
+            args.append(aux_spec)
+            shardings.append(_shardings_for(mesh, aux_spec, aux_ax))
+        else:
+            fn = lambda state, wb, dw: step(state, wb, dw)
+        return fn, tuple(args), tuple(shardings), extra
+
+    if shape.kind == "train":
+        specs, axes = input_specs(cfg, shape)
+        step = make_train_step(cfg, TrainConfig())
+        batch_shapes = {k: v for k, v in specs.items()}
+        batch_axes = {k: axes[k] for k in specs}
+        fn = lambda state, batch: step(state, batch)
+        args = (state_shapes, batch_shapes)
+        shardings = (
+            state_shardings(mesh, state_shapes, state_axes),
+            jax.tree.map(lambda s, a: _shardings_for(mesh, s, a),
+                         batch_shapes, batch_axes),
+        )
+        return fn, args, shardings, extra
+
+    if shape.kind == "prefill":
+        specs, axes = input_specs(cfg, shape)
+
+        def fn(params, tokens, aux_inputs=None):
+            from repro.models.model import prefill
+
+            logits, caches = prefill(cfg, params, tokens,
+                                     aux_inputs=aux_inputs,
+                                     target_len=shape.seq_len + 1)
+            return logits, caches
+
+        args = [state_shapes.params, specs["tokens"]]
+        shardings = [
+            state_shardings(mesh, state_shapes.params, state_axes.params),
+            _shardings_for(mesh, specs["tokens"], axes["tokens"]),
+        ]
+        if "aux_inputs" in specs:
+            args.append(specs["aux_inputs"])
+            shardings.append(_shardings_for(mesh, specs["aux_inputs"],
+                                            axes["aux_inputs"]))
+        return fn, tuple(args), tuple(shardings), extra
+
+    # decode
+    specs, axes = input_specs(cfg, shape)
+    serve = make_serve_step(cfg)
+
+    def fn(params, caches, token, aux_inputs=None):
+        return serve(params, caches, token, aux_inputs=aux_inputs)
+
+    args = [state_shapes.params, specs["caches"], specs["token"]]
+    shardings = [
+        state_shardings(mesh, state_shapes.params, state_axes.params),
+        _shardings_for(mesh, specs["caches"], axes["caches"]),
+        _shardings_for(mesh, specs["token"], axes["token"]),
+    ]
+    if "aux_inputs" in specs:
+        args.append(specs["aux_inputs"])
+        shardings.append(_shardings_for(mesh, specs["aux_inputs"], axes["aux_inputs"]))
+    return fn, tuple(args), tuple(shardings), extra
+
+
+def run_case(arch: str, shape_name: str, mesh_kind: str, *, coded: bool,
+             out_dir: str, skip_existing: bool = True,
+             mesh_shape: tuple | None = None, tag: str = "",
+             cfg_overrides: dict | None = None,
+             coded_opts: dict | None = None) -> dict:
+    step_tag = "train_coded" if coded else None
+    shape = INPUT_SHAPES[shape_name]
+    if step_tag is None:
+        step_tag = {"train": "train", "prefill": "prefill", "decode": "serve"}[shape.kind]
+    name = f"{arch}__{shape_name}__{mesh_kind}__{step_tag}".replace("/", "_")
+    if tag:
+        name += f"__{tag}"
+    path = os.path.join(out_dir, name + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    ok, why = shape_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "step": step_tag,
+           "status": "skip", "reason": why, "tag": tag}
+    if not ok:
+        _dump(path, rec)
+        return rec
+
+    multi = mesh_kind == "multi"
+    if mesh_shape is not None:
+        axes = ("pod", "data", "model") if multi else ("data", "model")
+        shp = ((2,) + tuple(mesh_shape)) if multi else tuple(mesh_shape)
+        mesh = jax.make_mesh(shp, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        rec["mesh_shape"] = list(shp)
+    else:
+        mesh = make_production_mesh(multi_pod=multi)
+    n_chips = 512 if multi else 256
+    try:
+        with use_mesh(mesh, make_rules(cfg)):
+            fn, args, shardings, extra = build_case(
+                cfg, shape, mesh, coded=coded, n_workers=mesh.shape["data"],
+                coded_opts=coded_opts)
+            t0 = time.time()
+            jitted = jax.jit(fn, in_shardings=shardings)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        mem_rec = {}
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                mem_rec[f] = int(v)
+        xla_cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        # trip-count-aware analysis (XLA's cost_analysis counts scan
+        # bodies once — see launch/hlo_analysis.py)
+        hc = analyze_hlo(hlo)
+        flops = hc.flops
+        bytes_accessed = hc.bytes
+        coll = {k: {"bytes": hc.collective_bytes[k],
+                    "count": hc.collective_counts[k]}
+                for k in hc.collective_bytes}
+        coll_bytes = hc.total_collective_bytes
+
+        rec.update(
+            status="ok", n_chips=n_chips,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            per_device_flops=flops, per_device_bytes=bytes_accessed,
+            xla_flops_once=float(xla_cost.get("flops", 0.0)),
+            xla_bytes_once=float(xla_cost.get("bytes accessed", 0.0)),
+            collectives=coll, collective_bytes=coll_bytes,
+            while_trips=hc.while_trips,
+            memory=mem_rec, hlo_lines=hlo.count("\n"),
+            compute_s=flops / HW.PEAK_FLOPS_BF16,
+            memory_s=bytes_accessed / HW.HBM_BW,
+            collective_s=coll_bytes / HW.ICI_BW,
+            **extra,
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    _dump(path, rec)
+    return rec
+
+
+def _dump(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--coded", action="store_true",
+                    help="lower the coded train step (train shapes only)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-skip", action="store_true")
+    ap.add_argument("--tag", default="", help="artifact filename suffix for perf variants")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override per-pod (data,model), e.g. '32x8'")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (e.g. remat=dots)")
+    ap.add_argument("--coded-reduce", default="psum",
+                    choices=["psum", "psum_scatter"])
+    ap.add_argument("--coded-bf16", action="store_true",
+                    help="bf16 coded blocks before the reduction")
+    ap.add_argument("--coded-scap", type=int, default=None,
+                    help="cap the top redundancy level (H3 co-design)")
+    args = ap.parse_args()
+
+    mesh_shape = None
+    if args.mesh_shape:
+        mesh_shape = tuple(int(v) for v in args.mesh_shape.split("x"))
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("true", "false"):
+            v = v == "true"
+        overrides[k] = v
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    archs = [a for a in archs if a != "gc-lm-110m" or args.arch == "gc-lm-110m"]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            if args.coded and INPUT_SHAPES[shape].kind != "train":
+                continue
+            for mesh_kind in meshes:
+                t0 = time.time()
+                coded_opts = None
+                if args.coded:
+                    coded_opts = {"reduce_mode": args.coded_reduce}
+                    if args.coded_bf16:
+                        coded_opts["grad_dtype"] = "bf16"
+                    if args.coded_scap is not None:
+                        coded_opts["s_cap"] = args.coded_scap
+                rec = run_case(arch, shape, mesh_kind, coded=args.coded,
+                               out_dir=args.out, skip_existing=not args.no_skip,
+                               mesh_shape=mesh_shape, tag=args.tag,
+                               cfg_overrides=overrides or None,
+                               coded_opts=coded_opts)
+                status = rec["status"]
+                msg = rec.get("reason") or rec.get("error", "")
+                print(f"[{status:4s}] {arch:22s} {shape:12s} {mesh_kind:6s} "
+                      f"{rec.get('step','')} ({time.time()-t0:.0f}s) {msg[:120]}",
+                      flush=True)
+                results.append(rec)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_fail} fail")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

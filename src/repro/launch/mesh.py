@@ -1,0 +1,40 @@
+"""Production meshes.  Functions, not module constants — importing this
+module never touches jax device state (the dry-run must set XLA_FLAGS
+before first jax init).
+
+Production target: TPU v5e, 256 chips/pod.
+  single pod : (16, 16)     axes ("data", "model")
+  multi pod  : (2, 16, 16)  axes ("pod", "data", "model")
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+class HW:
+    """TPU v5e hardware constants for the roofline (per chip)."""
+
+    PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+    HBM_BW = 819e9            # B/s
+    ICI_BW = 50e9             # B/s per link
+    HBM_BYTES = 16 * 2**30
+    CHIPS_PER_POD = 256
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Mesh over however many devices the local runtime exposes."""
+    return _mk((data, model), ("data", "model"))

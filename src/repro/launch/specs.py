@@ -1,0 +1,80 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, per
+(arch, input-shape, step kind) — weak-type-correct, shardable, zero
+allocation.  The dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.model import init_decode_caches
+from repro.models.stack import stack_cache_axes
+from repro.models.params import AxesLeaf
+
+__all__ = ["input_specs", "input_axes", "step_kind"]
+
+
+def step_kind(shape: InputShape) -> str:
+    return {"train": "train", "prefill": "prefill", "decode": "serve"}[shape.kind]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _aux_specs(cfg: ModelConfig, batch: int):
+    if cfg.vision is not None:
+        return _sds((batch, cfg.vision.n_patches, cfg.vision.d_vision), jnp.float32), \
+               AxesLeaf(("batch", "patches", None))
+    if cfg.encoder is not None:
+        return _sds((batch, cfg.encoder.n_frames, cfg.d_model), jnp.float32), \
+               AxesLeaf(("batch", "frames", "embed"))
+    return None, None
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *, coded: bool = False,
+                n_workers: int = 16, s_max: int = 0):
+    """Returns (specs dict, axes dict) for the step's data inputs."""
+    b, s = shape.global_batch, shape.seq_len
+    aux, aux_ax = _aux_specs(cfg, b)
+    if shape.kind == "train":
+        if coded:
+            k = s_max + 1
+            rows = b // n_workers
+            specs = {
+                "worker_batches": _sds((n_workers, k, rows, s + 1), jnp.int32),
+                "dec_w": None,  # filled by caller (needs plan's n_used)
+            }
+            axes = {
+                "worker_batches": AxesLeaf(("workers", None, "batch", None)),
+                "dec_w": AxesLeaf((None, None)),
+            }
+        else:
+            specs = {"tokens": _sds((b, s + 1), jnp.int32)}
+            axes = {"tokens": AxesLeaf(("batch", None))}
+        if aux is not None:
+            specs["aux_inputs"] = aux
+            axes["aux_inputs"] = aux_ax
+        return specs, axes
+
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((b, s), jnp.int32)}
+        axes = {"tokens": AxesLeaf(("batch", None))}
+        if aux is not None:
+            specs["aux_inputs"] = aux
+            axes["aux_inputs"] = aux_ax
+        return specs, axes
+
+    # decode: one new token against a seq_len cache
+    cache_shapes = jax.eval_shape(
+        lambda: init_decode_caches(cfg, b, s, dtype=jnp.bfloat16)
+    )
+    cache_axes = stack_cache_axes(cfg)
+    specs = {"caches": cache_shapes, "token": _sds((b, 1), jnp.int32)}
+    axes = {"caches": cache_axes, "token": AxesLeaf(("batch", None))}
+    if aux is not None:
+        specs["aux_inputs"] = aux
+        axes["aux_inputs"] = aux_ax
+    return specs, axes

@@ -1,0 +1,312 @@
+"""Attention: GQA/MQA with RoPE, sliding windows, softcaps, QK-norm, MLA.
+
+Memory discipline: training/prefill attention never materializes the
+full (S, S) score matrix.  ``chunked_attention`` runs an online-softmax
+scan over KV chunks (flash-attention schedule in pure JAX, the TPU-
+idiomatic adaptation of the usual fused kernel); windowed layers use
+``local_attention`` which slices a fixed KV span per query chunk so the
+cost is O(S * window) rather than O(S^2).
+
+Decode: one query token against a KV cache.  Global layers use a
+(B, S, K, Dh) cache; windowed layers a ring buffer of capacity
+min(window, S) written at ``pos % C`` (RoPE is applied before caching,
+so validity masking needs no absolute-position bookkeeping).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from .layers import rope, softcap
+from .params import Param, dense_init, zeros_init
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- params
+def init_attention(cfg, key, spec):
+    h, kv, dh, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": dense_init(ks[1], (d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": dense_init(ks[2], (d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": dense_init(ks[3], (h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros_init((h, dh), ("heads", "head_dim"))
+        p["bk"] = zeros_init((kv, dh), ("kv_heads", "head_dim"))
+        p["bv"] = zeros_init((kv, dh), ("kv_heads", "head_dim"))
+    if cfg.qk_norm:
+        p["q_norm"] = zeros_init((dh,), ("head_dim",))
+        p["k_norm"] = zeros_init((dh,), ("head_dim",))
+    return p
+
+
+def init_cross_attention(cfg, key, d_source: Optional[int] = None):
+    h, kv, dh, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    ds = d_source or d
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], (d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": dense_init(ks[1], (ds, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": dense_init(ks[2], (ds, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": dense_init(ks[3], (h, dh, d), ("heads", "head_dim", "embed")),
+        "gate": zeros_init((), ()),  # llama-3.2 style tanh gate, starts closed
+    }
+
+
+# ---------------------------------------------------------------- helpers
+def _rms_head(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return ((x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)) * (1.0 + scale)).astype(x.dtype)
+
+
+def _project_qkv(cfg, p, x, positions, rope_base):
+    """x: (B,S,d) -> q:(B,S,H,Dh), k,v:(B,S,K,Dh) with bias/qk-norm/rope."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dkx->bskx", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dkx->bskx", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if "q_norm" in p:
+        q = _rms_head(q, p["q_norm"].astype(jnp.float32))
+        k = _rms_head(k, p["k_norm"].astype(jnp.float32))
+    if rope_base:
+        q = rope(q, positions, rope_base)
+        k = rope(k, positions, rope_base)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _mask_bias(mask):
+    return jnp.where(mask, 0.0, NEG_INF)
+
+
+def _sdpa(q, k, v, bias, cap: float, scale: float):
+    """q: (B,Sq,K,G,Dh), k/v: (B,Skv,K,Dh), bias: (B|1,Sq,Skv) or (Sq,Skv)."""
+    s = jnp.einsum("bqkgd,bckd->bkgqc", q, k) * scale
+    s = softcap(s, cap)
+    while bias.ndim < 3:  # broadcast bias over (batch, kv_head, group)
+        bias = bias[None]
+    s = s.astype(jnp.float32) + bias[:, None, None, :, :]
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqc,bckd->bqkgd", w, v)
+
+
+# ------------------------------------------- training / prefill attention
+def chunked_attention(cfg, q, k, v, *, causal=True, cap=0.0, q_offset=0):
+    """Online-softmax over KV chunks; O(S * chunk) live memory.
+
+    q: (B,S,H,Dh); k,v: (B,Skv,K,Dh).  Returns (B,S,H,Dh).
+    """
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    chunk = min(cfg.attn_chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qg = q.reshape(b, sq, kvh, g, dh)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    q_pos = q_offset + jnp.arange(sq)
+
+    kc = k.reshape(b, n_chunks, chunk, kvh, dh).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, chunk, kvh, dh).swapaxes(0, 1)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        idx, k_i, v_i = xs
+        kv_pos = idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k_i) * scale
+        s = softcap(s, cap).astype(jnp.float32)
+        valid = kv_pos[None, :] < skv
+        if causal:
+            valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+        s = s + _mask_bias(valid)[None, None, None]
+        m_i = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_i[..., None])
+        if cfg.attn_probs_bf16:
+            p = p.astype(jnp.bfloat16)
+        alpha = jnp.exp(m - m_i)
+        l_i = l * alpha + p.sum(axis=-1, dtype=jnp.float32)
+        acc_i = acc * alpha[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p.astype(q.dtype), v_i
+        ).astype(jnp.float32)
+        return (m_i, l_i, acc_i), None
+
+    if cfg.attn_chunk_remat:
+        # flash-attention backward structure: recompute the chunk scores
+        # instead of stacking (n_chunks, B, S, chunk) prob residuals.
+        body = jax.checkpoint(body)
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, kvh, g, sq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def local_attention(cfg, q, k, v, *, window: int, cap=0.0):
+    """Causal sliding-window attention, O(S * window).
+
+    Processes queries in chunks of cq; each chunk attends to a statically
+    sized KV span [chunk_start - window_pad, chunk_end) sliced from a
+    padded KV tensor, with exact per-position masking inside the span.
+    """
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    cq = min(cfg.attn_chunk, sq)
+    n_chunks = -(-sq // cq)
+    pad_q = n_chunks * cq - sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    # KV span per q-chunk: window history + the chunk itself.
+    w_pad = -(-window // cq) * cq  # history length, multiple of cq
+    span = w_pad + cq
+    k_p = jnp.pad(k, ((0, 0), (w_pad, pad_q), (0, 0), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (w_pad, pad_q), (0, 0), (0, 0)))
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    qg = q.reshape(b, n_chunks, cq, kvh, g, dh)
+
+    def chunk_fn(i, q_i):
+        # q_i: (b, cq, kvh, g, dh); KV span starts at i*cq in padded coords.
+        k_i = jax.lax.dynamic_slice_in_dim(k_p, i * cq, span, axis=1)
+        v_i = jax.lax.dynamic_slice_in_dim(v_p, i * cq, span, axis=1)
+        q_pos = i * cq + jnp.arange(cq)  # absolute
+        kv_pos = i * cq + jnp.arange(span) - w_pad
+        valid = (
+            (kv_pos[None, :] <= q_pos[:, None])
+            & (kv_pos[None, :] > q_pos[:, None] - window)
+            & (kv_pos[None, :] >= 0)
+            & (kv_pos[None, :] < sq)
+        )
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q_i, k_i) * scale
+        s = softcap(s, cap).astype(jnp.float32) + _mask_bias(valid)[None, None, None]
+        w_att = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        return jnp.einsum("bkgqc,bckd->bqkgd", w_att, v_i)
+
+    out = jax.lax.map(lambda args: chunk_fn(args[0], args[1]), (jnp.arange(n_chunks), qg.swapaxes(0, 1)))
+    out = out.swapaxes(0, 1).reshape(b, n_chunks * cq, h, dh)
+    return out[:, :sq].astype(q.dtype)
+
+
+def cross_attention(cfg, p, x, source):
+    """Bidirectional attention of x over a (B, Ssrc, d_src) source."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"].astype(dt))
+    k = jnp.einsum("bcd,dkx->bckx", source.astype(dt), p["wk"].astype(dt))
+    v = jnp.einsum("bcd,dkx->bckx", source.astype(dt), p["wv"].astype(dt))
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, sq, kvh, h // kvh, dh)
+    bias = jnp.zeros((sq, k.shape[1]), jnp.float32)
+    out = _sdpa(qg, k, v, bias, 0.0, 1.0 / np.sqrt(cfg.head_dim))
+    out = out.reshape(b, sq, h, dh)
+    y = jnp.einsum("bshx,hxd->bsd", out, p["wo"].astype(dt))
+    return jnp.tanh(p["gate"].astype(jnp.float32)).astype(dt) * y
+
+
+# ------------------------------------------------------------- full layer
+def attn_forward(cfg, p, x, spec, *, positions=None, mode="train", cache=None,
+                 target_len: int = 0):
+    """Self-attention sublayer.  Returns (out, new_cache)."""
+    b, s, d = x.shape
+    window = spec.window
+    rope_base = cfg.rope_base
+    if window is not None and cfg.rope_base_local:
+        rope_base = cfg.rope_base_local
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    if mode in ("train", "prefill"):
+        q, k, v = _project_qkv(cfg, p, x, positions, rope_base)
+        if window is not None and window < s:
+            out = local_attention(cfg, q, k, v, window=window, cap=cfg.attn_softcap)
+        else:
+            out = chunked_attention(cfg, q, k, v, causal=True, cap=cfg.attn_softcap)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = prefill_cache(cfg, spec, k, v, s, target_len)
+        y = jnp.einsum("bshx,hxd->bsd", out, p["wo"].astype(x.dtype))
+        return shard(y, "batch", "seq", "embed"), new_cache
+
+    # ---- decode: x is (B, 1, d); cache is {"k","v","pos"}.
+    assert cache is not None
+    pos = cache["pos"]  # scalar int32: number of tokens already cached
+    q, k, v = _project_qkv(cfg, p, x, pos[None, None], rope_base)
+    cap_len = cache["k"].shape[1]
+    slot = jnp.mod(pos, cap_len)
+    k_cache = cache["k"].at[:, slot].set(k[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[:, slot].set(v[:, 0].astype(cache["v"].dtype))
+    j = jnp.arange(cap_len)
+    valid = (j <= pos) | (pos >= cap_len)
+    kvh, dh = k.shape[2], k.shape[3]
+    qg = q.reshape(b, 1, kvh, cfg.n_heads // kvh, dh)
+    s_att = jnp.einsum("bqkgd,bckd->bkgqc", qg, k_cache.astype(q.dtype)) / np.sqrt(cfg.head_dim)
+    s_att = softcap(s_att, cfg.attn_softcap).astype(jnp.float32)
+    s_att = s_att + _mask_bias(valid)[None, None, None, None, :]
+    w_att = jax.nn.softmax(s_att, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqc,bckd->bqkgd", w_att, v_cache.astype(q.dtype))
+    out = out.reshape(b, 1, cfg.n_heads, dh)
+    y = jnp.einsum("bshx,hxd->bsd", out, p["wo"].astype(x.dtype))
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos + 1}
+    return shard(y, "batch", "seq", "embed"), new_cache
+
+
+def init_attn_cache(cfg, spec, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    cap = seq_len if spec.window is None else min(spec.window, seq_len)
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cap, kv, dh), dtype),
+        "v": jnp.zeros((batch, cap, kv, dh), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def attn_cache_axes(spec):
+    return {
+        "k": ("batch", None, "kv_heads", None),
+        "v": ("batch", None, "kv_heads", None),
+        "pos": (),
+    }
+
+
+def prefill_cache(cfg, spec, k, v, seq_len: int, target_len: int = 0):
+    """Decode cache from prefill K/V, with capacity for future tokens.
+
+    Capacity = target_len (global) or min(window, target_len) (local).
+    If the prefill exceeds capacity, keep the last `cap` tokens and
+    ring-align them (position p lives at slot p % cap); otherwise pad —
+    positions p < seq_len already sit at slots p.
+    """
+    target_len = max(target_len, seq_len + 1)
+    cap = target_len if spec.window is None else min(spec.window, target_len)
+    if seq_len >= cap:
+        k = k[:, -cap:]
+        v = v[:, -cap:]
+        shift = (seq_len - cap) % cap
+        k = jnp.roll(k, shift, axis=1)
+        v = jnp.roll(v, shift, axis=1)
+    else:
+        pad = ((0, 0), (0, cap - seq_len), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    return {
+        "k": k,
+        "v": v,
+        "pos": jnp.asarray(seq_len, jnp.int32),
+    }

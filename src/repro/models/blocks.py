@@ -1,0 +1,143 @@
+"""Decoder layer = pre-norm mixer + (optional post-norm) + FFN/MoE sublayer.
+
+``init_layer`` / ``apply_layer`` / ``init_layer_cache`` dispatch on
+LayerSpec.mixer: 'attn' | 'mla' | 'mamba' | 'mlstm' | 'slstm' |
+'cross_attn'.  apply_layer returns (x, new_cache, aux_loss).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from . import xlstm as xlstm_mod
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm
+
+
+def _xlstm_spec(cfg, mixer: str):
+    """XLSTMSpec for this mixer kind (all blocks of a kind share a spec)."""
+    from repro.configs.base import XLSTMSpec
+
+    for s in cfg.xlstm_blocks:
+        if s.kind == mixer:
+            return s
+    return XLSTMSpec(kind=mixer)
+
+
+def init_layer(cfg, key, spec, layer_idx: int = 0):
+    ks = jax.random.split(key, 4)
+    p = {"norm_mix": init_norm(cfg, cfg.d_model)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn.init_attention(cfg, ks[0], spec)
+    elif spec.mixer == "cross_attn":
+        d_src = cfg.d_model  # projector output (stub embeds are pre-projector)
+        p["mixer"] = attn.init_cross_attention(cfg, ks[0], d_src)
+    elif spec.mixer == "mla":
+        p["mixer"] = mla_mod.init_mla(cfg, ks[0], spec)
+    elif spec.mixer == "mamba":
+        p["mixer"] = ssm_mod.init_mamba(cfg, ks[0], spec)
+    elif spec.mixer == "mlstm":
+        p["mixer"] = xlstm_mod.init_mlstm(cfg, ks[0], spec, _xlstm_spec(cfg, "mlstm"))
+    elif spec.mixer == "slstm":
+        p["mixer"] = xlstm_mod.init_slstm(cfg, ks[0], spec, _xlstm_spec(cfg, "slstm"))
+    else:
+        raise ValueError(f"unknown mixer {spec.mixer}")
+
+    if spec.cross_source:
+        p["cross"] = attn.init_cross_attention(cfg, ks[2])
+        p["norm_cross"] = init_norm(cfg, cfg.d_model)
+    if cfg.post_norm:
+        p["norm_mix_post"] = init_norm(cfg, cfg.d_model)
+    if spec.use_ffn and (cfg.d_ff or spec.moe is not None):
+        p["norm_ffn"] = init_norm(cfg, cfg.d_model)
+        if spec.moe is not None:
+            p["ffn"] = moe_mod.init_moe(cfg, ks[1], spec)
+        else:
+            p["ffn"] = init_mlp(cfg, ks[1], cfg.d_model, cfg.d_ff)
+        if cfg.post_norm:
+            p["norm_ffn_post"] = init_norm(cfg, cfg.d_model)
+    return p
+
+
+def apply_layer(cfg, p, x, spec, *, xlstm_spec=None, positions=None, mode="train",
+                cache=None, source=None, target_len: int = 0):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["norm_mix"], x)
+
+    if spec.mixer == "attn":
+        h, new_cache = attn.attn_forward(cfg, p["mixer"], h, spec, positions=positions,
+                                         mode=mode, cache=cache, target_len=target_len)
+    elif spec.mixer == "cross_attn":
+        h = attn.cross_attention(cfg, p["mixer"], h, source)
+        new_cache = cache  # static wrt decoded tokens
+    elif spec.mixer == "mla":
+        h, new_cache = mla_mod.mla_forward(cfg, p["mixer"], h, spec, positions=positions,
+                                           mode=mode, cache=cache, target_len=target_len)
+    elif spec.mixer == "mamba":
+        h, new_cache = ssm_mod.mamba_forward(cfg, p["mixer"], h, spec, positions=positions,
+                                             mode=mode, cache=cache)
+    elif spec.mixer == "mlstm":
+        h, new_cache = xlstm_mod.mlstm_forward(cfg, p["mixer"], h, spec, _xlstm_spec(cfg, "mlstm"),
+                                               positions=positions, mode=mode, cache=cache)
+    elif spec.mixer == "slstm":
+        h, new_cache = xlstm_mod.slstm_forward(cfg, p["mixer"], h, spec, _xlstm_spec(cfg, "slstm"),
+                                               positions=positions, mode=mode, cache=cache)
+    else:
+        raise ValueError(spec.mixer)
+
+    if cfg.post_norm:
+        h = apply_norm(cfg, p["norm_mix_post"], h)
+    x = x + h
+
+    if spec.cross_source:
+        h = apply_norm(cfg, p["norm_cross"], x)
+        x = x + attn.cross_attention(cfg, p["cross"], h, source)
+
+    if "ffn" in p:
+        h = apply_norm(cfg, p["norm_ffn"], x)
+        if spec.moe is not None:
+            h, moe_aux = moe_mod.apply_moe(cfg, p["ffn"], h, spec)
+            aux = aux + moe_aux
+        else:
+            h = apply_mlp(cfg, p["ffn"], h)
+        if cfg.post_norm:
+            h = apply_norm(cfg, p["norm_ffn_post"], h)
+        x = x + h
+    return x, new_cache, aux
+
+
+def init_layer_cache(cfg, spec, batch: int, seq_len: int, layer_idx: int = 0,
+                     dtype=jnp.bfloat16, source_len: int = 0):
+    if spec.mixer == "attn":
+        return attn.init_attn_cache(cfg, spec, batch, seq_len, dtype)
+    if spec.mixer == "mla":
+        return mla_mod.init_mla_cache(cfg, spec, batch, seq_len, dtype)
+    if spec.mixer == "mamba":
+        return ssm_mod.init_mamba_cache(cfg, spec, batch, seq_len, dtype)
+    if spec.mixer == "mlstm":
+        return xlstm_mod.init_mlstm_cache(cfg, spec, _xlstm_spec(cfg, "mlstm"), batch, seq_len, dtype)
+    if spec.mixer == "slstm":
+        return xlstm_mod.init_slstm_cache(cfg, spec, _xlstm_spec(cfg, "slstm"), batch, seq_len, dtype)
+    if spec.mixer == "cross_attn":
+        return None  # source K/V recomputed from the (static) source embeds
+    raise ValueError(spec.mixer)
+
+
+def layer_cache_axes(cfg, spec):
+    if spec.mixer == "attn":
+        return attn.attn_cache_axes(spec)
+    if spec.mixer == "mla":
+        return mla_mod.mla_cache_axes(spec)
+    if spec.mixer == "mamba":
+        return ssm_mod.mamba_cache_axes(spec)
+    if spec.mixer == "mlstm":
+        return xlstm_mod.mlstm_cache_axes(spec)
+    if spec.mixer == "slstm":
+        return xlstm_mod.slstm_cache_axes(spec)
+    if spec.mixer == "cross_attn":
+        return None
+    raise ValueError(spec.mixer)

@@ -1,0 +1,124 @@
+"""Shared layer primitives: norms, activations, RoPE, MLP, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from .params import Param, dense_init, ones_init, zeros_init
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "init_norm",
+    "apply_norm",
+    "rope",
+    "init_mlp",
+    "apply_mlp",
+    "init_embedding",
+    "softcap",
+]
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def init_norm(cfg, dim: int, axes=("embed",)):
+    if cfg.norm == "layer":
+        return {
+            "scale": ones_init((dim,), axes),
+            "bias": zeros_init((dim,), axes),
+        }
+    # rms norm stores (scale - 1) a la gemma: zeros init.
+    return {"scale": zeros_init((dim,), axes)}
+
+
+def apply_norm(cfg, p, x):
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ----------------------------------------------------------------- RoPE
+def rope(x, positions, base: float = 10_000.0):
+    """Rotary embedding.  x: (..., S, H, D) or (..., S, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = base ** (-np.arange(0, half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    if x.ndim == ang.ndim + 1:  # head axis present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP
+def init_mlp(cfg, key, d_in: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.activation in ("silu", "gelu")
+    p = {
+        "wi": dense_init(k1, (d_in, d_ff), ("embed", "mlp")),
+        "wo": dense_init(k3, (d_ff, d_in), ("mlp", "embed")),
+    }
+    if gated:
+        p["wg"] = dense_init(k2, (d_in, d_ff), ("embed", "mlp"))
+    return p
+
+
+def _act(cfg, x):
+    if cfg.activation in ("silu",):
+        return jax.nn.silu(x)
+    return jax.nn.gelu(x, approximate=True)
+
+
+def apply_mlp(cfg, p, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype))
+    if "wg" in p:
+        h = _act(cfg, jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))) * h
+    else:
+        h = _act(cfg, h)
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+
+
+# ------------------------------------------------------------ embeddings
+def init_embedding(cfg, key):
+    k1, k2 = jax.random.split(key)
+    p = {"tok": dense_init(k1, (cfg.vocab, cfg.d_model), ("vocab", "embed"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return p
+
+
+def embed_tokens(cfg, p, tokens):
+    x = jnp.take(p["tok"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype=x.dtype)
+    return x
+
+
+def unembed(cfg, p, x):
+    w = p["unembed"] if "unembed" in p else p["tok"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    logits = softcap(logits, cfg.final_softcap)
+    return shard(logits, "batch", "seq", "vocab")

@@ -1,0 +1,167 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3, arXiv:2412.19437 §2.1).
+
+Queries: low-rank (q_lora_rank) down/up projection, split into a nope
+part and a rope part.  Keys/values: a shared kv_lora_rank latent c_kv
+plus a single decoupled rope key k_r shared across heads.  The decode
+cache stores only (c_kv, k_r) — (512 + 64) floats/token for V3 — and
+decode uses the *absorbed* form: W_uk is folded into the query so scores
+are taken directly against the latent, never re-expanding per-head keys
+for the whole cache (the memory-bound win MLA exists for).
+
+Train/prefill use the naive expansion (per-head k/v materialized per
+chunk inside the online-softmax scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from .layers import rope
+from .params import dense_init, zeros_init
+
+NEG_INF = -1e30
+
+
+def init_mla(cfg, key, spec):
+    m = cfg.mla
+    h, d = cfg.n_heads, cfg.d_model
+    ks = jax.random.split(key, 8)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), ("embed", "lora")),
+        "q_a_norm": zeros_init((m.q_lora_rank,), ("lora",)),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h, qk_dim), ("lora", "heads", "head_dim")),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank), ("embed", "lora")),
+        "kv_a_norm": zeros_init((m.kv_lora_rank,), ("lora",)),
+        "wk_rope": dense_init(ks[3], (d, m.qk_rope_head_dim), ("embed", "head_dim")),
+        "wk_b": dense_init(ks[4], (m.kv_lora_rank, h, m.qk_nope_head_dim), ("lora", "heads", "head_dim")),
+        "wv_b": dense_init(ks[5], (m.kv_lora_rank, h, m.v_head_dim), ("lora", "heads", "head_dim")),
+        "wo": dense_init(ks[6], (h, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return ((x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)) * (1.0 + scale)).astype(x.dtype)
+
+
+def _queries(cfg, p, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    cq = _rms(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(dt)), p["q_a_norm"].astype(jnp.float32))
+    q = jnp.einsum("bsr,rhx->bshx", cq, p["wq_b"].astype(dt))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = rope(q[..., m.qk_nope_head_dim :], positions, cfg.rope_base)
+    return q_nope, q_rope
+
+
+def _latents(cfg, p, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    c_kv = _rms(jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(dt)), p["kv_a_norm"].astype(jnp.float32))
+    k_r = rope(jnp.einsum("bsd,dx->bsx", x, p["wk_rope"].astype(dt)), positions, cfg.rope_base)
+    return c_kv, k_r
+
+
+def mla_forward(cfg, p, x, spec, *, positions=None, mode="train", cache=None,
+                target_len: int = 0):
+    m = cfg.mla
+    b, s, d = x.shape
+    dt = x.dtype
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+
+    if mode in ("train", "prefill"):
+        q_nope, q_rope = _queries(cfg, p, x, positions)
+        c_kv, k_r = _latents(cfg, p, x, positions)
+        # naive expansion, chunked over KV to bound live memory
+        k_nope = jnp.einsum("bsr,rhx->bshx", c_kv, p["wk_b"].astype(dt))
+        v = jnp.einsum("bsr,rhx->bshx", c_kv, p["wv_b"].astype(dt))
+        k_nope = shard(k_nope, "batch", "seq", "heads", None)
+        v = shard(v, "batch", "seq", "heads", None)
+        chunk = min(cfg.attn_chunk, s)
+        n_chunks = -(-s // chunk)
+        pad = n_chunks * chunk - s
+        if pad:
+            k_nope = jnp.pad(k_nope, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k_r_p = jnp.pad(k_r, ((0, 0), (0, pad), (0, 0)))
+        else:
+            k_r_p = k_r
+        q_pos = jnp.arange(s)
+        kc = k_nope.reshape(b, n_chunks, chunk, cfg.n_heads, m.qk_nope_head_dim).swapaxes(0, 1)
+        vc = v.reshape(b, n_chunks, chunk, cfg.n_heads, m.v_head_dim).swapaxes(0, 1)
+        krc = k_r_p.reshape(b, n_chunks, chunk, m.qk_rope_head_dim).swapaxes(0, 1)
+
+        def body(carry, xs):
+            mx, l, acc = carry
+            idx, k_i, v_i, kr_i = xs
+            kv_pos = idx * chunk + jnp.arange(chunk)
+            sc = jnp.einsum("bqhd,bchd->bhqc", q_nope, k_i)
+            sc = sc + jnp.einsum("bqhd,bcd->bhqc", q_rope, kr_i)
+            sc = (sc * scale).astype(jnp.float32)
+            valid = (kv_pos[None, :] <= q_pos[:, None]) & (kv_pos[None, :] < s)
+            sc = sc + jnp.where(valid, 0.0, NEG_INF)[None, None]
+            m_i = jnp.maximum(mx, sc.max(axis=-1))
+            pw = jnp.exp(sc - m_i[..., None])
+            alpha = jnp.exp(mx - m_i)
+            l_i = l * alpha + pw.sum(axis=-1)
+            acc_i = acc * alpha[..., None] + jnp.einsum(
+                "bhqc,bchd->bhqd", pw.astype(dt), v_i
+            ).astype(jnp.float32)
+            return (m_i, l_i, acc_i), None
+
+        m0 = jnp.full((b, cfg.n_heads, s), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, cfg.n_heads, s), jnp.float32)
+        a0 = jnp.zeros((b, cfg.n_heads, s, m.v_head_dim), jnp.float32)
+        (mx, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc, krc))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).swapaxes(1, 2).astype(dt)
+        y = jnp.einsum("bshx,hxd->bsd", out, p["wo"].astype(dt))
+        new_cache = None
+        if mode == "prefill":
+            cap = max(target_len, s + 1)
+            pad2 = lambda t: jnp.pad(t, ((0, 0), (0, cap - s), (0, 0)))
+            new_cache = {"c_kv": pad2(c_kv), "k_r": pad2(k_r),
+                         "pos": jnp.asarray(s, jnp.int32)}
+        return shard(y, "batch", "seq", "embed"), new_cache
+
+    # ---- decode (absorbed): score against the latent cache directly.
+    assert cache is not None
+    pos = cache["pos"]
+    q_nope, q_rope = _queries(cfg, p, x, pos[None, None])
+    c_new, kr_new = _latents(cfg, p, x, pos[None, None])
+    cap = cache["c_kv"].shape[1]
+    slot = jnp.mod(pos, cap)
+    c_cache = cache["c_kv"].at[:, slot].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+    kr_cache = cache["k_r"].at[:, slot].set(kr_new[:, 0].astype(cache["k_r"].dtype))
+    # absorb W_uk into the query: q_eff (B,H,r) = q_nope @ W_uk^T
+    q_eff = jnp.einsum("bqhx,rhx->bqhr", q_nope, p["wk_b"].astype(dt))
+    sc = jnp.einsum("bqhr,bcr->bhqc", q_eff, c_cache.astype(dt))
+    sc = sc + jnp.einsum("bqhd,bcd->bhqc", q_rope, kr_cache.astype(dt))
+    sc = (sc * scale).astype(jnp.float32)
+    j = jnp.arange(cap)
+    valid = (j <= pos) | (pos >= cap)
+    sc = sc + jnp.where(valid, 0.0, NEG_INF)[None, None, None]
+    w = jax.nn.softmax(sc, axis=-1).astype(dt)
+    # attend in latent space, then expand once per output token
+    lat = jnp.einsum("bhqc,bcr->bqhr", w, c_cache.astype(dt))
+    out = jnp.einsum("bqhr,rhx->bqhx", lat, p["wv_b"].astype(dt))
+    y = jnp.einsum("bshx,hxd->bsd", out, p["wo"].astype(dt))
+    new_cache = {"c_kv": c_cache, "k_r": kr_cache, "pos": pos + 1}
+    return shard(y, "batch", "seq", "embed"), new_cache
+
+
+def init_mla_cache(cfg, spec, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, seq_len, m.kv_lora_rank), dtype),
+        "k_r": jnp.zeros((batch, seq_len, m.qk_rope_head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_cache_axes(spec):
+    return {"c_kv": ("batch", None, None), "k_r": ("batch", None, None), "pos": ()}

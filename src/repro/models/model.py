@@ -1,0 +1,204 @@
+"""Top-level models: decoder LM, encoder-decoder (whisper), VLM cross-attn.
+
+Public entry points (all pure functions over param pytrees):
+  init_model(cfg, key)        -> (params, axes)    [axes: logical names]
+  train_loss(cfg, params, batch)                 -> (loss, metrics)
+  prefill(cfg, params, tokens, ...)              -> (logits, caches)
+  decode_step(cfg, params, caches, token, ...)   -> (logits, caches)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from . import attention as attn_mod
+from .blocks import init_layer, apply_layer
+from .layers import apply_norm, embed_tokens, init_embedding, init_norm, unembed, init_mlp, apply_mlp
+from .params import Param, dense_init, split_axes
+from .stack import apply_stack, init_stack, init_stack_caches, stack_cache_axes
+
+
+# ------------------------------------------------------------------- init
+def init_model_params(cfg, key):
+    """Param-tree (with logical axes attached) for the full model."""
+    ks = jax.random.split(key, 8)
+    p = {
+        "embed": init_embedding(cfg, ks[0]),
+        "stack": init_stack(cfg, ks[1]),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if cfg.vision is not None:
+        p["vision_proj"] = dense_init(ks[2], (cfg.vision.d_vision, cfg.d_model),
+                                      ("embed", "embed"))
+    if cfg.encoder is not None:
+        enc_keys = jax.random.split(ks[3], cfg.encoder.n_layers + 1)
+        from repro.configs.base import LayerSpec
+
+        enc_spec = LayerSpec(mixer="attn", window=None, moe=None)
+        p["encoder"] = {
+            "layers": [init_layer(cfg.replace(qkv_bias=True, norm="layer"),
+                                  enc_keys[i], enc_spec)
+                       for i in range(cfg.encoder.n_layers)],
+            "final_norm": init_norm(cfg.replace(norm="layer"), cfg.d_model),
+        }
+    if cfg.mtp_depth:
+        mtp_keys = jax.random.split(ks[4], cfg.mtp_depth)
+        from repro.configs.base import LayerSpec
+
+        p["mtp"] = [
+            {
+                "proj": dense_init(mtp_keys[i], (2 * cfg.d_model, cfg.d_model),
+                                   ("embed", "embed")),
+                "norm_h": init_norm(cfg, cfg.d_model),
+                "norm_e": init_norm(cfg, cfg.d_model),
+                "layer": init_layer(cfg, jax.random.fold_in(mtp_keys[i], 1),
+                                    dataclasses.replace(cfg.layers[-1], moe=None)),
+            }
+            for i in range(cfg.mtp_depth)
+        ]
+    return p
+
+
+def init_model(cfg, key):
+    return split_axes(init_model_params(cfg, key))
+
+
+# ------------------------------------------------------- encoder (whisper)
+def _sinusoid(n_pos: int, d: int):
+    pos = np.arange(n_pos)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * dim / d)
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=1), jnp.float32)
+
+
+def run_encoder(cfg, p, frames):
+    """frames: STUB conv-frontend output (B, n_frames, d_model)."""
+    ecfg = cfg.replace(qkv_bias=True, norm="layer")
+    x = frames.astype(cfg.dtype) + _sinusoid(frames.shape[1], cfg.d_model).astype(cfg.dtype)
+    x = shard(x, "batch", "frames", "embed")
+    for lp in p["encoder"]["layers"]:
+        h = apply_norm(ecfg, lp["norm_mix"], x)
+        q, k, v = attn_mod._project_qkv(ecfg, lp["mixer"], h, jnp.arange(h.shape[1])[None], 0.0)
+        out = attn_mod.chunked_attention(ecfg, q, k, v, causal=False)
+        h = jnp.einsum("bshx,hxd->bsd", out, lp["mixer"]["wo"].astype(x.dtype))
+        x = x + h
+        h = apply_norm(ecfg, lp["norm_ffn"], x)
+        x = x + apply_mlp(ecfg, lp["ffn"], h)
+    return apply_norm(ecfg, p["encoder"]["final_norm"], x)
+
+
+def _source_embeds(cfg, p, aux_inputs):
+    """Cross-attention source from stubbed modality embeddings."""
+    if cfg.vision is not None and aux_inputs is not None:
+        src = jnp.einsum("bpd,de->bpe", aux_inputs.astype(cfg.dtype),
+                         p["vision_proj"].astype(cfg.dtype))
+        return shard(src, "batch", "patches", "embed")
+    if cfg.encoder is not None and aux_inputs is not None:
+        return run_encoder(cfg, p, aux_inputs)
+    return None
+
+
+# ---------------------------------------------------------------- forward
+def forward(cfg, p, tokens, *, mode="train", caches=None, positions=None,
+            aux_inputs=None, target_len: int = 0):
+    """tokens: (B, S) int32.  Returns (logits, new_caches, aux_loss, hidden)."""
+    x = embed_tokens(cfg, p["embed"], tokens)
+    x = shard(x, "batch", "seq", "embed")
+    source = _source_embeds(cfg, p, aux_inputs)
+    x, new_caches, aux = apply_stack(cfg, p["stack"], x, mode=mode, caches=caches,
+                                     positions=positions, source=source,
+                                     target_len=target_len)
+    hidden = apply_norm(cfg, p["final_norm"], x)
+    logits = unembed(cfg, p["embed"], hidden)
+    return logits, new_caches, aux, hidden
+
+
+def _xent(logits, labels, mask=None):
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def train_loss(cfg, p, batch):
+    """batch: {"tokens": (B,S+1) or (B,S)} (+ optional aux_inputs/mask).
+
+    Returns (loss, metrics dict).
+    """
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits, _, aux, hidden = forward(cfg, p, inputs, mode="train",
+                                     aux_inputs=batch.get("aux_inputs"))
+    mask = batch.get("mask")
+    if mask is not None:
+        mask = mask[:, 1:].astype(jnp.float32)
+    loss = _xent(logits, labels, mask)
+    metrics = {"xent": loss, "aux": aux}
+
+    if cfg.mtp_depth and tokens.shape[1] > 2:
+        # DeepSeek-V3 MTP: predict t+1+k from [h_t ; emb(t+k)] through an
+        # extra layer and the shared head; sequential over depth.
+        h = hidden
+        mtp_loss = jnp.zeros((), jnp.float32)
+        for k, mp in enumerate(p["mtp"], start=1):
+            emb_next = embed_tokens(cfg, p["embed"], tokens[:, k:-1])
+            h_trunc = h[:, : emb_next.shape[1]]
+            merged = jnp.concatenate(
+                [apply_norm(cfg, mp["norm_h"], h_trunc),
+                 apply_norm(cfg, mp["norm_e"], emb_next)], axis=-1)
+            h = jnp.einsum("bsd,de->bse", merged, mp["proj"].astype(merged.dtype))
+            h, _, _ = apply_layer(cfg, mp["layer"], h, dataclasses.replace(cfg.layers[-1], moe=None),
+                                  mode="train")
+            mtp_logits = unembed(cfg, p["embed"], apply_norm(cfg, p["final_norm"], h))
+            mtp_labels = tokens[:, 1 + k :]
+            mtp_loss = mtp_loss + _xent(mtp_logits, mtp_labels)
+        metrics["mtp"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss / cfg.mtp_depth
+
+    loss = loss + aux
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------- serving
+def prefill(cfg, p, tokens, aux_inputs=None, target_len: int = 0):
+    logits, caches, _, _ = forward(cfg, p, tokens, mode="prefill",
+                                   aux_inputs=aux_inputs, target_len=target_len)
+    return logits, caches
+
+
+def decode_step(cfg, p, caches, token, pos=None, aux_inputs=None):
+    """token: (B, 1) int32.  caches as returned by prefill/init_decode_caches."""
+    logits, caches, _, _ = forward(cfg, p, token, mode="decode", caches=caches,
+                                   aux_inputs=aux_inputs)
+    return logits, caches
+
+
+def init_decode_caches(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16,
+                       filled: Optional[int] = None):
+    """Decode caches with capacity seq_len, marked as holding ``filled``
+    tokens (default seq_len - 1: the dry-run serve_step decodes token
+    seq_len against a full-but-one cache, no wraparound)."""
+    caches = init_stack_caches(cfg, batch, seq_len, dtype)
+    fill = seq_len - 1 if filled is None else filled
+
+    def set_pos(tree):
+        if tree is None:
+            return None
+        if isinstance(tree, list):  # pattern segment: one tree per position
+            return [set_pos(t) for t in tree]
+        return {k: (jnp.full_like(v, fill) if k == "pos" else v)
+                for k, v in tree.items()}
+
+    return [set_pos(c) for c in caches]
+
+
+def decode_cache_axes(cfg):
+    return stack_cache_axes(cfg)

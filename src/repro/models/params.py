@@ -1,0 +1,120 @@
+"""Functional parameter handling: init helpers that carry logical axes.
+
+No module framework: params are plain pytrees (nested dicts of jnp
+arrays).  Initializers build trees of ``Param`` — a registered pytree
+node whose *child* is the value and whose *aux data* is the logical-axis
+tuple.  That registration is what lets ``jax.eval_shape`` trace the full
+initializer for 671B-param configs without allocating: the axes ride in
+the treedef, the values become ShapeDtypeStructs.
+
+``split_axes`` peels a Param tree into (values, axes) twins; the axes
+tree drives ``dist.sharding`` pspecs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Param", "dense_init", "zeros_init", "ones_init", "split_axes",
+           "stack_params", "count_params"]
+
+
+@jax.tree_util.register_pytree_node_class
+class Param:
+    """value + logical axis names; pytree node (axes are aux data)."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Param(shape={shape}, axes={self.axes})"
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def dense_init(key, shape, axes, dtype=jnp.float32, scale: Optional[float] = None) -> Param:
+    """Truncated-normal fan-in init (LeCun) with logical axes."""
+    fan_in = shape[0] if len(shape) == 1 else int(np.prod(shape[:-1]))
+    if scale is None:
+        scale = 1.0
+    std = scale / np.sqrt(max(fan_in, 1))
+    val = std * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype=jnp.float32)
+    return Param(val.astype(dtype), tuple(axes))
+
+
+def zeros_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), tuple(axes))
+
+
+def ones_init(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), tuple(axes))
+
+
+def split_axes(tree):
+    """Param tree -> (values tree, axes tree) with identical structure."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_param)
+    axes = jax.tree.map(lambda p: AxesLeaf(p.axes), tree, is_leaf=_is_param)
+    return values, axes
+
+
+class AxesLeaf:
+    """Logical-axis tuple that is a pytree LEAF (unregistered class), so
+    axes trees have exactly the structure of their value-tree twins —
+    plain tuples would flatten into string leaves."""
+
+    __slots__ = ("axes",)
+
+    def __init__(self, axes):
+        self.axes = tuple(axes)
+
+    def __iter__(self):
+        return iter(self.axes)
+
+    def __len__(self):
+        return len(self.axes)
+
+    def __getitem__(self, i):
+        return self.axes[i]
+
+    def __eq__(self, other):
+        return tuple(self) == tuple(other)
+
+    def __hash__(self):
+        return hash(self.axes)
+
+    def __repr__(self):
+        return f"Axes{self.axes}"
+
+
+def axes_is_leaf(x) -> bool:
+    return isinstance(x, AxesLeaf)
+
+
+def stack_params(trees: list):
+    """Stack per-layer Param trees along a new leading 'layers' axis."""
+
+    def _stack(*leaves):
+        vals = jnp.stack([l.value for l in leaves], axis=0)
+        return Param(vals, ("layers",) + tuple(leaves[0].axes))
+
+    return jax.tree.map(_stack, *trees, is_leaf=_is_param)
+
+
+def count_params(values_tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(values_tree)))

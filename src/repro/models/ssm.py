@@ -1,0 +1,165 @@
+"""Mamba selective-SSM mixer (arXiv:2312.00752), TPU-adapted.
+
+The CUDA "selective scan" kernel becomes a *chunked associative scan*:
+``lax.scan`` over time-chunks (carrying the (B, d_inner, d_state) hidden
+state) with ``lax.associative_scan`` inside each chunk — the hidden
+state is materialized per-chunk only, so live memory is
+O(B * chunk * d_inner * d_state) instead of O(B * S * ...).  This is the
+natural VMEM-sized blocking for a TPU (see DESIGN.md §3).
+
+Decode keeps {conv window, h state} — O(1) per token, which is what
+qualifies mamba-bearing archs (jamba) for long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from .params import dense_init, ones_init, zeros_init, Param
+
+__all__ = ["init_mamba", "mamba_forward", "init_mamba_cache", "mamba_cache_axes"]
+
+
+def _spec(cfg):
+    m = cfg.mamba
+    d_inner = m.expand * cfg.d_model
+    dt_rank = m.dt_rank or -(-cfg.d_model // 16)
+    return m, d_inner, dt_rank
+
+
+def init_mamba(cfg, key, spec):
+    m, d_inner, dt_rank = _spec(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    a_init = np.tile(np.arange(1, m.d_state + 1, dtype=np.float32), (d_inner, 1))
+    dt_bias = np.log(np.expm1(np.clip(np.exp(
+        np.random.default_rng(0).uniform(np.log(1e-3), np.log(1e-1), d_inner)
+    ), 1e-4, None)))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner), ("embed", "d_inner")),
+        "conv_w": dense_init(ks[1], (m.d_conv, d_inner), ("conv", "d_inner"), scale=1.0),
+        "conv_b": zeros_init((d_inner,), ("d_inner",)),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * m.d_state), ("d_inner", "state")),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner), ("lora", "d_inner"), scale=1.0),
+        "dt_bias": Param(jnp.asarray(dt_bias, jnp.float32), ("d_inner",)),
+        "a_log": Param(jnp.asarray(np.log(a_init), jnp.float32), ("d_inner", "state")),
+        "d_skip": ones_init((d_inner,), ("d_inner",)),
+        "out_proj": dense_init(ks[4], (d_inner, d), ("d_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, init_state=None):
+    """Depthwise causal conv along time.  x: (B,S,Di), w: (K,Di)."""
+    k = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    return out + b.astype(x.dtype), xp[:, -(k - 1) :]
+
+
+def _ssm_params(cfg, p, xc):
+    """Per-token dt/B/C from the conv output xc: (B,S,Di)."""
+    m, d_inner, dt_rank = _spec(cfg)
+    dt = xc.dtype
+    proj = jnp.einsum("bsi,ir->bsr", xc, p["x_proj"].astype(dt))
+    dt_raw, b_t, c_t = jnp.split(proj, [dt_rank, dt_rank + m.d_state], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_proj"].astype(dt)).astype(jnp.float32)
+        + p["dt_bias"]
+    )  # (B,S,Di) f32
+    a = -jnp.exp(p["a_log"])  # (Di, Ns) f32
+    return delta, a, b_t.astype(jnp.float32), c_t.astype(jnp.float32)
+
+
+def _scan_chunked(cfg, delta, a, b_t, c_t, x_in, h0):
+    """Chunked selective scan.  Shapes: delta,x_in (B,S,Di); b,c (B,S,Ns)."""
+    bsz, s, d_inner = x_in.shape
+    ns = a.shape[1]
+    chunk = min(cfg.scan_chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        delta, b_t, c_t, x_in = z(delta), z(b_t), z(c_t), z(x_in)
+
+    da = jnp.exp(delta[..., None] * a[None, None])  # (B,S,Di,Ns) decay
+    dbx = (delta * x_in.astype(jnp.float32))[..., None] * b_t[:, :, None, :]  # input
+
+    da_c = da.reshape(bsz, n_chunks, chunk, d_inner, ns).swapaxes(0, 1)
+    dbx_c = dbx.reshape(bsz, n_chunks, chunk, d_inner, ns).swapaxes(0, 1)
+    c_c = c_t.reshape(bsz, n_chunks, chunk, ns).swapaxes(0, 1)
+
+    def chunk_body(h, xs):
+        da_i, dbx_i, c_i = xs  # (B, chunk, Di, Ns), (B, chunk, Ns)
+
+        def combine(u, v):
+            return (u[0] * v[0], v[0] * u[1] + v[1])
+
+        dec, acc = jax.lax.associative_scan(combine, (da_i, dbx_i), axis=1)
+        h_t = dec * h[:, None] + acc  # (B, chunk, Di, Ns)
+        y = jnp.einsum("bcin,bcn->bci", h_t, c_i)
+        return h_t[:, -1], y
+
+    h_last, y = jax.lax.scan(chunk_body, h0, (da_c, dbx_c, c_c))
+    y = y.swapaxes(0, 1).reshape(bsz, n_chunks * chunk, d_inner)[:, :s]
+    return y, h_last
+
+
+def mamba_forward(cfg, p, x, spec, *, positions=None, mode="train", cache=None):
+    m, d_inner, _ = _spec(cfg)
+    bsz, s, d = x.shape
+    dt = x.dtype
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"].astype(dt))
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = shard(x_in, "batch", "seq", "d_inner")
+
+    if mode in ("train", "prefill"):
+        xc, conv_state = _causal_conv(x_in, p["conv_w"], p["conv_b"])
+        xc = jax.nn.silu(xc)
+        delta, a, b_t, c_t = _ssm_params(cfg, p, xc)
+        h0 = jnp.zeros((bsz, d_inner, m.d_state), jnp.float32)
+        y, h_last = _scan_chunked(cfg, delta, a, b_t, c_t, xc, h0)
+        y = y.astype(dt) + xc * p["d_skip"].astype(dt)
+        out = jnp.einsum("bsi,id->bsd", y * jax.nn.silu(z), p["out_proj"].astype(dt))
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": conv_state.astype(dt), "h": h_last, "pos": jnp.asarray(s, jnp.int32)}
+        return shard(out, "batch", "seq", "embed"), new_cache
+
+    # ---- decode: single token recurrence
+    assert cache is not None
+    conv_prev = cache["conv"]  # (B, K-1, Di)
+    xc_seq, conv_state = _causal_conv(x_in, p["conv_w"], p["conv_b"], init_state=conv_prev)
+    xc = jax.nn.silu(xc_seq)
+    delta, a, b_t, c_t = _ssm_params(cfg, p, xc)
+    da = jnp.exp(delta[:, 0, :, None] * a[None])  # (B,Di,Ns)
+    dbx = (delta[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * b_t[:, 0, None, :]
+    h = da * cache["h"] + dbx
+    y = jnp.einsum("bin,bn->bi", h, c_t[:, 0])[:, None]  # (B,1,Di)
+    y = y.astype(dt) + xc * p["d_skip"].astype(dt)
+    out = jnp.einsum("bsi,id->bsd", y * jax.nn.silu(z), p["out_proj"].astype(dt))
+    new_cache = {"conv": conv_state.astype(dt), "h": h, "pos": cache["pos"] + 1}
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def init_mamba_cache(cfg, spec, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    m, d_inner, _ = _spec(cfg)
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, d_inner), dtype),
+        "h": jnp.zeros((batch, d_inner, m.d_state), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mamba_cache_axes(spec):
+    return {
+        "conv": ("batch", None, "d_inner"),
+        "h": ("batch", "d_inner", None),
+        "pos": (),
+    }

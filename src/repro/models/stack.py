@@ -1,0 +1,231 @@
+"""Layer stack: heterogeneous interleaves are lax.scan'ed efficiently.
+
+Two stacking strategies, chosen automatically per config:
+
+  * RUN segments    — maximal runs of identical LayerSpecs, each scanned
+                      with params stacked over the run (deepseek's
+                      3-dense + 58-MoE split).
+  * PATTERN segment — when the layer list is (almost) periodic with
+                      period p (gemma2 local/global p=2, jamba p=8,
+                      xlstm 7:1 p=8, gemma3 5:1 p=6, llama-vision p=5),
+                      scan over the repeats with a p-layer body; any
+                      non-periodic tail falls back to runs.
+
+Without this, alternating-layer archs unroll completely (46 copies of a
+layer in the HLO -> 10-minute CPU compiles and bloated programs);
+pattern-scan keeps every assigned arch to <= 3 HLO segments.
+
+Remat policy wraps each scan body / single layer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import apply_layer, init_layer, init_layer_cache, layer_cache_axes
+from .params import AxesLeaf, Param, stack_params
+
+
+class Run(NamedTuple):
+    spec: object  # LayerSpec
+    count: int
+    start: int
+
+
+class Pattern(NamedTuple):
+    specs: tuple  # p LayerSpecs
+    repeats: int
+    start: int
+
+
+Segment = Union[Run, Pattern]
+
+
+def group_runs(layers, start: int = 0) -> list[Run]:
+    runs: list[Run] = []
+    for i, spec in enumerate(layers):
+        if runs and runs[-1].spec == spec:
+            runs[-1] = runs[-1]._replace(count=runs[-1].count + 1)
+        else:
+            runs.append(Run(spec, 1, start + i))
+    return runs
+
+
+def _find_pattern(layers) -> Optional[tuple[int, int]]:
+    """Smallest period p (< n, repeats >= 2) such that the first
+    p*(n//p) layers are periodic.  Returns (p, repeats) or None."""
+    n = len(layers)
+    best = None
+    for p in range(1, min(n // 2, 16) + 1):
+        k = n // p
+        if k < 2:
+            break
+        if all(layers[i] == layers[i % p] for i in range(k * p)):
+            best = (p, k)
+            break  # smallest p wins
+    return best
+
+
+def plan_segments(layers) -> list[Segment]:
+    """Choose the segmenting with the fewest HLO segments."""
+    runs = group_runs(layers)
+    pat = _find_pattern(layers)
+    if pat is None:
+        return runs
+    p, k = pat
+    tail = group_runs(layers[p * k:], start=p * k)
+    if 1 + len(tail) < len(runs):
+        segs: list[Segment] = [Pattern(tuple(layers[:p]), k, 0)]
+        segs.extend(tail)
+        return segs
+    return runs
+
+
+# ------------------------------------------------------------------- init
+def init_stack(cfg, key):
+    """-> list of per-segment Param trees.
+
+    Run(count==1): plain layer tree.  Run(count>1): leaves stacked over
+    the run.  Pattern: a list of p trees, each stacked over `repeats`.
+    """
+    segs = plan_segments(cfg.layers)
+    keys = jax.random.split(key, cfg.n_layers)
+    out = []
+    for seg in segs:
+        if isinstance(seg, Run):
+            per_layer = [init_layer(cfg, keys[seg.start + j], seg.spec, seg.start + j)
+                         for j in range(seg.count)]
+            out.append(per_layer[0] if seg.count == 1 else stack_params(per_layer))
+        else:
+            p = len(seg.specs)
+            pos_trees = []
+            for j, spec in enumerate(seg.specs):
+                per_rep = [init_layer(cfg, keys[seg.start + r * p + j], spec,
+                                      seg.start + r * p + j)
+                           for r in range(seg.repeats)]
+                pos_trees.append(stack_params(per_rep))
+            out.append(pos_trees)
+    return out
+
+
+def _remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # 'full'
+
+
+# ---------------------------------------------------------------- forward
+def apply_stack(cfg, stack_params_list, x, *, mode="train", caches=None,
+                positions=None, source=None, target_len: int = 0):
+    """Returns (x, new_caches | None, aux_loss)."""
+    segs = plan_segments(cfg.layers)
+    aux = jnp.zeros((), jnp.float32)
+    collect = mode in ("prefill", "decode")
+    new_caches: Optional[list] = [] if collect else None
+    idx = 0
+
+    for seg, p in zip(segs, stack_params_list):
+        cache_in = caches[idx] if caches is not None else None
+        idx += 1
+        if isinstance(seg, Run) and seg.count == 1:
+            fn = _remat_wrap(cfg, lambda p_, x_, c_: apply_layer(
+                cfg, p_, x_, seg.spec, positions=positions, mode=mode,
+                cache=c_, source=source, target_len=target_len))
+            x, c_new, a = fn(p, x, cache_in)
+            aux = aux + a
+            if collect:
+                new_caches.append(c_new)
+        elif isinstance(seg, Run):
+            def body(carry, xs, seg=seg):
+                x_, aux_ = carry
+                p_i, c_i = xs
+                x_, c_new, a = apply_layer(cfg, p_i, x_, seg.spec,
+                                           positions=positions, mode=mode,
+                                           cache=c_i, source=source,
+                                           target_len=target_len)
+                return (x_, aux_ + a), c_new
+
+            body = _remat_wrap(cfg, body)
+            (x, aux), c_stacked = jax.lax.scan(body, (x, aux), (p, cache_in))
+            if collect:
+                new_caches.append(c_stacked)
+        else:  # Pattern
+            def body(carry, xs, seg=seg):
+                x_, aux_ = carry
+                p_list, c_list = xs
+                c_out = []
+                for spec_j, p_j, c_j in zip(
+                        seg.specs, p_list,
+                        c_list if c_list is not None else [None] * len(seg.specs)):
+                    x_, c_new, a = apply_layer(cfg, p_j, x_, spec_j,
+                                               positions=positions, mode=mode,
+                                               cache=c_j, source=source,
+                                               target_len=target_len)
+                    aux_ = aux_ + a
+                    c_out.append(c_new)
+                return (x_, aux_), (c_out if collect else None)
+
+            body = _remat_wrap(cfg, body)
+            (x, aux), c_stacked = jax.lax.scan(body, (x, aux), (p, cache_in))
+            if collect:
+                new_caches.append(c_stacked)
+    return x, new_caches, aux
+
+
+# ----------------------------------------------------------------- caches
+def init_stack_caches(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Per-segment cache trees (stacked along axis 0 for scanned runs;
+    a list of p stacked trees for pattern segments)."""
+    segs = plan_segments(cfg.layers)
+    out = []
+
+    def one(spec, layer_idx):
+        return init_layer_cache(cfg, spec, batch, seq_len, layer_idx, dtype)
+
+    for seg in segs:
+        if isinstance(seg, Run):
+            per_layer = [one(seg.spec, seg.start + j) for j in range(seg.count)]
+            if seg.count == 1:
+                out.append(per_layer[0])
+            elif per_layer[0] is None:
+                out.append(None)
+            else:
+                out.append(jax.tree.map(lambda *ls: jnp.stack(ls, 0), *per_layer))
+        else:
+            pos = []
+            for j, spec in enumerate(seg.specs):
+                per_rep = [one(spec, seg.start + r * len(seg.specs) + j)
+                           for r in range(seg.repeats)]
+                if per_rep[0] is None:
+                    pos.append(None)
+                else:
+                    pos.append(jax.tree.map(lambda *ls: jnp.stack(ls, 0), *per_rep))
+            out.append(pos)
+    return out
+
+
+def stack_cache_axes(cfg):
+    """Logical-axis trees matching init_stack_caches (AxesLeaf leaves)."""
+    segs = plan_segments(cfg.layers)
+    out = []
+
+    def wrap(ax, stacked):
+        prefix = ("layers",) if stacked else ()
+        return jax.tree.map(lambda a: AxesLeaf(prefix + tuple(a)),
+                            ax, is_leaf=lambda v: isinstance(v, tuple))
+
+    for seg in segs:
+        if isinstance(seg, Run):
+            ax = layer_cache_axes(cfg, seg.spec)
+            out.append(None if ax is None else wrap(ax, seg.count > 1))
+        else:
+            pos = []
+            for spec in seg.specs:
+                ax = layer_cache_axes(cfg, spec)
+                pos.append(None if ax is None else wrap(ax, True))
+            out.append(pos)
+    return out

@@ -1,0 +1,269 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM
+(scalar memory with block-diagonal recurrence), with the paper's
+exponential gating + log-space stabilizers.
+
+Both are sequential `lax.scan`s over time (the sLSTM is inherently so;
+the mLSTM's chunked-parallel form is a recorded hillclimb candidate).
+States are O(1) in sequence length, which is what qualifies xlstm for
+the long_500k decode shape.
+
+Block layout follows the paper: the mixers own their up/down projections
+(mLSTM pre-up x2, sLSTM post-up x4/3), so the assigned d_ff = 0 — stack
+layers carry no separate FFN sublayer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import shard
+from .params import Param, dense_init, ones_init, zeros_init
+
+__all__ = [
+    "init_mlstm",
+    "mlstm_forward",
+    "init_mlstm_cache",
+    "mlstm_cache_axes",
+    "init_slstm",
+    "slstm_forward",
+    "init_slstm_cache",
+    "slstm_cache_axes",
+]
+
+EPS = 1e-6
+
+
+def _heads(cfg, d_inner):
+    nh = cfg.n_heads
+    assert d_inner % nh == 0
+    return nh, d_inner // nh
+
+
+# =============================================================== mLSTM
+def _mlstm_dims(cfg, spec):
+    d_inner = int(spec.proj_factor * cfg.d_model)
+    nh, dh = _heads(cfg, d_inner)
+    return d_inner, nh, dh
+
+
+def init_mlstm(cfg, key, layer_spec, spec):
+    d = cfg.d_model
+    d_inner, nh, dh = _mlstm_dims(cfg, spec)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], (d, 2 * d_inner), ("embed", "d_inner")),
+        "conv_w": dense_init(ks[1], (spec.conv_kernel, d_inner), ("conv", "d_inner"), scale=1.0),
+        "conv_b": zeros_init((d_inner,), ("d_inner",)),
+        # headwise (block-diagonal) projections, as in the official impl
+        "wq": dense_init(ks[2], (nh, dh, dh), ("heads", None, "head_dim")),
+        "wk": dense_init(ks[3], (nh, dh, dh), ("heads", None, "head_dim")),
+        "wv": dense_init(ks[4], (nh, dh, dh), ("heads", None, "head_dim")),
+        "w_if": dense_init(ks[5], (d_inner, 2 * nh), ("d_inner", "heads")),
+        "b_i": zeros_init((nh,), ("heads",)),
+        "b_f": Param(jnp.full((nh,), 3.0, jnp.float32), ("heads",)),  # forget-open
+        "gn_scale": ones_init((d_inner,), ("d_inner",)),
+        "down": dense_init(ks[6], (d_inner, d), ("d_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, init_state=None):
+    k = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(k))
+    return out + b.astype(x.dtype), xp[:, -(k - 1) :]
+
+
+def _group_norm(x, scale, nh):
+    """Per-head group norm over (B, S, d_inner)."""
+    b, s, d_inner = x.shape
+    xh = x.reshape(b, s, nh, d_inner // nh).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    out = (xh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (out.reshape(b, s, d_inner) * scale).astype(x.dtype)
+
+
+def _mlstm_step(carry, xs):
+    """One token.  carry: (C, n, m); xs: (q, k, v, log_i, log_f) per token."""
+    c_mat, n_vec, m_run = carry
+    q, k, v, log_i, log_f = xs  # q/k/v: (B,nh,dh); gates: (B,nh)
+    m_new = jnp.maximum(log_f + m_run, log_i)
+    i_p = jnp.exp(log_i - m_new)[..., None]
+    f_p = jnp.exp(log_f + m_run - m_new)[..., None]
+    c_mat = f_p[..., None] * c_mat + i_p[..., None] * (v[..., :, None] * k[..., None, :])
+    n_vec = f_p * n_vec + i_p * k
+    num = jnp.einsum("bhij,bhj->bhi", c_mat, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n_vec, q)), 1.0)[..., None]
+    h = num / den
+    return (c_mat, n_vec, m_new), h
+
+
+def _mlstm_inputs(cfg, p, x_conv, x_raw, nh, dh):
+    dt = x_conv.dtype
+    b, s = x_conv.shape[:2]
+    xc_h = x_conv.reshape(b, s, nh, dh)
+    xr_h = x_raw.reshape(b, s, nh, dh)
+    q = jnp.einsum("bshi,hij->bshj", xc_h, p["wq"].astype(dt))
+    k = jnp.einsum("bshi,hij->bshj", xc_h, p["wk"].astype(dt)) / np.sqrt(dh)
+    v = jnp.einsum("bshi,hij->bshj", xr_h, p["wv"].astype(dt))
+    gates = jnp.einsum("bsi,ih->bsh", x_conv, p["w_if"].astype(dt)).astype(jnp.float32)
+    log_i = gates[..., :nh] + p["b_i"]
+    log_f = jax.nn.log_sigmoid(gates[..., nh:] + p["b_f"])
+    f32 = lambda t: t.astype(jnp.float32)
+    return f32(q), f32(k), f32(v), log_i, log_f
+
+
+def mlstm_forward(cfg, p, x, layer_spec, spec, *, positions=None, mode="train", cache=None):
+    d_inner, nh, dh = _mlstm_dims(cfg, spec)
+    b, s, _ = x.shape
+    dt = x.dtype
+    up = jnp.einsum("bsd,di->bsi", x, p["up"].astype(dt))
+    x_m, z = jnp.split(up, 2, axis=-1)
+    x_m = shard(x_m, "batch", "seq", "d_inner")
+
+    conv_prev = cache["conv"] if (cache is not None and mode == "decode") else None
+    x_conv_raw, conv_state = _causal_conv(x_m, p["conv_w"], p["conv_b"], init_state=conv_prev)
+    x_conv = jax.nn.silu(x_conv_raw)
+    q, k, v, log_i, log_f = _mlstm_inputs(cfg, p, x_conv, x_m, nh, dh)
+
+    if mode == "decode":
+        carry = (cache["C"], cache["n"], cache["m"])
+        carry, h = _mlstm_step(carry, (q[:, 0], k[:, 0], v[:, 0], log_i[:, 0], log_f[:, 0]))
+        h = h[:, None]
+        new_cache = {"C": carry[0], "n": carry[1], "m": carry[2],
+                     "conv": conv_state.astype(dt), "pos": cache["pos"] + 1}
+    else:
+        c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, nh, dh), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+        tx = lambda t: jnp.moveaxis(t, 1, 0)  # scan over time
+        carry, h = jax.lax.scan(
+            _mlstm_step, (c0, n0, m0), (tx(q), tx(k), tx(v), tx(log_i), tx(log_f))
+        )
+        h = jnp.moveaxis(h, 0, 1)  # (B,S,nh,dh)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"C": carry[0], "n": carry[1], "m": carry[2],
+                         "conv": conv_state.astype(dt), "pos": jnp.asarray(s, jnp.int32)}
+
+    h = _group_norm(h.reshape(b, -1, d_inner).astype(dt), p["gn_scale"], nh)
+    out = h * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", out, p["down"].astype(dt))
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def init_mlstm_cache(cfg, layer_spec, spec, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    d_inner, nh, dh = _mlstm_dims(cfg, spec)
+    return {
+        "C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, spec.conv_kernel - 1, d_inner), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def mlstm_cache_axes(spec):
+    return {
+        "C": ("batch", "heads", None, None),
+        "n": ("batch", "heads", None),
+        "m": ("batch", "heads"),
+        "conv": ("batch", None, "d_inner"),
+        "pos": (),
+    }
+
+
+# =============================================================== sLSTM
+def _slstm_dims(cfg):
+    nh = cfg.n_heads
+    return nh, cfg.d_model // nh
+
+
+def init_slstm(cfg, key, layer_spec, spec):
+    d = cfg.d_model
+    nh, dh = _slstm_dims(cfg)
+    d_up = int(round(4.0 / 3.0 * d))
+    ks = jax.random.split(key, 8)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d), ("embed", "d_inner")),
+        "r_gates": dense_init(ks[1], (nh, dh, 4 * dh), ("heads", None, "d_inner"), scale=1.0),
+        "b_gates": Param(
+            jnp.concatenate([jnp.zeros(d), jnp.full(d, 3.0), jnp.zeros(2 * d)]).astype(jnp.float32),
+            ("d_inner",),
+        ),
+        "gn_scale": ones_init((d,), ("embed",)),
+        "up1": dense_init(ks[2], (d, d_up), ("embed", "mlp")),
+        "up2": dense_init(ks[3], (d, d_up), ("embed", "mlp")),
+        "down": dense_init(ks[4], (d_up, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_step(params_r, b_gates, nh, dh):
+    def step(carry, wx_t):
+        h, c, n, m_run = carry  # all (B, d)
+        b = h.shape[0]
+        hh = h.reshape(b, nh, dh)
+        rec = jnp.einsum("bhi,hij->bhj", hh, params_r)  # (b, nh, 4*dh)
+        rec = rec.reshape(b, nh, 4, dh).transpose(0, 2, 1, 3).reshape(b, 4, nh * dh)
+        pre = wx_t.reshape(b, 4, nh * dh) + rec + b_gates.reshape(4, nh * dh)
+        i_raw, f_raw, z_raw, o_raw = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        log_i = i_raw
+        log_f = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(log_f + m_run, log_i)
+        i_p = jnp.exp(log_i - m_new)
+        f_p = jnp.exp(log_f + m_run - m_new)
+        c_new = f_p * c + i_p * jnp.tanh(z_raw)
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(o_raw) * c_new / jnp.maximum(n_new, EPS)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    return step
+
+
+def slstm_forward(cfg, p, x, layer_spec, spec, *, positions=None, mode="train", cache=None):
+    nh, dh = _slstm_dims(cfg)
+    b, s, d = x.shape
+    dt = x.dtype
+    wx = jnp.einsum("bsd,dj->bsj", x, p["w_gates"].astype(dt)).astype(jnp.float32)
+    step = _slstm_step(p["r_gates"].astype(jnp.float32), p["b_gates"], nh, dh)
+
+    if mode == "decode":
+        carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+        carry, h = step(carry, wx[:, 0])
+        h_seq = h[:, None]
+        new_cache = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3],
+                     "pos": cache["pos"] + 1}
+    else:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        carry0 = (zeros, zeros, zeros, jnp.full((b, d), -1e30, jnp.float32))
+        carry, h = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+        h_seq = jnp.moveaxis(h, 0, 1)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3],
+                         "pos": jnp.asarray(s, jnp.int32)}
+
+    h_seq = _group_norm(h_seq.astype(dt), p["gn_scale"], nh)
+    # post-up projection (GeGLU, pf = 4/3) — part of the sLSTM block
+    u = jax.nn.gelu(jnp.einsum("bsd,df->bsf", h_seq, p["up1"].astype(dt)), approximate=True)
+    g = jnp.einsum("bsd,df->bsf", h_seq, p["up2"].astype(dt))
+    out = jnp.einsum("bsf,fd->bsd", u * g, p["down"].astype(dt))
+    return shard(out, "batch", "seq", "embed"), new_cache
+
+
+def init_slstm_cache(cfg, layer_spec, spec, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(),
+            "m": jnp.full((batch, d), -1e30, jnp.float32),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def slstm_cache_axes(spec):
+    return {"h": ("batch", "embed"), "c": ("batch", "embed"),
+            "n": ("batch", "embed"), "m": ("batch", "embed"), "pos": ()}

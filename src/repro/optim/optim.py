@@ -1,0 +1,100 @@
+"""Optimizers (AdamW, SGD-momentum), gradient clipping, LR schedules.
+
+Self-contained (no optax): states are pytrees matching params; update
+functions are pure and jit-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "sgd_init",
+    "sgd_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "cosine_schedule",
+    "linear_schedule",
+]
+
+
+def adamw_init(params):
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), t)
+    return {"m": zeros(params), "v": zeros(params), "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, opt_state, params, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    count = opt_state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - b1**c
+    bc2 = 1.0 - b2**c
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * g * g
+        step = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        if weight_decay:
+            step = step + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def sgd_init(params):
+    return {"mom": jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(grads, opt_state, params, lr, *, momentum=0.9):
+    def upd(g, mom, p):
+        mom_new = momentum * mom + g.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * mom_new
+        return p_new.astype(p.dtype), mom_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mom = treedef.flatten_up_to(opt_state["mom"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_mom, flat_p)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"mom": treedef.unflatten([o[1] for o in out]),
+             "count": opt_state["count"] + 1})
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def cosine_schedule(step, base_lr, warmup: int, total: int, min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(np.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def linear_schedule(step, base_lr, warmup: int, total: int):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    return jnp.where(step < warmup, warm, base_lr * (1 - prog))

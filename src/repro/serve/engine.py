@@ -1,0 +1,56 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+``serve_step`` (one token against a seq_len cache) is the unit the
+decode-shape dry-runs lower; ``generate`` drives it end-to-end for the
+examples.  Sampling is deterministic given the key.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import decode_step, init_decode_caches, prefill
+
+__all__ = ["make_serve_step", "generate"]
+
+
+def make_serve_step(cfg):
+    """(params, caches, token) -> (next_token_logits, caches) — the
+    decode-shape dry-run target."""
+
+    def serve_step(params, caches, token, aux_inputs=None):
+        logits, caches = decode_step(cfg, params, caches, token,
+                                     aux_inputs=aux_inputs)
+        return logits[:, -1], caches
+
+    return serve_step
+
+
+def _sample(logits, key, temperature: float):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def generate(cfg, params, prompt_tokens, max_new: int = 32, *,
+             temperature: float = 0.0, key=None, aux_inputs=None):
+    """prompt_tokens: (B, S) -> (B, S + max_new) greedy/temperature output."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    b, s = prompt_tokens.shape
+    logits, caches = jax.jit(
+        lambda p, t: prefill(cfg, p, t, aux_inputs=aux_inputs,
+                             target_len=s + max_new)
+    )(params, prompt_tokens)
+    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t, aux_inputs=aux_inputs))
+    tok = _sample(logits[:, -1], key, temperature)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(max_new - 1):
+        key = jax.random.fold_in(key, i)
+        logits, caches = step(params, caches, tok)
+        tok = _sample(logits[:, -1], key, temperature)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate([prompt_tokens] + out, axis=1)

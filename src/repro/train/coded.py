@@ -1,0 +1,426 @@
+"""Block coordinate gradient coding integrated into the training loop.
+
+This is the paper's technique as a first-class framework feature:
+
+  1. ``build_plan``     — optimize the block partition x (Thm 2/3, SPSG,
+                          or a baseline scheme), map blocks onto the
+                          model's parameter leaves (per-leaf redundancy
+                          level s_j, weighted by leaf cost — the paper's
+                          footnote-2/3 "layer block" extension), and
+                          construct the per-level Tandon cyclic codes.
+  2. ``coded_grad_fn``  — the worker-side compute: (s_max+1) per-shard
+                          gradients (the redundancy work), per-leaf
+                          ENCODE with this worker's coding row
+                          (kernels/gc_encode math), then the
+                          decode-weighted reduction that replaces the
+                          data-parallel all-reduce (DESIGN.md §3).
+  3. ``StragglerSim``   — samples T ~ dist per step, derives per-level
+                          fastest sets + decode weights (host-side
+                          numpy lstsq, O(N^3) once per step), and keeps
+                          the eq.(2) runtime ledger that Figs. 3/4 (and
+                          our EXPERIMENTS.md) are scored on.
+
+Two execution modes share the math:
+  * ``mode='spmd'``  — jax.shard_map over the mesh 'data' axis (manual),
+                       other axes (model/pod) remain GSPMD-auto: the
+                       decoded gradient materializes as a weighted psum.
+  * ``mode='sim'``   — single-device simulation: lax.map over workers
+                       (examples, CPU tests).
+
+Exactness invariant (tested): for EVERY straggler realization, the
+decoded gradient equals the plain data-parallel gradient over the same
+global batch, to float tolerance.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import (
+    GradientCode,
+    assign_levels_to_layers,
+    round_x,
+    scheme_bank,
+    solve_xf,
+    solve_xt,
+    spsg,
+    tau_hat,
+)
+from repro.core.runtime import CostModel, DEFAULT_COST
+from repro.models.model import train_loss
+
+__all__ = ["CodingPlan", "build_plan", "StragglerSim", "make_coded_grad_fn",
+           "uncoded_grad_fn", "tau_weighted"]
+
+# L: abstract coordinate-unit resolution for the block optimizer.  The
+# paper's L is the raw parameter count; only the *fractions* x/L matter
+# for the layer-block mapping, so a fixed resolution keeps solvers fast.
+UNIT_RESOLUTION = 20_000
+
+
+@dataclass
+class CodingPlan:
+    n_workers: int
+    x: np.ndarray                 # (N,) integer block sizes over UNIT_RESOLUTION
+    leaf_levels: np.ndarray       # per-leaf redundancy level s_j (flat order)
+    leaf_costs: np.ndarray        # per-leaf cost weights (normalized)
+    used_levels: np.ndarray       # sorted unique levels actually in use
+    s_max: int
+    b_rows: np.ndarray            # (N, n_used, K) worker coding coeffs over its shards
+    codes: GradientCode = field(repr=False, default=None)
+    solver: str = "xf"
+
+    @property
+    def k_shards(self) -> int:
+        return self.s_max + 1
+
+    def level_index(self) -> np.ndarray:
+        """Per-leaf index into used_levels (static, for jit closures)."""
+        lookup = {int(s): i for i, s in enumerate(self.used_levels)}
+        return np.asarray([lookup[int(s)] for s in self.leaf_levels], np.int64)
+
+    def decode_weights(self, times: np.ndarray) -> np.ndarray:
+        """(n_used, N) decode vectors for a realization T (zeros on the
+        s slowest workers per level)."""
+        out = np.zeros((len(self.used_levels), self.n_workers))
+        for i, s in enumerate(self.used_levels):
+            fastest = self.codes.fastest_set(int(s), times)
+            out[i] = self.codes.decode(int(s), fastest)
+        return out
+
+    def full_decode_weights(self) -> np.ndarray:
+        """Decode weights when nobody straggles (all workers kept)."""
+        return self.decode_weights(np.arange(self.n_workers, dtype=np.float64))
+
+
+def _leaf_costs(params) -> np.ndarray:
+    leaves = jax.tree.leaves(params)
+    return np.asarray([float(np.prod(l.shape)) for l in leaves], np.float64)
+
+
+def solve_blocks(solver: str, dist, n_workers: int, total: int, rng=0,
+                 s_cap=None) -> np.ndarray:
+    if solver == "xt":
+        x = solve_xt(dist, n_workers, total, s_cap=s_cap)
+    elif solver == "xf":
+        x = solve_xf(dist, n_workers, total, s_cap=s_cap)
+    elif solver == "spsg":
+        x = spsg(dist, n_workers, total, n_iters=2000, batch=128, rng=rng).x
+    elif solver == "uniform":  # uncoded: everything at level 0
+        x = np.zeros(n_workers); x[0] = total
+    elif solver == "single-real":
+        # realized-cost-optimal single level (EXPERIMENTS §Perf H3): the
+        # NN/SPMD slot realization prices level s at (s+1) full passes,
+        # so argmin_s E[T_(N-s)] * (s+1).
+        from repro.core.runtime import tau_hat_realized_batch as thr
+        draws = dist.sample(np.random.default_rng(rng), (30_000, n_workers))
+        best_s, best_v = 0, np.inf
+        for s in range(n_workers):
+            xs = np.zeros(n_workers); xs[s] = total
+            v = float(thr(xs, draws).mean())
+            if v < best_v:
+                best_s, best_v = s, v
+        x = np.zeros(n_workers); x[best_s] = total
+    elif solver in ("single-bcgc", "tandon", "ferdinand-l", "ferdinand-l2"):
+        bank = scheme_bank(dist, n_workers, total, rng=rng)
+        key = {"single-bcgc": "single-BCGC", "tandon": "Tandon et al. (alpha)",
+               "ferdinand-l": "Ferdinand et al. (r=L)",
+               "ferdinand-l2": "Ferdinand et al. (r=L/2)"}[solver]
+        x = bank[key]
+    else:
+        raise ValueError(f"unknown solver {solver}")
+    return round_x(np.asarray(x, np.float64), total)
+
+
+def build_plan(params, dist, n_workers: int, solver: str = "xf", rng: int = 0,
+               prefer_fractional: bool = False, s_cap=None) -> CodingPlan:
+    """Optimize the partition and bind it to this model's parameter leaves.
+
+    ``prefer_fractional=False``: the trainer always uses Tandon's cyclic
+    code so every level shares the one cyclic shard allocation I_n
+    (fractional-repetition's group allocation is level-dependent).
+    ``s_cap``: bound the top redundancy level (SPMD work/tolerance
+    co-design, EXPERIMENTS §Perf H3).
+    """
+    x = solve_blocks(solver, dist, n_workers, UNIT_RESOLUTION, rng, s_cap=s_cap)
+    costs = _leaf_costs(params)
+    levels = assign_levels_to_layers(costs, x)
+    used = np.unique(levels)
+    s_max = int(used.max())
+    codes = GradientCode(n_workers, rng_seed=rng, prefer_fractional=prefer_fractional)
+    k = s_max + 1
+    b_rows = np.zeros((n_workers, len(used), k))
+    for n in range(n_workers):
+        for i, s in enumerate(used):
+            row = codes.b(int(s))[n]  # support {n..n+s} cyclic
+            for slot in range(int(s) + 1):
+                b_rows[n, i, slot] = row[(n + slot) % n_workers]
+    return CodingPlan(
+        n_workers=n_workers, x=x, leaf_levels=levels,
+        leaf_costs=costs / costs.sum(), used_levels=used, s_max=s_max,
+        b_rows=b_rows, codes=codes, solver=solver,
+    )
+
+
+def tau_weighted(plan: CodingPlan, times: np.ndarray,
+                 cost: CostModel = DEFAULT_COST) -> float:
+    """Eq. (2) on the leaf-block layout: per-leaf cost weights w_j stand
+    in for the unit coordinates (footnote-4 extension)."""
+    s = plan.leaf_levels
+    t_sorted = np.sort(times)
+    t_term = t_sorted[plan.n_workers - s - 1]
+    work = np.cumsum((s + 1.0) * plan.leaf_costs) * UNIT_RESOLUTION
+    return float(cost.scale(plan.n_workers) * np.max(t_term * work))
+
+
+class StragglerSim:
+    """Per-step straggler realization + runtime ledger (the paper's
+    evaluation instrument, §VI)."""
+
+    def __init__(self, plan: CodingPlan, dist, seed: int = 0,
+                 cost: CostModel = DEFAULT_COST):
+        self.plan, self.dist, self.cost = plan, dist, cost
+        self.rng = np.random.default_rng(seed)
+        self.ledger: list[dict] = []
+
+    def step(self):
+        times = self.dist.sample(self.rng, (self.plan.n_workers,))
+        dec_w = self.plan.decode_weights(times)
+        t_coded = tau_weighted(self.plan, times, self.cost)
+        # uncoded synchronous data-parallel: wait for the slowest worker
+        t_uncoded = float(self.cost.scale(self.plan.n_workers)
+                          * times.max() * UNIT_RESOLUTION)
+        rec = {"times": times, "tau_coded": t_coded, "tau_uncoded": t_uncoded}
+        self.ledger.append(rec)
+        return jnp.asarray(dec_w, jnp.float32), rec
+
+    def summary(self) -> dict:
+        if not self.ledger:
+            return {}
+        coded = np.asarray([r["tau_coded"] for r in self.ledger])
+        unc = np.asarray([r["tau_uncoded"] for r in self.ledger])
+        return {
+            "steps": len(self.ledger),
+            "mean_tau_coded": float(coded.mean()),
+            "mean_tau_uncoded": float(unc.mean()),
+            "speedup": float(unc.mean() / coded.mean()),
+        }
+
+
+# ------------------------------------------------------------------ grads
+def _per_shard_grads(cfg, params, shards_tokens, shards_aux=None):
+    """shards_tokens: (K, rows, S+1) -> gradient leaves stacked (K, ...).
+
+    Sequential lax.map = the honest (s_max+1)-fold redundancy work with
+    flat memory (one backward at a time), matching eq. (2)'s cost model.
+    shards_aux: optional (K, rows, ...) modality embeddings (VLM/audio).
+    """
+
+    def one(args):
+        tok, aux = args
+        batch = {"tokens": tok}
+        if aux is not None:
+            batch["aux_inputs"] = aux
+        loss_fn = lambda p: train_loss(cfg, p, batch)[0]
+        return jax.grad(loss_fn)(params)
+
+    return jax.lax.map(one, (shards_tokens, shards_aux))
+
+
+def _encode_tree(grads_stacked, rows, level_idx):
+    """Per-leaf encode: c_j = sum_k rows[level(j), k] * g_j[k]."""
+    leaves, treedef = jax.tree.flatten(grads_stacked)
+    out = []
+    for leaf, li in zip(leaves, level_idx):
+        r = rows[li].astype(leaf.dtype)  # (K,)
+        out.append(jnp.tensordot(r, leaf, axes=(0, 0)))
+    return treedef.unflatten(out)
+
+
+def _scale_tree(tree, dec_w_rank, level_idx):
+    """Per-leaf decode weight a[level(j)] for this rank."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return treedef.unflatten(
+        [leaf * dec_w_rank[li].astype(leaf.dtype) for leaf, li in zip(leaves, level_idx)]
+    )
+
+
+def _scatter_dims(param_shapes, param_axes, n_workers: int):
+    """Per-leaf dimension for psum_scatter: prefer the fsdp 'embed' axis,
+    else the first dim divisible by N; None -> plain psum for that leaf."""
+    shapes = jax.tree.leaves(param_shapes)
+    if param_axes is not None:
+        axes = jax.tree.leaves(param_axes,
+                               is_leaf=lambda v: hasattr(v, "axes") or isinstance(v, tuple))
+    else:
+        axes = [None] * len(shapes)
+    out = []
+    for shp, ax in zip(shapes, axes):
+        dims = tuple(shp.shape if hasattr(shp, "shape") else shp)
+        pick = None
+        if ax is not None:
+            for i, name in enumerate(tuple(ax)):
+                if name == "embed" and dims[i] % n_workers == 0:
+                    pick = i
+                    break
+        if pick is None:
+            for i, dsz in enumerate(dims):
+                if dsz % n_workers == 0 and dsz >= n_workers:
+                    pick = i
+                    break
+        out.append(pick)
+    return out
+
+
+def make_coded_grad_fn(cfg, plan: CodingPlan, *, mesh=None, data_axis: str = "data",
+                       mode: str = "sim", reduce_mode: str = "psum",
+                       grad_dtype=None, param_shapes=None,
+                       param_axes=None) -> Callable:
+    """Returns grad_fn(params, worker_batches, dec_w, worker_aux=None)
+    -> decoded mean grads.
+
+    worker_batches: (N, K, rows, S+1) tokens — the cyclic allocation from
+    ``data.pipeline.coded_worker_batches`` (sharded P(data_axis) on axis
+    0 in spmd mode).  dec_w: (n_used, N) decode weights for this step's
+    straggler realization.  worker_aux: optional (N, K, rows, ...)
+    modality embeddings for VLM/audio archs.
+
+    Beyond-paper options (spmd mode):
+      reduce_mode='psum_scatter' — the decode-weighted reduction emits
+        grads SHARDED over the data axis (reduce-scatter instead of
+        all-reduce: (N-1)/N less collective traffic; exact).  Needs
+        param_shapes (+ optionally param_axes for fsdp alignment).
+      grad_dtype=jnp.bfloat16 — cast coded blocks before the reduction
+        (halves collective bytes; small stochastic rounding error).
+    """
+    level_idx = plan.level_index()
+    b_rows = jnp.asarray(plan.b_rows, jnp.float32)  # (N, n_used, K)
+    n_workers = plan.n_workers
+
+    if mode == "sim":
+
+        def grad_fn(params, worker_batches, dec_w, worker_aux=None):
+            def worker(n):
+                aux_n = None if worker_aux is None else worker_aux[n]
+                g = _per_shard_grads(cfg, params, worker_batches[n], aux_n)
+                c = _encode_tree(g, b_rows[n], level_idx)
+                return _scale_tree(c, dec_w[:, n], level_idx)
+
+            contribs = jax.lax.map(worker, jnp.arange(n_workers))
+            summed = jax.tree.map(lambda l: l.sum(0), contribs)
+            return jax.tree.map(lambda l: l / n_workers, summed)
+
+        return grad_fn
+
+    # ---- spmd: manual over the data axis (and the pod axis when present:
+    # coding runs across data-parallel ranks, plain summation across pods;
+    # keeping the pod axis manual also keeps all token gathers local,
+    # which sidesteps an XLA partial-manual PartitionGather abort).
+    assert mesh is not None
+    from repro.dist.sharding import current_rules, make_rules, strip_rules, use_mesh
+
+    extra_axes = tuple(a for a in ("pod",) if a in mesh.shape)
+    manual_axes = {data_axis, *extra_axes}
+    extra_size = 1
+    for a in extra_axes:
+        extra_size *= mesh.shape[a]
+    inner_rules = strip_rules(make_rules(cfg), manual_axes)
+
+    scatter = None
+    out_specs = P()
+    if reduce_mode == "psum_scatter":
+        if param_shapes is None:
+            raise ValueError("psum_scatter needs param_shapes")
+        scatter = _scatter_dims(param_shapes, param_axes, n_workers)
+        treedef = jax.tree.structure(param_shapes)
+        specs = []
+        for sd, shp in zip(scatter, jax.tree.leaves(param_shapes)):
+            nd = len(shp.shape if hasattr(shp, "shape") else shp)
+            if sd is None:
+                specs.append(P())
+            else:
+                entries = [None] * nd
+                entries[sd] = data_axis
+                specs.append(P(*entries))
+        out_specs = jax.tree.unflatten(treedef, specs)
+
+    def _reduce(tree):
+        if grad_dtype is not None:
+            tree = jax.tree.map(lambda l: l.astype(grad_dtype), tree)
+        if extra_axes:  # sum the pod halves of each shard first
+            tree = jax.lax.psum(tree, extra_axes)
+        if scatter is None:
+            return jax.lax.psum(tree, data_axis)
+        leaves, treedef = jax.tree.flatten(tree)
+        out = []
+        for leaf, sd in zip(leaves, scatter):
+            if sd is None:
+                out.append(jax.lax.psum(leaf, data_axis))
+            else:
+                out.append(jax.lax.psum_scatter(leaf, data_axis,
+                                                scatter_dimension=sd, tiled=True))
+        return treedef.unflatten(out)
+
+    # worker_batches (N, K, rows, S+1): workers over data, rows over pod —
+    # each (data, pod) rank holds its shard-half; encode is linear, so
+    # c_n = (1/P) * sum_p c_n^p and the decode-weighted psum over
+    # (data, pod) recovers the exact global-batch gradient.
+    batch_spec = P(data_axis, None, extra_axes if extra_axes else None)
+
+    def manual_fn(params, my_batches, dec_w, my_rows, my_aux=None):
+        # my_batches: (1, K, rows/P, S+1); my_rows: (1, n_used, K)
+        # inside the manual region, sharding constraints may only use
+        # the remaining auto axes — reinstall stripped rules.
+        with use_mesh(mesh, inner_rules):
+            rank = jax.lax.axis_index(data_axis)
+            aux0 = None if my_aux is None else my_aux[0]
+            g = _per_shard_grads(cfg, params, my_batches[0], aux0)
+            c = _encode_tree(g, my_rows[0], level_idx)
+            contrib = _scale_tree(c, dec_w[:, rank], level_idx)
+            decoded = _reduce(contrib)
+            denom = n_workers * extra_size
+            return jax.tree.map(lambda l: l / denom, decoded)
+
+    def grad_fn(params, worker_batches, dec_w, worker_aux=None):
+        if worker_aux is None:
+            smapped = jax.shard_map(
+                lambda p, wb, dw, rows: manual_fn(p, wb, dw, rows),
+                mesh=mesh,
+                in_specs=(P(), batch_spec, P(), P(data_axis)),
+                out_specs=out_specs,
+                axis_names=manual_axes,
+                check_vma=False,
+            )
+            return smapped(params, worker_batches, dec_w, b_rows)
+        smapped = jax.shard_map(
+            manual_fn,
+            mesh=mesh,
+            in_specs=(P(), batch_spec, P(), P(data_axis), batch_spec),
+            out_specs=out_specs,
+            axis_names=manual_axes,
+            check_vma=False,
+        )
+        return smapped(params, worker_batches, dec_w, b_rows, worker_aux)
+
+    return grad_fn
+
+
+def uncoded_grad_fn(cfg, n_workers: int) -> Callable:
+    """Plain data-parallel mean gradient over the same global batch
+    (shards stacked (N, rows, S+1)); reference for exactness tests."""
+
+    def grad_fn(params, shards):
+        def one(tok):
+            loss_fn = lambda p: train_loss(cfg, p, {"tokens": tok})[0]
+            return jax.grad(loss_fn)(params)
+
+        g = jax.lax.map(one, shards)
+        return jax.tree.map(lambda l: l.sum(0) / n_workers, g)
+
+    return grad_fn

@@ -1,0 +1,73 @@
+"""Coding-theory layer: encode/decode exactness for every construction."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GradientCode, cyclic_B, cyclic_shards, decode_weights, frac_repetition_B,
+    identity_B, make_code, verify_code,
+)
+
+
+@pytest.mark.parametrize("n,s", [(4, 1), (4, 2), (4, 3), (6, 2), (6, 5),
+                                 (8, 3), (12, 6), (16, 4)])
+def test_cyclic_code_exhaustive(n, s):
+    b = cyclic_B(n, s, rng=0)
+    assert verify_code(b, s, exhaustive_limit=3000) < 1e-7
+
+
+@pytest.mark.parametrize("n,s", [(4, 1), (6, 1), (6, 2), (8, 1), (8, 3), (12, 2)])
+def test_fractional_repetition(n, s):
+    b = frac_repetition_B(n, s)
+    assert set(np.unique(b)) <= {0.0, 1.0}
+    assert (b.sum(axis=1) == s + 1).all()
+    assert verify_code(b, s, exhaustive_limit=3000) < 1e-12
+
+
+def test_fractional_requires_divisibility():
+    with pytest.raises(ValueError):
+        frac_repetition_B(6, 3)  # 4 does not divide 6
+
+
+def test_identity_is_s0():
+    b = make_code(5, 0)
+    assert np.allclose(b, np.eye(5))
+    a = decode_weights(b, np.arange(5))
+    assert np.allclose(a, np.ones(5))
+
+
+def test_cyclic_support_matches_allocation():
+    """Row n of the cyclic code is supported inside worker n's shard set I_n."""
+    n, s = 9, 4
+    b = cyclic_B(n, s, rng=1)
+    for w in range(n):
+        support = set(np.nonzero(np.abs(b[w]) > 1e-12)[0].tolist())
+        assert support <= set(cyclic_shards(n, w, s).tolist())
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(3, 12), st.data())
+def test_decode_recovers_sum_property(n, data):
+    """Property: for random (N, s, straggler set, gradients), decoding the
+    coded values of the fastest N-s workers returns sum_i g_i exactly."""
+    s = data.draw(st.integers(0, n - 1))
+    b = make_code(n, s, rng=0, prefer_fractional=data.draw(st.booleans()))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    g = rng.standard_normal((n, 7))
+    stragglers = rng.choice(n, size=s, replace=False)
+    fastest = np.setdiff1d(np.arange(n), stragglers)
+    a = decode_weights(b, fastest)
+    assert np.allclose(a @ (b @ g), g.sum(axis=0), atol=1e-6)
+    assert np.allclose(a[stragglers], 0.0)
+
+
+def test_gradient_code_bank_caches():
+    gc = GradientCode(n_workers=8)
+    b1, b2 = gc.b(3), gc.b(3)
+    assert b1 is b2
+    fastest = gc.fastest_set(3, np.array([5, 1, 9, 2, 8, 3, 7, 4.0]))
+    assert len(fastest) == 5
+    a = gc.decode(3, fastest)
+    assert np.allclose(a @ gc.b(3), 1.0, atol=1e-8)

@@ -1,0 +1,95 @@
+"""Guard the exact assigned architecture numbers (vs typos/drift)."""
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs
+
+ASSIGNED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+    "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+    "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+    "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+    "gemma3-27b": (62, 5376, 32, 16, 21504, 262144),
+    "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+    "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    "whisper-base": (6, 512, 8, 8, 2048, 51865),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+}
+
+
+def test_all_ten_assigned_archs_registered():
+    archs = set(list_archs())
+    assert set(ASSIGNED) <= archs
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_assigned_numbers(arch):
+    l, d, h, kv, ff, v = ASSIGNED[arch]
+    cfg = get_config(arch)
+    assert cfg.n_layers == l
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab == v
+
+
+def test_arch_specific_features():
+    assert get_config("gemma-2b").head_dim == 256
+    ds = get_config("deepseek-v3-671b")
+    assert ds.mla is not None and ds.mtp_depth == 1
+    moe = [l.moe for l in ds.layers if l.moe]
+    assert len(moe) == 58 and moe[0].num_experts == 256 and moe[0].top_k == 8
+    assert moe[0].num_shared == 1 and moe[0].d_ff == 2048
+    mx = get_config("mixtral-8x22b")
+    assert all(l.moe and l.moe.num_experts == 8 and l.moe.top_k == 2
+               for l in mx.layers)
+    assert all(l.window == 4096 for l in mx.layers)
+    g3 = get_config("gemma3-27b")
+    assert sum(l.window is None for l in g3.layers) == 10  # ~1 in 6 global
+    g2 = get_config("gemma2-27b")
+    assert g2.attn_softcap == 50.0 and g2.final_softcap == 30.0
+    jb = get_config("jamba-v0.1-52b")
+    assert sum(l.mixer == "attn" for l in jb.layers) == 4  # 1:7
+    assert sum(l.moe is not None for l in jb.layers) == 16  # every other
+    xl = get_config("xlstm-1.3b")
+    assert sum(l.mixer == "slstm" for l in xl.layers) == 6  # 7:1
+    assert all(not l.use_ffn for l in xl.layers)
+    wh = get_config("whisper-base")
+    assert wh.encoder is not None and wh.encoder.n_layers == 6
+    assert all(l.cross_source for l in wh.layers)
+    vl = get_config("llama-3.2-vision-11b")
+    assert sum(l.mixer == "cross_attn" for l in vl.layers) == 8
+    qw = get_config("qwen1.5-32b")
+    assert qw.qkv_bias
+
+
+def test_input_shapes_assigned():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+def test_param_counts_match_names():
+    """Abstract param counts are in the right ballpark for the names."""
+    import jax
+    from repro.train.state import abstract_train_state
+    from repro.models.params import count_params
+    expect = {"deepseek-v3-671b": (600e9, 750e9),
+              "mixtral-8x22b": (120e9, 160e9),
+              "gemma3-27b": (24e9, 32e9),
+              "gemma2-27b": (24e9, 32e9),
+              "qwen1.5-32b": (28e9, 36e9),
+              "gemma-2b": (2e9, 3.5e9),
+              "llama-3.2-vision-11b": (8e9, 13e9),
+              "xlstm-1.3b": (1.0e9, 2.5e9),
+              "whisper-base": (0.05e9, 0.12e9)}
+    for arch, (lo, hi) in expect.items():
+        shapes, _ = abstract_train_state(get_config(arch))
+        n = count_params(shapes.params)
+        assert lo <= n <= hi, (arch, n)

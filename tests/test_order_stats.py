@@ -1,0 +1,41 @@
+"""Order statistics: eq. (11), Lemma 2 (eq. 8) vs quadrature vs MC."""
+import numpy as np
+import pytest
+
+from repro.core import ShiftedExponential, StragglerDistribution
+
+
+def test_eq11_matches_monte_carlo():
+    dist = ShiftedExponential(mu=1e-3, t0=50.0)
+    closed = dist.expected_order_stats(12)
+    mc = StragglerDistribution.expected_order_stats(dist, 12)
+    assert np.abs(mc / closed - 1).max() < 0.01
+
+
+def test_eq8_matches_quadrature_small_n():
+    dist = ShiftedExponential(mu=1e-2, t0=5.0)
+    quad = dist._tprime_quad(10)
+    eq8 = dist._tprime_eq8(10)
+    assert np.abs(quad / eq8 - 1).max() < 1e-6
+
+
+def test_tprime_matches_monte_carlo():
+    dist = ShiftedExponential(mu=1e-3, t0=50.0)
+    quad = dist.inv_expected_inv_order_stats(8)
+    mc = StragglerDistribution.inv_expected_inv_order_stats(dist, 8)
+    assert np.abs(mc / quad - 1).max() < 0.01
+
+
+def test_order_stats_monotone():
+    dist = ShiftedExponential(mu=1e-3, t0=50.0)
+    t = dist.expected_order_stats(30)
+    tp = dist.inv_expected_inv_order_stats(30)
+    assert (np.diff(t) > 0).all()
+    assert (np.diff(tp) > 0).all()
+    # harmonic mean of order stats <= mean of order stats
+    assert (tp <= t + 1e-9).all()
+
+
+def test_eq8_requires_positive_shift():
+    with pytest.raises(ValueError):
+        ShiftedExponential(mu=1.0, t0=0.0)._tprime_eq8(4)

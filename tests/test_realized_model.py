@@ -1,0 +1,87 @@
+"""Beyond-paper realized cost model + capped/realization-aware solvers."""
+import numpy as np
+import pytest
+
+from repro.core import ShiftedExponential, round_x, solve_xf, spsg
+from repro.core.runtime import (expected_tau_hat_realized,
+                                subgradient_tau_hat_realized,
+                                tau_hat_realized_batch)
+from repro.core.solvers import closed_form_x_capped
+
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+
+
+def test_capped_solver_feasible_and_respects_cap():
+    n, total = 16, 20_000
+    for cap in [0, 1, 3, 7, 15]:
+        x = solve_xf(DIST, n, total, s_cap=cap)
+        assert np.isclose(x.sum(), total)
+        assert (x >= 0).all()
+        assert (x[cap + 1:] == 0).all()
+    # cap = N-1 reduces to the unconstrained closed form
+    x_full = solve_xf(DIST, n, total)
+    x_cap = solve_xf(DIST, n, total, s_cap=n - 1)
+    np.testing.assert_allclose(x_full, x_cap)
+
+
+def test_capped_equalizes_active_terms():
+    n, total, cap = 12, 5000, 4
+    t = DIST.expected_order_stats(n)
+    x = closed_form_x_capped(t, total, cap)
+    work = np.cumsum((np.arange(n) + 1) * x)
+    terms = (t[::-1] * work)[: cap + 1]
+    assert terms.max() / terms.min() - 1 < 1e-6
+
+
+def test_realized_single_level_formula():
+    """Single-level realized runtime == (s+1) * L * E[T_(N-s)]."""
+    n, total = 8, 1000
+    draws = DIST.sample(np.random.default_rng(0), (40_000, n))
+    t_mean = np.sort(draws, axis=1).mean(axis=0)
+    for s in [0, 3, 7]:
+        x = np.zeros(n); x[s] = total
+        got = tau_hat_realized_batch(x, draws).mean()
+        want = (s + 1) * total * t_mean[n - s - 1] * (50 / n)
+        assert abs(got / want - 1) < 0.02, (s, got, want)
+
+
+def test_realized_uncoded_matches_paper_model():
+    """With everything at level 0 both models agree (one pass, wait all)."""
+    from repro.core import tau_hat_batch
+    n, total = 6, 300
+    x = np.zeros(n); x[0] = total
+    draws = DIST.sample(np.random.default_rng(1), (10_000, n))
+    np.testing.assert_allclose(tau_hat_realized_batch(x, draws),
+                               tau_hat_batch(x, draws), rtol=1e-12)
+
+
+def test_realized_subgradient_is_valid():
+    """Convexity: f(y) >= f(x) + g.(y-x) for the sampled objective."""
+    n, total = 6, 600
+    rng = np.random.default_rng(2)
+    draws = DIST.sample(rng, (4000, n))
+    for _ in range(10):
+        x = rng.dirichlet(np.ones(n)) * total
+        y = rng.dirichlet(np.ones(n)) * total
+        # evaluate on the SAME draws so the inequality is exact
+        fx = tau_hat_realized_batch(x, draws, active_only=False).mean()
+        fy = tau_hat_realized_batch(y, draws, active_only=False).mean()
+        g = subgradient_tau_hat_realized(x, draws)
+        assert fy >= fx + g @ (y - x) - 1e-6 * max(fx, fy)
+
+
+def test_realized_spsg_runs():
+    res = spsg(DIST, 8, 1000, n_iters=300, batch=32, model="realized")
+    assert np.isclose(res.x.sum(), 1000)
+    assert (res.x >= 0).all()
+
+
+def test_single_real_solver_beats_uncoded_under_realized_model():
+    from repro.train.coded import solve_blocks
+    n, total = 16, 20_000
+    x = solve_blocks("single-real", DIST, n, total)
+    assert x.sum() == total and (x > 0).sum() == 1
+    unc = np.zeros(n); unc[0] = total
+    ev_x = expected_tau_hat_realized(x.astype(float), DIST, n, n_samples=30_000)
+    ev_u = expected_tau_hat_realized(unc, DIST, n, n_samples=30_000)
+    assert ev_x < ev_u

@@ -1,0 +1,110 @@
+"""Solvers: Theorem 2/3 closed forms, SPSG, projection, equivalences."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ShiftedExponential, UniformStraggler, brute_force_int, closed_form_x,
+    expected_tau_hat, project_block_simplex, round_x, s_to_x, solve_xf,
+    solve_xt, spsg, tau, tau_hat, tau_hat_batch, x_to_s,
+)
+
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+
+
+def test_closed_form_feasible_and_equalizing():
+    n, total = 20, 20_000
+    t = DIST.expected_order_stats(n)
+    x = closed_form_x(t, total)
+    assert x.shape == (n,)
+    assert (x >= 0).all()
+    assert np.isclose(x.sum(), total)
+    work = np.cumsum((np.arange(n) + 1) * x)
+    terms = t[::-1] * work
+    assert terms.max() / terms.min() - 1 < 1e-9  # water-filling equalizes
+
+
+def test_theorem1_change_of_variables():
+    x = np.array([3, 0, 2, 1])
+    s = x_to_s(x, 6)
+    assert s.tolist() == [0, 0, 0, 2, 2, 3]
+    assert s_to_x(s, 4).tolist() == [3, 0, 2, 1]
+    times = np.array([2.0, 5.0, 1.0, 9.0])
+    assert np.isclose(tau(s, times), tau_hat(x, times))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.data())
+def test_tau_equivalence_property(n, data):
+    total = data.draw(st.integers(n, 20))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    x = rng.multinomial(total, np.ones(n) / n)
+    times = rng.uniform(0.5, 10.0, n)
+    s = x_to_s(x, total)
+    assert np.isclose(tau(s, times), tau_hat(x, times), rtol=1e-12)
+
+
+def test_projection_correctness():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        v = rng.standard_normal(rng.integers(2, 30)) * 10
+        total = float(rng.uniform(0.5, 50))
+        x = project_block_simplex(v, total)
+        assert (x >= -1e-12).all()
+        assert np.isclose(x.sum(), total)
+        # optimality: compare against random feasible points
+        for _ in range(20):
+            y = rng.dirichlet(np.ones(len(v))) * total
+            assert np.linalg.norm(x - v) <= np.linalg.norm(y - v) + 1e-9
+
+
+def test_spsg_beats_uniform_and_matches_brute_force_scale():
+    n, total = 4, 12
+    dist = UniformStraggler(lo=0.5, hi=4.0)
+    res = spsg(dist, n, total, n_iters=1500, batch=64, rng=0)
+    x_int = round_x(res.x, total)
+    x_bf, v_bf = brute_force_int(dist, n, total, n_samples=4000, rng=1)
+    v_spsg = expected_tau_hat(x_int.astype(float), dist, n, n_samples=40_000, rng=2)
+    v_opt = expected_tau_hat(x_bf.astype(float), dist, n, n_samples=40_000, rng=2)
+    assert v_spsg <= v_opt * 1.10  # within 10% of the exhaustive optimum
+    uniform = np.zeros(n); uniform[0] = total
+    v_unc = expected_tau_hat(uniform, dist, n, n_samples=40_000, rng=2)
+    assert v_spsg < v_unc
+
+
+def test_monotone_lemma1_on_brute_force():
+    """Lemma 1: an optimal s* is nondecreasing <=> block structure exists.
+    Brute-force the tiny problem in s-space and check monotone optimum."""
+    n, total = 3, 4
+    dist = UniformStraggler(lo=0.5, hi=3.0)
+    draws = dist.sample(np.random.default_rng(0), (4000, n))
+    best, best_s = np.inf, None
+    import itertools
+
+    for s in itertools.product(range(n), repeat=total):
+        v = float(np.mean([tau(np.array(s), t) for t in draws[:400]]))
+        if v < best:
+            best, best_s = v, s
+    assert tuple(sorted(best_s)) == best_s  # nondecreasing
+
+
+def test_xf_xt_close_to_spsg():
+    n, total = 20, 20_000
+    xt = solve_xt(DIST, n, total)
+    xf = solve_xf(DIST, n, total)
+    res = spsg(DIST, n, total, n_iters=2000, batch=128, rng=0)
+    draws = DIST.sample(np.random.default_rng(9), (30_000, n))
+    ev = lambda x: tau_hat_batch(np.asarray(x, float), draws).mean()
+    v_opt = ev(res.x)
+    assert ev(xt) <= v_opt * 1.35  # Thm 4: O((log N)^2) gap; tight in practice
+    assert ev(xf) <= v_opt * 1.35
+    assert ev(xf) <= ev(xt) * 1.05  # x_f ordering (soft)
+
+
+def test_round_x_exact_sum():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        n = rng.integers(2, 20)
+        x = rng.dirichlet(np.ones(n)) * 1000
+        r = round_x(x, 1000)
+        assert r.sum() == 1000 and (r >= 0).all()
