@@ -7,12 +7,13 @@ from __future__ import annotations
 
 import numpy as np
 
-from .paper_common import L, dist_at, proposed_solutions
+from .paper_common import L, SPSG_ITERS, display, dist_at, proposed_solutions
 
 
-def run(n_workers: int = 20, mu: float = 1e-3, verbose: bool = True) -> dict:
+def run(n_workers: int = 20, mu: float = 1e-3, verbose: bool = True,
+        spsg_iters: int = SPSG_ITERS) -> dict:
     dist = dist_at(mu)
-    sols = proposed_solutions(dist, n_workers)
+    sols = proposed_solutions(dist, n_workers, spsg_iters=spsg_iters)
     checks = {}
     for name, x in sols.items():
         frac_ends = (x[0] + x[-1]) / L
@@ -22,13 +23,13 @@ def run(n_workers: int = 20, mu: float = 1e-3, verbose: bool = True) -> dict:
             "ends_dominate": bool(frac_ends > 0.4),
         }
         if verbose:
-            print(f"{name:18s} x0={x[0]:6d} x_N-1={x[-1]:6d} "
+            print(f"{display(name):18s} x0={x[0]:6d} x_N-1={x[-1]:6d} "
                   f"ends={frac_ends:.2%}  x={x.tolist()}")
     return checks
 
 
-def main():
-    checks = run()
+def main(smoke: bool = False):
+    checks = run(spsg_iters=600 if smoke else SPSG_ITERS)
     assert all(c["ends_dominate"] for c in checks.values()), \
         "Fig.3 claim failed: first+last blocks should dominate"
     print("fig3: OK — first+last blocks dominate in all three solutions")

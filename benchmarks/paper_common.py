@@ -1,5 +1,11 @@
 """Shared setup for the paper-figure benchmarks (§VI settings):
 T_n ~ shifted-exponential(mu, t0=50), M=50, b=1, L=2e4 coordinates.
+
+Scheme handling goes through the ``repro.core`` registry: tables are
+keyed by *canonical* scheme names ("xf", "spsg", "tandon-alpha", ...);
+``display()`` maps them to the paper's legend strings for printing, and
+``get_scheme(name).kind`` separates proposed from baseline schemes in
+the figure validations.
 """
 from __future__ import annotations
 
@@ -7,11 +13,10 @@ import numpy as np
 
 from repro.core import (
     ShiftedExponential,
-    expected_tau_hat,
+    get_scheme,
     round_x,
     scheme_bank,
-    solve_xf,
-    solve_xt,
+    solve_scheme,
     spsg,
     tau_hat_batch,
 )
@@ -20,6 +25,12 @@ T0 = 50.0
 L = 20_000
 EVAL_SAMPLES = 40_000
 EVAL_SEED = 20210
+SPSG_ITERS = 3_000
+
+
+def display(name: str) -> str:
+    """Plot-legend string for a canonical scheme key."""
+    return get_scheme(name).display
 
 
 def dist_at(mu: float) -> ShiftedExponential:
@@ -32,17 +43,31 @@ def eval_runtime(x, dist, n_workers: int, n_samples: int = EVAL_SAMPLES,
     return float(tau_hat_batch(np.asarray(x, np.float64), draws).mean())
 
 
-def proposed_solutions(dist, n_workers: int, total: int = L, rng: int = 0):
-    """x_dagger (SPSG), x_t (Thm 2), x_f (Thm 3) — integer-rounded."""
-    xd = spsg(dist, n_workers, total, n_iters=3000, batch=128, rng=rng).x
+def proposed_solutions(dist, n_workers: int, total: int = L, rng: int = 0,
+                       spsg_iters: int = SPSG_ITERS) -> dict:
+    """The paper's partitions, keyed canonically: spsg, xt, xf.
+
+    SPSG runs at figure-grade iteration counts here (the registry's
+    default is tuned for trainer startup latency, not publication
+    curves); xt/xf route through the registry unchanged.
+    """
+    xd = spsg(dist, n_workers, total, n_iters=spsg_iters, batch=128, rng=rng).x
     return {
-        "x_dagger (SPSG)": round_x(xd, total),
-        "x_t (Thm 2)": round_x(solve_xt(dist, n_workers, total), total),
-        "x_f (Thm 3)": round_x(solve_xf(dist, n_workers, total), total),
+        "spsg": round_x(xd, total),
+        "xt": solve_scheme("xt", dist, n_workers, total, rng=rng),
+        "xf": solve_scheme("xf", dist, n_workers, total, rng=rng),
     }
 
 
-def all_schemes(dist, n_workers: int, total: int = L, rng: int = 0):
-    out = proposed_solutions(dist, n_workers, total, rng)
+def all_schemes(dist, n_workers: int, total: int = L, rng: int = 0,
+                spsg_iters: int = SPSG_ITERS) -> dict:
+    out = proposed_solutions(dist, n_workers, total, rng, spsg_iters)
     out.update(scheme_bank(dist, n_workers, total, rng=rng))
     return out
+
+
+def split_kinds(names) -> tuple[list, list]:
+    """(proposed, baseline) canonical keys, registry-classified."""
+    prop = [k for k in names if get_scheme(k).kind == "proposed"]
+    base = [k for k in names if get_scheme(k).kind == "baseline"]
+    return prop, base

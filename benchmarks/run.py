@@ -2,39 +2,64 @@
 
 ``PYTHONPATH=src python -m benchmarks.run`` prints a ``name,metric,value``
 CSV summary plus the per-benchmark detail above it.
+
+``--smoke`` runs the same validations on reduced settings (small N,
+fewer SPSG iterations, fewer Monte-Carlo samples) in well under a
+minute — the CI fast path wired into scripts/check.sh, so regressions
+in the fig-reproduction pipeline surface without a full run.
 """
 from __future__ import annotations
 
+import argparse
 import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced settings for CI (small N, few samples)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args(argv)
+
     from . import fig3_partitions, fig4a_runtime_vs_n, fig4b_runtime_vs_mu
     from . import kernel_bench, roofline
 
+    known = {"fig3_partitions", "fig4a_runtime_vs_n", "fig4b_runtime_vs_mu",
+             "kernel_bench", "roofline"}
     rows = []
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+    unknown = only - known
+    if unknown:
+        raise SystemExit(f"--only: unknown benchmark(s) {sorted(unknown)}; "
+                         f"known: {sorted(known)}")
 
-    def section(name, fn):
+    def section(name, fn, **kw):
+        if only and name not in only:
+            return
         print(f"\n===== {name} =====")
         t0 = time.perf_counter()
         try:
-            fn()
+            fn(**kw)
             rows.append((name, "seconds", f"{time.perf_counter()-t0:.1f}", "ok"))
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
             rows.append((name, "seconds", f"{time.perf_counter()-t0:.1f}",
                          f"FAIL {type(e).__name__}"))
 
-    section("fig3_partitions", fig3_partitions.main)       # Fig. 3
-    section("fig4a_runtime_vs_n", fig4a_runtime_vs_n.main) # Fig. 4(a)
-    section("fig4b_runtime_vs_mu", fig4b_runtime_vs_mu.main)  # Fig. 4(b)
-    section("kernel_bench", kernel_bench.main)             # encode/decode hot spot
-    section("roofline", roofline.main)                     # §Roofline table
+    smoke = args.smoke
+    section("fig3_partitions", fig3_partitions.main, smoke=smoke)        # Fig. 3
+    section("fig4a_runtime_vs_n", fig4a_runtime_vs_n.main, smoke=smoke)  # Fig. 4(a)
+    section("fig4b_runtime_vs_mu", fig4b_runtime_vs_mu.main, smoke=smoke)  # Fig. 4(b)
+    section("kernel_bench", kernel_bench.main, smoke=smoke)  # encode/decode hot spot
+    section("roofline", roofline.main)                       # §Roofline table
 
     print("\nname,metric,value,status")
     for r in rows:
         print(",".join(str(x) for x in r))
+    if any(r[3].startswith("FAIL") for r in rows):
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

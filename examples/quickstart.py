@@ -1,11 +1,12 @@
-"""Quickstart: the paper in two minutes.
+"""Quickstart: the paper in two minutes, through the public API.
 
-1. Optimize a block partition x for N straggling workers (Thm 2/3 + SPSG).
+1. The `Scheme` registry: every partition scheme (Thm 2/3, SPSG, the
+   §VI baselines) behind one name-keyed solve call.
 2. Build the per-level Tandon cyclic codes and show exact decode.
 3. Fig. 1-style timeline for one straggler realization: coordinate
    gradient coding finishes earlier than single-level gradient coding.
-4. Train a tiny LM for a few steps with the coded trainer and verify the
-   coded gradient equals the uncoded data-parallel gradient exactly.
+4. `Plan.build` end-to-end: train-step gradients under the plan equal
+   the uncoded data-parallel gradient exactly; JSON round-trip.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,29 +16,30 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import (
-    GradientCode, ShiftedExponential, expected_tau_hat, round_x, solve_xf,
-    solve_xt, spsg, tau, x_to_s, completion_trace,
+    GradientCode, Plan, ShiftedExponential, available_schemes,
+    completion_trace, expected_tau_hat, get_scheme, solve_scheme, tau,
 )
 from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
-from repro.train.coded import StragglerSim, build_plan, make_coded_grad_fn, uncoded_grad_fn
+from repro.train.coded import make_coded_grad_fn, uncoded_grad_fn
 from repro.train.state import init_train_state
 
 
-def part1_partition():
+def part1_schemes():
     print("=" * 72)
-    print("1) Optimal block partition (N=8 workers, L=1000 coordinate units)")
+    print("1) Scheme registry (N=8 workers, L=1000 coordinate units)")
     n, total = 8, 1000
     dist = ShiftedExponential(mu=1e-3, t0=50.0)
-    for name, x in [
-        ("x_t  (Thm 2)", round_x(solve_xt(dist, n, total), total)),
-        ("x_f  (Thm 3)", round_x(solve_xf(dist, n, total), total)),
-        ("x_dagger SPSG", round_x(spsg(dist, n, total, n_iters=800).x, total)),
-    ]:
+    print(f"  available_schemes() -> {available_schemes()}")
+    ranked = []
+    for name in available_schemes():
+        x = solve_scheme(name, dist, n, total)   # uniform signature, any scheme
         ev = expected_tau_hat(np.asarray(x, float), dist, n, n_samples=20000)
-        print(f"  {name}: x={x.tolist()}  E[tau]={ev:.3g}")
-    uncoded = np.zeros(n); uncoded[0] = total
-    print(f"  uncoded      : E[tau]={expected_tau_hat(uncoded, dist, n, n_samples=20000):.3g}"
-          f"  (waits for the slowest worker)")
+        ranked.append((ev, name, x))
+    for ev, name, x in sorted(ranked):
+        scheme = get_scheme(name)  # display/kind are metadata on the scheme
+        print(f"  {scheme.display:28s} [{scheme.kind:8s}] "
+              f"E[tau]={ev:10.4g}  x={x.tolist()}")
+    print("  (proposed partitions rank first; 'uniform' waits for the slowest)")
 
 
 def part2_codes():
@@ -72,15 +74,15 @@ def part3_timeline():
 
 def part4_coded_training():
     print("=" * 72)
-    print("4) Coded training step == uncoded data-parallel step (exactly)")
+    print("4) Plan.build: coded step == uncoded data-parallel step (exactly)")
     cfg = get_config("gc-lm-110m").reduced(n_layers=2, d_model=128)
     dist = ShiftedExponential(mu=1e-3, t0=50.0)
     n = 4
     state, _ = init_train_state(cfg, jax.random.PRNGKey(0))
-    plan = build_plan(state.params, dist, n, solver="xf")
+    plan = Plan.build(state.params, dist, n, scheme="xf")
     data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8))
     wb = jnp.asarray(coded_worker_batches(data, 0, n, plan.s_max))
-    sim = StragglerSim(plan, dist, seed=7)
+    sim = plan.simulator(dist, seed=7)
     dec_w, rec = sim.step()
     g_coded = jax.jit(make_coded_grad_fn(cfg, plan, mode="sim"))(state.params, wb, dec_w)
     shards = jnp.asarray(np.stack([data.shard(0, i, n) for i in range(n)]))
@@ -93,10 +95,15 @@ def part4_coded_training():
           f"(speedup {rec['tau_uncoded']/rec['tau_coded']:.2f}x on this draw; "
           f">1x in expectation)")
     print(f"  max |coded_grad - uncoded_grad| = {err:.2e}")
+    # JSON round-trip: a restored plan decodes bit-identically
+    plan2 = Plan.from_dict(plan.to_dict())
+    times = dist.sample(np.random.default_rng(1), (n,))
+    assert np.array_equal(plan.decode_weights(times), plan2.decode_weights(times))
+    print("  Plan.to_dict/from_dict round-trip: decode weights bit-identical")
 
 
 if __name__ == "__main__":
-    part1_partition()
+    part1_schemes()
     part2_codes()
     part3_timeline()
     part4_coded_training()

@@ -1,6 +1,10 @@
 """Batched serving demo: prefill + KV-cache decode on a reduced config.
 
   PYTHONPATH=src python examples/serve_decode.py --arch gemma3-27b --new 24
+
+With ``--ckpt <dir>`` it also restores the coding ``Plan`` a coded
+training run stored in its checkpoint metadata (examples/train_lm.py) —
+the checkpoint/serve half of the Plan round-trip.
 """
 import argparse
 import os
@@ -12,9 +16,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config
+from repro.api import generate, get_config, restore_plan
 from repro.models.model import init_model
-from repro.serve.engine import generate
 
 
 def main():
@@ -23,7 +26,17 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--new", type=int, default=24)
+    ap.add_argument("--ckpt", default="",
+                    help="checkpoint dir: restore the training run's coding Plan")
     args = ap.parse_args()
+
+    if args.ckpt:
+        plan = restore_plan(args.ckpt)
+        if plan is None:
+            print(f"ckpt {args.ckpt}: no coding plan in metadata")
+        else:
+            print(f"restored plan: scheme={plan.scheme} N={plan.n_workers} "
+                  f"s_max={plan.s_max} x={plan.x.tolist()}")
 
     cfg = get_config(args.arch).reduced()
     key = jax.random.PRNGKey(0)

@@ -11,8 +11,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.core import (
-    BernoulliStraggler, ParetoStraggler, ShiftedExponential, round_x,
-    scheme_bank, solve_xf, solve_xt, spsg, tau_hat_batch,
+    BernoulliStraggler, ParetoStraggler, ShiftedExponential,
+    available_schemes, get_scheme, solve_scheme, tau_hat_batch,
 )
 
 L = 2000
@@ -20,18 +20,13 @@ EVAL = 20_000
 
 
 def evaluate(dist, n_workers, rng=0):
+    """Every registered scheme, solved by name through the registry."""
     draws = dist.sample(np.random.default_rng(123), (EVAL, n_workers))
     out = {}
-    sols = {
-        "x_f (Thm 3)": round_x(solve_xf(dist, n_workers, L), L),
-        "x_t (Thm 2)": round_x(solve_xt(dist, n_workers, L), L),
-        "x_dagger": round_x(spsg(dist, n_workers, L, n_iters=1200, rng=rng).x, L),
-    }
-    sols.update(scheme_bank(dist, n_workers, L, rng=rng))
-    unc = np.zeros(n_workers); unc[0] = L
-    sols["uncoded (wait slowest)"] = unc
-    for name, x in sols.items():
-        out[name] = float(tau_hat_batch(np.asarray(x, float), draws).mean())
+    for name in available_schemes():
+        x = solve_scheme(name, dist, n_workers, L, rng=rng)
+        out[get_scheme(name).display] = float(
+            tau_hat_batch(np.asarray(x, float), draws).mean())
     return out
 
 

@@ -2,7 +2,7 @@
 gradient coding over N simulated straggler workers.
 
   PYTHONPATH=src python examples/train_lm.py \
-      --arch gc-lm-110m --steps 300 --workers 4 --solver xf --seq 256
+      --arch gc-lm-110m --steps 300 --workers 4 --scheme xf --seq 256
 
 The run logs the training loss AND the simulated-runtime ledger:
 tau_coded (this paper) vs tau_uncoded (wait-for-slowest data parallel),
@@ -22,8 +22,8 @@ import numpy as np
 
 from repro.checkpoint.ckpt import save_checkpoint
 from repro.configs import get_config
-from repro.core import ShiftedExponential, expected_tau_hat
-from repro.train.coded import build_plan
+from repro.core import (Plan, ShiftedExponential, available_schemes,
+                        expected_tau_hat, get_scheme)
 from repro.train.trainer import TrainConfig, Trainer
 
 
@@ -32,8 +32,10 @@ def main():
     ap.add_argument("--arch", default="gc-lm-110m")
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--workers", type=int, default=4)
-    ap.add_argument("--solver", default="xf",
-                    choices=["xf", "xt", "spsg", "single-bcgc", "tandon", "uniform"])
+    ap.add_argument("--scheme", "--solver", dest="scheme", default="xf",
+                    metavar="SCHEME",
+                    help="canonical scheme name or registered alias; one of "
+                         + ", ".join(available_schemes()))
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--mu", type=float, default=1e-3)
@@ -45,6 +47,9 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--log", default="artifacts/train_lm_log.json")
     args = ap.parse_args()
+    # resolve aliases ("tandon", "x_f", ...) early, with the registry's
+    # unknown-scheme error naming the available names
+    args.scheme = get_scheme(args.scheme).name
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -55,7 +60,7 @@ def main():
     cfg_t = TrainConfig(lr=args.lr, warmup=max(args.steps // 10, 10),
                         total_steps=args.steps)
     trainer = Trainer(cfg, cfg_t, dist, n_workers=args.workers,
-                      solver=args.solver, global_batch=args.global_batch, seed=0)
+                      scheme=args.scheme, global_batch=args.global_batch, seed=0)
     # clamp the data seq len to the CLI seq
     from repro.data.pipeline import DataConfig, SyntheticTokens
     trainer.data = SyntheticTokens(DataConfig(
@@ -64,7 +69,7 @@ def main():
     from repro.models.params import count_params
     n_params = count_params(trainer.state.params)
     print(f"arch={cfg.name} params={n_params/1e6:.1f}M workers={args.workers} "
-          f"solver={args.solver} s_max={trainer.plan.s_max} "
+          f"scheme={args.scheme} s_max={trainer.plan.s_max} "
           f"x={trainer.plan.x.tolist()}")
 
     t0 = time.time()
@@ -77,19 +82,22 @@ def main():
 
     # compare the chosen partition against alternatives under the same dist
     print("\npartition comparison (expected tau, same distribution):")
-    for solver in ["xf", "xt", "single-bcgc", "uniform"]:
-        plan = build_plan(state.params, dist, args.workers, solver=solver)
+    for scheme in ["xf", "xt", "single-bcgc", "uniform"]:
+        plan = Plan.build(state.params, dist, args.workers, scheme=scheme)
         ev = expected_tau_hat(plan.x.astype(float), dist, args.workers,
                               n_samples=20000)
-        tag = " <- this run" if solver == args.solver else ""
-        print(f"  {solver:12s} E[tau]={ev:.4g}{tag}")
+        tag = " <- this run" if scheme == args.scheme else ""
+        print(f"  {scheme:12s} E[tau]={ev:.4g}{tag}")
 
     os.makedirs(os.path.dirname(args.log), exist_ok=True)
     with open(args.log, "w") as f:
         json.dump({"args": vars(args), "summary": summary,
                    "history": trainer.history[-50:], "params": n_params}, f, indent=2)
+    # the plan rides in the checkpoint metadata: serve restores it with
+    # repro.serve.engine.restore_plan (bit-identical decode weights)
     path = save_checkpoint(args.ckpt, int(state.step), state,
-                           extra={"arch": cfg.name, "loss": losses[-1]})
+                           extra={"arch": cfg.name, "loss": losses[-1],
+                                  "plan": trainer.plan.to_dict()})
     print(f"checkpoint: {path}\nlog: {args.log}")
     assert losses[-1] < losses[0], "loss did not decrease"
 

@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Repo check: tier-1 tests + smoke benchmarks (the CI fast path).
+#
+#   scripts/check.sh            # full tier-1 pytest + smoke benchmarks
+#   scripts/check.sh --fast     # skip the slow SPMD subprocess tests
+#
+# The smoke benchmarks re-validate the paper's Fig. 3 / 4(a) / 4(b)
+# claims on reduced settings (small N, few SPSG iters / MC samples), so
+# regressions in the fig-reproduction path are caught without a full run.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+PYTEST_ARGS=(-x -q)
+if [[ "${1:-}" == "--fast" ]]; then
+  PYTEST_ARGS+=(--ignore=tests/test_spmd.py --ignore=tests/test_moe_manual.py)
+fi
+
+echo "== tier-1 pytest =="
+python -m pytest "${PYTEST_ARGS[@]}"
+
+echo
+echo "== smoke benchmarks =="
+python -m benchmarks.run --smoke
+
+echo
+echo "check.sh: ALL OK"

@@ -1,0 +1,72 @@
+"""Slim public facade: one import for the whole reproduction.
+
+    from repro import api
+    plan = api.Plan.build(params, api.ShiftedExponential(mu=1e-3, t0=50.0),
+                          n_workers=8, scheme="xf")
+
+Math-only names (schemes, plans, distributions, cost model) import
+eagerly from ``repro.core``; trainer/serving entry points that pull in
+the jax model stack resolve lazily on first attribute access, so
+``import repro.api`` stays cheap for solver-only users (benchmarks,
+notebooks).
+"""
+from __future__ import annotations
+
+from repro.core import (  # noqa: F401
+    CostModel,
+    GradientCode,
+    Plan,
+    PlanSimulator,
+    Scheme,
+    UNIT_RESOLUTION,
+    available_schemes,
+    get_scheme,
+    leaf_costs_of,
+    register_scheme,
+    scheme_bank,
+    solve_scheme,
+)
+from repro.core.distributions import (  # noqa: F401
+    BernoulliStraggler,
+    EmpiricalStraggler,
+    LogNormalStraggler,
+    ParetoStraggler,
+    ShiftedExponential,
+    StragglerDistribution,
+    UniformStraggler,
+)
+
+_LAZY = {
+    # trainer stack (imports jax models)
+    "Trainer": ("repro.train.trainer", "Trainer"),
+    "TrainConfig": ("repro.train.trainer", "TrainConfig"),
+    "make_coded_train_step": ("repro.train.trainer", "make_coded_train_step"),
+    "make_train_step": ("repro.train.trainer", "make_train_step"),
+    "make_coded_grad_fn": ("repro.train.coded", "make_coded_grad_fn"),
+    "uncoded_grad_fn": ("repro.train.coded", "uncoded_grad_fn"),
+    "build_plan": ("repro.train.coded", "build_plan"),
+    # serving
+    "generate": ("repro.serve.engine", "generate"),
+    "make_serve_step": ("repro.serve.engine", "make_serve_step"),
+    "restore_plan": ("repro.serve.engine", "restore_plan"),
+    # configs
+    "get_config": ("repro.configs", "get_config"),
+    "list_archs": ("repro.configs", "list_archs"),
+}
+
+__all__ = sorted(
+    [k for k in dict(globals()) if not k.startswith("_")] + list(_LAZY)
+)
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

@@ -3,11 +3,19 @@
 Optimization-based Block Coordinate Gradient Coding (Wang et al.,
 GLOBECOM 2021): coordinate/block gradient coding schemes, the runtime
 cost model, the block-partition optimizers, and the paper's baselines.
+
+Public API surface (see docs/API.md):
+
+  * the ``Scheme`` registry — ``available_schemes()``, ``get_scheme``,
+    ``solve_scheme``, ``@register_scheme`` — every partition scheme
+    behind one uniform solve signature;
+  * ``Plan`` — solve -> assign -> code bound to a model's leaves, with
+    JSON round-trip (``to_dict``/``from_dict``) and the eq.(2) runtime
+    simulator (``plan.simulate``).
 """
 from .assignment import assign_levels_to_layers, round_x, s_to_x, x_to_s
 from .baselines import (
     ferdinand_x,
-    scheme_bank,
     single_bcgc,
     tandon_alpha_level,
     tandon_alpha_x,
@@ -44,10 +52,20 @@ from .solvers import (
     SPSGResult,
     brute_force_int,
     closed_form_x,
+    closed_form_x_capped,
     project_block_simplex,
     solve_xf,
     solve_xt,
     spsg,
 )
+from .schemes import (
+    Scheme,
+    available_schemes,
+    get_scheme,
+    register_scheme,
+    scheme_bank,
+    solve_scheme,
+)
+from .plan import Plan, PlanSimulator, UNIT_RESOLUTION, leaf_costs_of
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -33,6 +33,15 @@ __all__ = [
 ]
 
 
+def scheme_bank(dist, n_workers: int, total: int, rng=0,
+                cost: CostModel = DEFAULT_COST) -> dict:
+    """Deprecated shim — the registry-backed bank lives in
+    ``repro.core.schemes`` (canonical keys, display metadata)."""
+    from .schemes import scheme_bank as _bank  # deferred: avoid import cycle
+
+    return _bank(dist, n_workers, total, rng=rng, cost=cost)
+
+
 def single_bcgc(
     dist, n_workers: int, total: int, n_samples: int = 50_000, rng=0, cost: CostModel = DEFAULT_COST
 ) -> np.ndarray:
@@ -119,13 +128,3 @@ def ferdinand_x(
     return x
 
 
-def scheme_bank(dist, n_workers: int, total: int, rng=0, cost: CostModel = DEFAULT_COST):
-    """All baseline x's keyed by the paper's legend names."""
-    return {
-        "single-BCGC": single_bcgc(dist, n_workers, total, rng=rng, cost=cost),
-        "Tandon et al. (alpha)": tandon_alpha_x(dist, n_workers, total, rng=rng),
-        "Ferdinand et al. (r=L)": ferdinand_x(dist, n_workers, total, n_layers=total, rng=rng),
-        "Ferdinand et al. (r=L/2)": ferdinand_x(
-            dist, n_workers, total, n_layers=max(total // 2, 1), rng=rng
-        ),
-    }

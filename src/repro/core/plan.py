@@ -1,0 +1,252 @@
+"""First-class coding `Plan`: solve -> assign -> code, one object.
+
+A ``Plan`` binds a scheme's block solution x to a concrete model: the
+per-leaf redundancy levels s_j (cost-weighted layer blocks, the paper's
+footnote-2/3 extension), the per-level Tandon cyclic codes, and each
+worker's dense coding rows.  It is the unit the trainer consumes, the
+benchmarks score, and the serving stack restores:
+
+    plan = Plan.build(params, dist, n_workers=8, scheme="xf")
+    sim  = plan.simulate(dist, steps=100)         # eq.(2) runtime ledger
+    blob = plan.to_dict()                         # JSON round-trip
+    plan2 = Plan.from_dict(blob)                  # bit-identical decode
+
+``Plan.build`` accepts a parameter pytree (leaves priced by size), a
+pytree of ShapeDtypeStructs (dry-run, zero allocation), or a plain 1-D
+cost vector.  Serialization embeds the per-level code matrices, so a
+restored plan decodes bit-identically for the same straggler
+realization (checkpoint/serve reuse).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .assignment import assign_levels_to_layers
+from .coding import GradientCode
+from .runtime import CostModel, DEFAULT_COST
+from .schemes import solve_scheme
+
+__all__ = ["Plan", "PlanSimulator", "UNIT_RESOLUTION", "leaf_costs_of"]
+
+# L: abstract coordinate-unit resolution for the block optimizer.  The
+# paper's L is the raw parameter count; only the *fractions* x/L matter
+# for the layer-block mapping, so a fixed resolution keeps solvers fast.
+UNIT_RESOLUTION = 20_000
+
+
+def leaf_costs_of(params_or_costs) -> np.ndarray:
+    """Per-leaf cost vector from a param pytree / shape tree / 1-D costs.
+
+    Pytree leaves with a ``.shape`` are priced by element count (the
+    gradient-compute proxy the paper's footnote-4 uses); a plain 1-D
+    array or list of scalars is taken as the costs themselves.
+    """
+    if isinstance(params_or_costs, np.ndarray) and params_or_costs.ndim == 1:
+        return np.asarray(params_or_costs, np.float64)
+    import jax  # deferred: keep repro.core importable without a device runtime
+
+    leaves = jax.tree.leaves(params_or_costs)
+    out = []
+    for leaf in leaves:
+        shape = getattr(leaf, "shape", None)
+        out.append(float(np.prod(shape)) if shape is not None else float(leaf))
+    if not out:
+        raise ValueError("params_or_costs has no leaves")
+    return np.asarray(out, np.float64)
+
+
+@dataclass
+class Plan:
+    """A solved, model-bound block coordinate gradient coding plan."""
+
+    n_workers: int
+    x: np.ndarray                 # (N,) integer block sizes over total_units
+    leaf_levels: np.ndarray       # per-leaf redundancy level s_j (flat order)
+    leaf_costs: np.ndarray        # per-leaf cost weights (normalized)
+    used_levels: np.ndarray       # sorted unique levels actually in use
+    s_max: int
+    b_rows: np.ndarray            # (N, n_used, K) worker coding coeffs over its shards
+    codes: GradientCode = field(repr=False, default=None)
+    scheme: str = "xf"
+    total_units: int = UNIT_RESOLUTION
+
+    # ------------------------------------------------------------ construction
+    @classmethod
+    def build(cls, params_or_costs, dist, n_workers: int, *,
+              scheme: str = "xf", rng: int = 0, cost: CostModel = DEFAULT_COST,
+              prefer_fractional: bool = False, s_cap=None,
+              total: int = UNIT_RESOLUTION) -> "Plan":
+        """Optimize the partition and bind it to this model's leaves.
+
+        ``scheme`` is any name from ``available_schemes()`` (or a
+        registered alias).  ``prefer_fractional=False``: the trainer
+        always uses Tandon's cyclic code so every level shares the one
+        cyclic shard allocation I_n.  ``s_cap`` bounds the top
+        redundancy level (SPMD work/tolerance co-design).
+        """
+        x = solve_scheme(scheme, dist, n_workers, total, cost=cost, rng=rng,
+                         s_cap=s_cap)
+        costs = leaf_costs_of(params_or_costs)
+        levels = assign_levels_to_layers(costs, x)
+        used = np.unique(levels)
+        s_max = int(used.max())
+        codes = GradientCode(n_workers, rng_seed=rng,
+                             prefer_fractional=prefer_fractional)
+        b_rows = cls._pack_rows(codes, n_workers, used, s_max)
+        return cls(
+            n_workers=n_workers, x=x, leaf_levels=levels,
+            leaf_costs=costs / costs.sum(), used_levels=used, s_max=s_max,
+            b_rows=b_rows, codes=codes, scheme=scheme, total_units=int(total),
+        )
+
+    @staticmethod
+    def _pack_rows(codes: GradientCode, n_workers: int, used: np.ndarray,
+                   s_max: int) -> np.ndarray:
+        """Dense (N, n_used, K) rows: worker n's cyclic-window coeffs."""
+        k = s_max + 1
+        b_rows = np.zeros((n_workers, len(used), k))
+        for n in range(n_workers):
+            for i, s in enumerate(used):
+                row = codes.b(int(s))[n]  # support {n..n+s} cyclic
+                for slot in range(int(s) + 1):
+                    b_rows[n, i, slot] = row[(n + slot) % n_workers]
+        return b_rows
+
+    # --------------------------------------------------------------- queries
+    @property
+    def k_shards(self) -> int:
+        return self.s_max + 1
+
+    @property
+    def solver(self) -> str:
+        """Back-compat alias for the legacy CodingPlan field name."""
+        return self.scheme
+
+    def level_index(self) -> np.ndarray:
+        """Per-leaf index into used_levels (static, for jit closures)."""
+        lookup = {int(s): i for i, s in enumerate(self.used_levels)}
+        return np.asarray([lookup[int(s)] for s in self.leaf_levels], np.int64)
+
+    def decode_weights(self, times: np.ndarray) -> np.ndarray:
+        """(n_used, N) decode vectors for a realization T (zeros on the
+        s slowest workers per level)."""
+        out = np.zeros((len(self.used_levels), self.n_workers))
+        for i, s in enumerate(self.used_levels):
+            fastest = self.codes.fastest_set(int(s), times)
+            out[i] = self.codes.decode(int(s), fastest)
+        return out
+
+    def full_decode_weights(self) -> np.ndarray:
+        """Decode weights when nobody straggles (all workers kept)."""
+        return self.decode_weights(np.arange(self.n_workers, dtype=np.float64))
+
+    def tau(self, times: np.ndarray, cost: CostModel = DEFAULT_COST) -> float:
+        """Eq. (2) on the leaf-block layout: per-leaf cost weights w_j
+        stand in for the unit coordinates (footnote-4 extension)."""
+        s = self.leaf_levels
+        t_sorted = np.sort(np.asarray(times, np.float64))
+        t_term = t_sorted[self.n_workers - s - 1]
+        work = np.cumsum((s + 1.0) * self.leaf_costs) * self.total_units
+        return float(cost.scale(self.n_workers) * np.max(t_term * work))
+
+    # ------------------------------------------------------------ simulation
+    def simulator(self, dist, seed: int = 0,
+                  cost: CostModel = DEFAULT_COST) -> "PlanSimulator":
+        """Per-step straggler sampler + runtime ledger for this plan."""
+        return PlanSimulator(self, dist, seed=seed, cost=cost)
+
+    def simulate(self, dist, steps: int, *, seed: int = 0,
+                 cost: CostModel = DEFAULT_COST) -> "PlanSimulator":
+        """Run ``steps`` straggler realizations; returns the simulator
+        with its eq.(2) ledger filled (``.ledger``, ``.summary()``)."""
+        sim = self.simulator(dist, seed=seed, cost=cost)
+        for _ in range(steps):
+            sim.step()
+        return sim
+
+    # --------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        """JSON-serializable snapshot, embedding the per-level code
+        matrices so a restored plan decodes bit-identically."""
+        bank = {str(int(s)): self.codes.b(int(s)).tolist()
+                for s in self.used_levels}
+        return {
+            "version": 1,
+            "scheme": self.scheme,
+            "n_workers": int(self.n_workers),
+            "total_units": int(self.total_units),
+            "x": np.asarray(self.x).astype(np.int64).tolist(),
+            "leaf_levels": np.asarray(self.leaf_levels).astype(int).tolist(),
+            "leaf_costs": np.asarray(self.leaf_costs, np.float64).tolist(),
+            "used_levels": np.asarray(self.used_levels).astype(int).tolist(),
+            "s_max": int(self.s_max),
+            "b_rows": np.asarray(self.b_rows, np.float64).tolist(),
+            "codes": {
+                "rng_seed": int(self.codes.rng_seed),
+                "prefer_fractional": bool(self.codes.prefer_fractional),
+                "bank": bank,
+            },
+        }
+
+    @classmethod
+    def from_dict(cls, blob: dict) -> "Plan":
+        codes_meta = blob["codes"]
+        codes = GradientCode(
+            n_workers=int(blob["n_workers"]),
+            rng_seed=int(codes_meta["rng_seed"]),
+            prefer_fractional=bool(codes_meta["prefer_fractional"]),
+        )
+        for s, mat in codes_meta["bank"].items():
+            codes._bank[int(s)] = np.asarray(mat, np.float64)
+        return cls(
+            n_workers=int(blob["n_workers"]),
+            x=np.asarray(blob["x"], np.int64),
+            leaf_levels=np.asarray(blob["leaf_levels"], np.int64),
+            leaf_costs=np.asarray(blob["leaf_costs"], np.float64),
+            used_levels=np.asarray(blob["used_levels"], np.int64),
+            s_max=int(blob["s_max"]),
+            b_rows=np.asarray(blob["b_rows"], np.float64),
+            codes=codes,
+            scheme=blob["scheme"],
+            total_units=int(blob.get("total_units", UNIT_RESOLUTION)),
+        )
+
+
+class PlanSimulator:
+    """Per-step straggler realization + runtime ledger (the paper's
+    evaluation instrument, §VI) — absorbed from train.coded.StragglerSim
+    so benchmarks/serving can score plans without the jax trainer."""
+
+    def __init__(self, plan: Plan, dist, seed: int = 0,
+                 cost: CostModel = DEFAULT_COST):
+        self.plan, self.dist, self.cost = plan, dist, cost
+        self.rng = np.random.default_rng(seed)
+        self.ledger: list[dict] = []
+
+    def step(self):
+        """Sample T ~ dist; returns (decode weights (n_used, N) f32,
+        ledger record) and appends to the eq.(2) ledger."""
+        plan = self.plan
+        times = self.dist.sample(self.rng, (plan.n_workers,))
+        dec_w = plan.decode_weights(times)
+        t_coded = plan.tau(times, self.cost)
+        # uncoded synchronous data-parallel: wait for the slowest worker
+        t_uncoded = float(self.cost.scale(plan.n_workers)
+                          * times.max() * plan.total_units)
+        rec = {"times": times, "tau_coded": t_coded, "tau_uncoded": t_uncoded}
+        self.ledger.append(rec)
+        return np.asarray(dec_w, np.float32), rec
+
+    def summary(self) -> dict:
+        if not self.ledger:
+            return {}
+        coded = np.asarray([r["tau_coded"] for r in self.ledger])
+        unc = np.asarray([r["tau_uncoded"] for r in self.ledger])
+        return {
+            "steps": len(self.ledger),
+            "mean_tau_coded": float(coded.mean()),
+            "mean_tau_uncoded": float(unc.mean()),
+            "speedup": float(unc.mean() / coded.mean()),
+        }

@@ -1,0 +1,234 @@
+"""The `Scheme` registry: every way of partitioning the L coordinates.
+
+The paper's contribution is *which* redundancy scheme splits the L
+coordinates over the N blocks — Theorem 2/3 closed forms, the SPSG
+optimum, and the §VI baselines (Tandon et al. ICML'17, Ferdinand et
+al., single-level BCGC).  Each one is registered here under a canonical
+programmatic key with a uniform solve signature
+
+    solve(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0, s_cap=None)
+        -> x  (N,) nonnegative, sum(x) == total
+
+so trainers, benchmarks and examples pick schemes by name instead of
+hand-wired if/elif ladders.  Plot-legend names are *display metadata*
+(``Scheme.display``), not keys.
+
+    >>> from repro.core import available_schemes, solve_scheme
+    >>> available_schemes()
+    ['ferdinand-l', 'ferdinand-l2', 'single-bcgc', 'single-real',
+     'spsg', 'tandon-alpha', 'uniform', 'xf', 'xt']
+    >>> x = solve_scheme("xf", dist, n_workers=8, total=1000)
+
+Third parties extend the system with ``@register_scheme("my-scheme")``;
+``Plan.build(..., scheme="my-scheme")`` then routes through it
+unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from .assignment import round_x
+from .baselines import ferdinand_x, single_bcgc, tandon_alpha_x
+from .runtime import CostModel, DEFAULT_COST, tau_hat_realized_batch
+from .solvers import solve_xf, solve_xt, spsg
+
+__all__ = [
+    "Scheme",
+    "register_scheme",
+    "get_scheme",
+    "available_schemes",
+    "solve_scheme",
+    "scheme_bank",
+]
+
+
+@dataclass(frozen=True)
+class Scheme:
+    """A registered block-partition scheme.
+
+    ``solve`` has the uniform signature
+    ``(dist, n_workers, total, *, cost, rng, s_cap) -> x``.
+    ``kind`` groups schemes for reporting: 'proposed' (the paper's
+    optimized partitions), 'baseline' (§VI comparison schemes),
+    'uncoded' (no redundancy), 'extra' (beyond-paper).
+    ``display`` is the plot-legend name (presentation only — never a
+    lookup key).
+    """
+
+    name: str
+    solve: Callable = field(repr=False)
+    display: str = ""
+    kind: str = "extra"
+    description: str = ""
+    aliases: tuple = ()
+
+
+_REGISTRY: dict[str, Scheme] = {}
+_ALIASES: dict[str, str] = {}
+
+
+def register_scheme(name: str, *, display: Optional[str] = None,
+                    kind: str = "extra", aliases: tuple = (),
+                    description: str = ""):
+    """Decorator: register ``fn`` as scheme ``name``.
+
+    ``fn(dist, n_workers, total, *, cost, rng, s_cap) -> x``.  Aliases
+    (legacy solver strings, plot-legend names) resolve to the canonical
+    name in ``get_scheme``/``solve_scheme`` but never appear in
+    ``available_schemes()``.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY or name in _ALIASES:
+            raise ValueError(f"scheme {name!r} already registered")
+        scheme = Scheme(name=name, solve=fn, display=display or name,
+                        kind=kind, description=description,
+                        aliases=tuple(aliases))
+        for a in scheme.aliases:
+            if a in _REGISTRY or a in _ALIASES:
+                raise ValueError(
+                    f"alias {a!r} collides with an existing scheme or alias")
+        _REGISTRY[name] = scheme
+        for a in scheme.aliases:
+            _ALIASES[a] = name
+        return fn
+
+    return deco
+
+
+def get_scheme(name: str) -> Scheme:
+    """Look up a scheme by canonical name or alias (canonical wins)."""
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    key = _ALIASES.get(name)
+    if key is None:
+        raise KeyError(
+            f"unknown scheme {name!r}; available: {available_schemes()}")
+    return _REGISTRY[key]
+
+
+def available_schemes() -> list[str]:
+    """Sorted canonical names of every registered scheme."""
+    return sorted(_REGISTRY)
+
+
+def solve_scheme(name: str, dist, n_workers: int, total: int, *,
+                 cost: CostModel = DEFAULT_COST, rng=0, s_cap=None,
+                 integer: bool = True) -> np.ndarray:
+    """Solve the block partition with the named scheme.
+
+    This is the registry-routed replacement for the old
+    ``train.coded.solve_blocks`` if/elif ladder.  ``integer=True``
+    largest-remainder-rounds the solution so ``sum(x) == total``
+    exactly.
+    """
+    scheme = get_scheme(name)
+    x = scheme.solve(dist, n_workers, total, cost=cost, rng=rng, s_cap=s_cap)
+    x = np.asarray(x, np.float64)
+    return round_x(x, total) if integer else x
+
+
+def scheme_bank(dist, n_workers: int, total: int, rng=0,
+                cost: CostModel = DEFAULT_COST) -> dict:
+    """All §VI baseline x's, keyed by *canonical* scheme name.
+
+    The paper's plot-legend strings live on each registered scheme's
+    ``display`` attribute — presentation metadata, not lookup keys.
+    """
+    return {
+        name: _REGISTRY[name].solve(dist, n_workers, total, cost=cost,
+                                    rng=rng, s_cap=None)
+        for name in available_schemes()
+        if _REGISTRY[name].kind == "baseline"
+    }
+
+
+# ------------------------------------------------------------ registrations
+@register_scheme("xt", display="x_t (Thm 2)", kind="proposed", aliases=("x_t",),
+                 description="Theorem 2 closed form at t_n = E[T_(n)]")
+def _solve_xt(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0, s_cap=None):
+    return solve_xt(dist, n_workers, total, rng=rng, s_cap=s_cap)
+
+
+@register_scheme("xf", display="x_f (Thm 3)", kind="proposed", aliases=("x_f",),
+                 description="Theorem 3 closed form at t'_n = 1/E[1/T_(n)]")
+def _solve_xf(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0, s_cap=None):
+    return solve_xf(dist, n_workers, total, rng=rng, s_cap=s_cap)
+
+
+@register_scheme("spsg", display="x_dagger (SPSG)", kind="proposed",
+                 aliases=("x_dagger",),
+                 description="stochastic projected subgradient on Problem 3")
+def _solve_spsg(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0, s_cap=None):
+    # s_cap is honored by the closed forms; the subgradient iteration has
+    # no level cap (matches the legacy solve_blocks behavior).
+    return spsg(dist, n_workers, total, n_iters=2000, batch=128, rng=rng,
+                cost=cost).x
+
+
+@register_scheme("uniform", display="uncoded", kind="uncoded",
+                 aliases=("uncoded",),
+                 description="no redundancy: every coordinate at level 0")
+def _solve_uniform(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0,
+                   s_cap=None):
+    x = np.zeros(n_workers)
+    x[0] = total
+    return x
+
+
+@register_scheme("single-bcgc", display="single-BCGC", kind="baseline",
+                 aliases=("single-BCGC",),
+                 description="Problem 2 restricted to one redundancy level")
+def _solve_single_bcgc(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0,
+                       s_cap=None):
+    return single_bcgc(dist, n_workers, total, rng=rng, cost=cost)
+
+
+@register_scheme("tandon-alpha", display="Tandon et al. (alpha)",
+                 kind="baseline", aliases=("tandon", "Tandon et al. (alpha)"),
+                 description="gradient coding of [1], alpha-partial-straggler level")
+def _solve_tandon(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0,
+                  s_cap=None):
+    return tandon_alpha_x(dist, n_workers, total, rng=rng)
+
+
+@register_scheme("ferdinand-l", display="Ferdinand et al. (r=L)",
+                 kind="baseline", aliases=("Ferdinand et al. (r=L)",),
+                 description="hierarchical coded computation [8], r = L layers")
+def _solve_ferdinand_l(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0,
+                       s_cap=None):
+    return ferdinand_x(dist, n_workers, total, n_layers=total, rng=rng)
+
+
+@register_scheme("ferdinand-l2", display="Ferdinand et al. (r=L/2)",
+                 kind="baseline", aliases=("Ferdinand et al. (r=L/2)",),
+                 description="hierarchical coded computation [8], r = L/2 layers")
+def _solve_ferdinand_l2(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0,
+                        s_cap=None):
+    return ferdinand_x(dist, n_workers, total, n_layers=max(total // 2, 1),
+                       rng=rng)
+
+
+@register_scheme("single-real", display="single level (realized cost)",
+                 kind="extra",
+                 description="argmin_s of the NN/SPMD realized runtime at one level")
+def _solve_single_real(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0,
+                       s_cap=None):
+    # realized-cost-optimal single level (EXPERIMENTS §Perf H3): the
+    # NN/SPMD slot realization prices level s at (s+1) full passes, so
+    # argmin_s E[T_(N-s)] * (s+1).
+    draws = dist.sample(np.random.default_rng(rng), (30_000, n_workers))
+    top = n_workers if s_cap is None else min(int(s_cap) + 1, n_workers)
+    best_s, best_v = 0, np.inf
+    for s in range(top):
+        xs = np.zeros(n_workers)
+        xs[s] = total
+        v = float(tau_hat_realized_batch(xs, draws, cost).mean())
+        if v < best_v:
+            best_s, best_v = s, v
+    x = np.zeros(n_workers)
+    x[best_s] = total
+    return x

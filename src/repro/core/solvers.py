@@ -20,6 +20,7 @@ __all__ = [
     "solve_xt",
     "solve_xf",
     "closed_form_x",
+    "closed_form_x_capped",
     "project_block_simplex",
     "spsg",
     "SPSGResult",

@@ -1,0 +1,82 @@
+"""Forward-compat shims for older jax runtimes (feature-detected, idempotent).
+
+The codebase targets the current jax surface (``jax.make_mesh(...,
+axis_types=...)``, ``jax.sharding.AxisType``, ``jax.shard_map(...,
+axis_names=..., check_vma=...)``).  The pinned toolchain in some
+containers ships jax 0.4.x, where the same capabilities live under
+different names (``jax.experimental.shard_map`` with ``auto=``/
+``check_rep=``, meshes without axis types).  ``install()`` bridges the
+gap so one source tree runs on both; on a current jax it is a no-op.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+_INSTALLED = False
+
+#: True when running on a jax 0.4.x runtime via these shims.  Some SPMD
+#: features degrade there: the era's XLA aborts on sort/gather HLOs
+#: inside *partial*-manual shard_map subgroups, so callers should fall
+#: back to fully-manual regions (see train/coded.py).
+IS_LEGACY_JAX = not hasattr(jax, "shard_map")
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _wrap_make_mesh(orig):
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *args, **kwargs):
+        kwargs.pop("axis_types", None)  # 0.4.x meshes are implicitly Auto
+        return orig(axis_shapes, axis_names, *args, **kwargs)
+
+    return make_mesh
+
+
+def _shard_map_compat(f, *, mesh, in_specs, out_specs, axis_names=None,
+                      check_vma=None, check_rep=None):
+    """``jax.shard_map`` semantics on top of ``jax.experimental.shard_map``.
+
+    ``axis_names`` (the *manual* axes) maps to 0.4.x's complementary
+    ``auto`` set; ``check_vma`` is the new name for ``check_rep``.
+    """
+    from jax.experimental.shard_map import shard_map as _sm
+
+    if axis_names is None:
+        auto = frozenset()
+    else:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    if check_rep is None:
+        check_rep = bool(check_vma) if check_vma is not None else False
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               auto=auto, check_rep=check_rep)
+
+
+def install() -> None:
+    global _INSTALLED
+    if _INSTALLED:
+        return
+    _INSTALLED = True
+
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+
+    try:
+        accepts_axis_types = "axis_types" in inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):
+        accepts_axis_types = True  # unknown signature: leave untouched
+    if not accepts_axis_types:
+        jax.make_mesh = _wrap_make_mesh(jax.make_mesh)
+
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map_compat
+
+
+install()

@@ -32,7 +32,8 @@ from repro.launch.specs import input_specs
 from repro.models.model import train_loss
 from repro.models.params import AxesLeaf, count_params
 from repro.serve.engine import make_serve_step
-from repro.train.coded import build_plan, make_coded_grad_fn
+from repro.core import Plan
+from repro.train.coded import make_coded_grad_fn
 from repro.train.state import abstract_train_state, state_shardings
 from repro.train.trainer import TrainConfig, make_coded_train_step, make_train_step
 
@@ -96,7 +97,7 @@ def build_case(cfg, shape, mesh, *, coded: bool, n_workers: int,
     if shape.kind == "train" and coded:
         dist = ShiftedExponential(mu=1e-3, t0=50.0)
         s_cap = (coded_opts or {}).pop("s_cap", None) if coded_opts else None
-        plan = build_plan(state_shapes.params, dist, n_workers, solver="xf",
+        plan = Plan.build(state_shapes.params, dist, n_workers, scheme="xf",
                           s_cap=s_cap)
         extra.update(s_max=plan.s_max, n_levels=len(plan.used_levels),
                      x=[int(v) for v in plan.x])

@@ -173,9 +173,15 @@ def _operand_names(rest: str) -> list[str]:
         if depth >= 1:
             curname += ch
     body = curname
+    # older XLA prints operand shapes inline ("f32[8,4]{1,0} %name, ...");
+    # there the %-prefixed tokens are exactly the operand names.  Newer
+    # dumps print bare comma-separated names.
+    pct = re.findall(r"%([\w.\-]+)", body)
+    if pct:
+        return pct
     for tok in body.split(","):
-        tok = tok.strip().lstrip("%")
-        if tok and re.match(r"^[\w.\-]+$", tok):
+        tok = tok.strip()
+        if tok and re.match(r"^[\w.\-]+$", tok) and not tok.isdigit():
             out.append(tok)
     return out
 
@@ -339,7 +345,11 @@ class _Analyzer:
             called = _called_comps(op.rest)
             for c in called:
                 self._acc(cost, self.comp_cost(c), 1.0)
-            cost.bytes += self._fusion_io_bytes(comp, op, called)
+            if oc == "fusion":
+                # boundary = the fusion's HBM traffic; plain call/map
+                # wrappers (old XLA CPU parallel-call) are transparent —
+                # their interior fusions/ops charge their own bytes.
+                cost.bytes += self._fusion_io_bytes(comp, op, called)
             return
         if oc in COLLECTIVES or oc in ("all-reduce-start", "all-gather-start"):
             kind = oc.replace("-start", "")

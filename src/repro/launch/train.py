@@ -2,7 +2,7 @@
 
   PYTHONPATH=src python -m repro.launch.train \
       --arch gemma-2b [--reduced] --steps 100 --workers 4 \
-      --solver xf --data-par 1 --model-par 1 [--coded/--uncoded]
+      --scheme xf --data-par 1 --model-par 1 [--coded/--uncoded]
 
 Builds a (data, model) mesh over the available devices, initializes the
 TrainState with the config's sharding rules, and runs either the coded
@@ -23,12 +23,11 @@ import numpy as np
 
 from repro.checkpoint.ckpt import save_checkpoint
 from repro.configs import get_config
-from repro.core import ShiftedExponential
+from repro.core import Plan, ShiftedExponential
 from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
 from repro.dist.sharding import make_rules, use_mesh
 from repro.launch.mesh import make_local_mesh
 from repro.models.params import count_params
-from repro.train.coded import StragglerSim, build_plan
 from repro.train.state import init_train_state
 from repro.train.trainer import TrainConfig, make_coded_train_step, make_train_step
 
@@ -39,7 +38,8 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--workers", type=int, default=4)
-    ap.add_argument("--solver", default="xf")
+    ap.add_argument("--scheme", "--solver", dest="scheme", default="xf",
+                    help="any name from repro.core.available_schemes()")
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--data-par", type=int, default=1)
@@ -75,8 +75,9 @@ def main():
                     print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
                           f"({time.perf_counter()-t0:.2f}s)")
         else:
-            plan = build_plan(state.params, dist, args.workers, args.solver)
-            sim = StragglerSim(plan, dist)
+            plan = Plan.build(state.params, dist, args.workers,
+                              scheme=args.scheme)
+            sim = plan.simulator(dist)
             mode = "spmd" if args.data_par == args.workers else "sim"
             step = jax.jit(make_coded_train_step(
                 cfg, cfg_t, plan, mesh=mesh if mode == "spmd" else None,
@@ -95,7 +96,9 @@ def main():
                           f"({time.perf_counter()-t0:.2f}s)")
             print("ledger:", json.dumps(sim.summary()))
     if args.ckpt:
-        print("saved:", save_checkpoint(args.ckpt, int(state.step), state))
+        extra = {} if args.uncoded else {"plan": plan.to_dict()}
+        print("saved:", save_checkpoint(args.ckpt, int(state.step), state,
+                                        extra=extra))
 
 
 if __name__ == "__main__":

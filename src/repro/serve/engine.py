@@ -3,19 +3,39 @@
 ``serve_step`` (one token against a seq_len cache) is the unit the
 decode-shape dry-runs lower; ``generate`` drives it end-to-end for the
 examples.  Sampling is deterministic given the key.
+
+``restore_plan`` closes the checkpoint/serve loop of the Plan API: a
+trainer that stored ``plan.to_dict()`` in its checkpoint metadata (see
+examples/train_lm.py, launch/train.py) hands the serving tier the exact
+coding plan — bit-identical decode weights — so a server can keep
+scoring straggler realizations (or resume coded fine-tuning) without
+re-solving the partition.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import Plan
 from repro.models.model import decode_step, init_decode_caches, prefill
 
-__all__ = ["make_serve_step", "generate"]
+__all__ = ["make_serve_step", "generate", "restore_plan"]
+
+
+def restore_plan(ckpt_dir: str, step: Optional[int] = None) -> Optional[Plan]:
+    """Rebuild the coding ``Plan`` stored in a checkpoint's metadata.
+
+    Returns None when the checkpoint predates the Plan API (no "plan"
+    entry in its extra metadata).
+    """
+    from repro.checkpoint.ckpt import load_checkpoint
+
+    _, meta = load_checkpoint(ckpt_dir, step)
+    blob = meta.get("extra", {}).get("plan")
+    return Plan.from_dict(blob) if blob else None
 
 
 def make_serve_step(cfg):

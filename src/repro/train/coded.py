@@ -1,24 +1,18 @@
 """Block coordinate gradient coding integrated into the training loop.
 
-This is the paper's technique as a first-class framework feature:
+The plan math (solve -> assign -> code, the straggler simulator, eq.(2)
+ledger) lives in ``repro.core.plan``/``repro.core.schemes``; this module
+is the jax integration:
 
-  1. ``build_plan``     — optimize the block partition x (Thm 2/3, SPSG,
-                          or a baseline scheme), map blocks onto the
-                          model's parameter leaves (per-leaf redundancy
-                          level s_j, weighted by leaf cost — the paper's
-                          footnote-2/3 "layer block" extension), and
-                          construct the per-level Tandon cyclic codes.
-  2. ``coded_grad_fn``  — the worker-side compute: (s_max+1) per-shard
-                          gradients (the redundancy work), per-leaf
-                          ENCODE with this worker's coding row
-                          (kernels/gc_encode math), then the
-                          decode-weighted reduction that replaces the
-                          data-parallel all-reduce (DESIGN.md §3).
-  3. ``StragglerSim``   — samples T ~ dist per step, derives per-level
-                          fastest sets + decode weights (host-side
-                          numpy lstsq, O(N^3) once per step), and keeps
-                          the eq.(2) runtime ledger that Figs. 3/4 (and
-                          our EXPERIMENTS.md) are scored on.
+  * ``make_coded_grad_fn`` — the worker-side compute: (s_max+1)
+    per-shard gradients (the redundancy work), per-leaf ENCODE with this
+    worker's coding row (kernels/gc_encode math), then the
+    decode-weighted reduction that replaces the data-parallel
+    all-reduce (DESIGN.md §3).
+  * legacy shims — ``CodingPlan``/``build_plan``/``solve_blocks``/
+    ``StragglerSim``/``tau_weighted`` keep the pre-registry entry points
+    working; new code should use ``Plan.build`` and
+    ``repro.core.solve_scheme``.
 
 Two execution modes share the math:
   * ``mode='spmd'``  — jax.shard_map over the mesh 'data' axis (manual),
@@ -33,184 +27,54 @@ global batch, to float tolerance.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import (
-    GradientCode,
-    assign_levels_to_layers,
-    round_x,
-    scheme_bank,
-    solve_xf,
-    solve_xt,
-    spsg,
-    tau_hat,
-)
+from repro.core import Plan, PlanSimulator, UNIT_RESOLUTION, solve_scheme
 from repro.core.runtime import CostModel, DEFAULT_COST
 from repro.models.model import train_loss
 
-__all__ = ["CodingPlan", "build_plan", "StragglerSim", "make_coded_grad_fn",
-           "uncoded_grad_fn", "tau_weighted"]
+__all__ = ["CodingPlan", "build_plan", "solve_blocks", "StragglerSim",
+           "make_coded_grad_fn", "uncoded_grad_fn", "tau_weighted",
+           "UNIT_RESOLUTION"]
 
-# L: abstract coordinate-unit resolution for the block optimizer.  The
-# paper's L is the raw parameter count; only the *fractions* x/L matter
-# for the layer-block mapping, so a fixed resolution keeps solvers fast.
-UNIT_RESOLUTION = 20_000
-
-
-@dataclass
-class CodingPlan:
-    n_workers: int
-    x: np.ndarray                 # (N,) integer block sizes over UNIT_RESOLUTION
-    leaf_levels: np.ndarray       # per-leaf redundancy level s_j (flat order)
-    leaf_costs: np.ndarray        # per-leaf cost weights (normalized)
-    used_levels: np.ndarray       # sorted unique levels actually in use
-    s_max: int
-    b_rows: np.ndarray            # (N, n_used, K) worker coding coeffs over its shards
-    codes: GradientCode = field(repr=False, default=None)
-    solver: str = "xf"
-
-    @property
-    def k_shards(self) -> int:
-        return self.s_max + 1
-
-    def level_index(self) -> np.ndarray:
-        """Per-leaf index into used_levels (static, for jit closures)."""
-        lookup = {int(s): i for i, s in enumerate(self.used_levels)}
-        return np.asarray([lookup[int(s)] for s in self.leaf_levels], np.int64)
-
-    def decode_weights(self, times: np.ndarray) -> np.ndarray:
-        """(n_used, N) decode vectors for a realization T (zeros on the
-        s slowest workers per level)."""
-        out = np.zeros((len(self.used_levels), self.n_workers))
-        for i, s in enumerate(self.used_levels):
-            fastest = self.codes.fastest_set(int(s), times)
-            out[i] = self.codes.decode(int(s), fastest)
-        return out
-
-    def full_decode_weights(self) -> np.ndarray:
-        """Decode weights when nobody straggles (all workers kept)."""
-        return self.decode_weights(np.arange(self.n_workers, dtype=np.float64))
-
-
-def _leaf_costs(params) -> np.ndarray:
-    leaves = jax.tree.leaves(params)
-    return np.asarray([float(np.prod(l.shape)) for l in leaves], np.float64)
+#: Legacy name — ``CodingPlan`` was promoted to ``repro.core.plan.Plan``.
+CodingPlan = Plan
 
 
 def solve_blocks(solver: str, dist, n_workers: int, total: int, rng=0,
                  s_cap=None) -> np.ndarray:
-    if solver == "xt":
-        x = solve_xt(dist, n_workers, total, s_cap=s_cap)
-    elif solver == "xf":
-        x = solve_xf(dist, n_workers, total, s_cap=s_cap)
-    elif solver == "spsg":
-        x = spsg(dist, n_workers, total, n_iters=2000, batch=128, rng=rng).x
-    elif solver == "uniform":  # uncoded: everything at level 0
-        x = np.zeros(n_workers); x[0] = total
-    elif solver == "single-real":
-        # realized-cost-optimal single level (EXPERIMENTS §Perf H3): the
-        # NN/SPMD slot realization prices level s at (s+1) full passes,
-        # so argmin_s E[T_(N-s)] * (s+1).
-        from repro.core.runtime import tau_hat_realized_batch as thr
-        draws = dist.sample(np.random.default_rng(rng), (30_000, n_workers))
-        best_s, best_v = 0, np.inf
-        for s in range(n_workers):
-            xs = np.zeros(n_workers); xs[s] = total
-            v = float(thr(xs, draws).mean())
-            if v < best_v:
-                best_s, best_v = s, v
-        x = np.zeros(n_workers); x[best_s] = total
-    elif solver in ("single-bcgc", "tandon", "ferdinand-l", "ferdinand-l2"):
-        bank = scheme_bank(dist, n_workers, total, rng=rng)
-        key = {"single-bcgc": "single-BCGC", "tandon": "Tandon et al. (alpha)",
-               "ferdinand-l": "Ferdinand et al. (r=L)",
-               "ferdinand-l2": "Ferdinand et al. (r=L/2)"}[solver]
-        x = bank[key]
-    else:
-        raise ValueError(f"unknown solver {solver}")
-    return round_x(np.asarray(x, np.float64), total)
+    """Deprecated shim — routes through the ``repro.core`` scheme
+    registry (``solve_scheme``); every legacy solver string is a
+    registered name or alias there."""
+    return solve_scheme(solver, dist, n_workers, total, rng=rng, s_cap=s_cap)
 
 
 def build_plan(params, dist, n_workers: int, solver: str = "xf", rng: int = 0,
-               prefer_fractional: bool = False, s_cap=None) -> CodingPlan:
-    """Optimize the partition and bind it to this model's parameter leaves.
-
-    ``prefer_fractional=False``: the trainer always uses Tandon's cyclic
-    code so every level shares the one cyclic shard allocation I_n
-    (fractional-repetition's group allocation is level-dependent).
-    ``s_cap``: bound the top redundancy level (SPMD work/tolerance
-    co-design, EXPERIMENTS §Perf H3).
-    """
-    x = solve_blocks(solver, dist, n_workers, UNIT_RESOLUTION, rng, s_cap=s_cap)
-    costs = _leaf_costs(params)
-    levels = assign_levels_to_layers(costs, x)
-    used = np.unique(levels)
-    s_max = int(used.max())
-    codes = GradientCode(n_workers, rng_seed=rng, prefer_fractional=prefer_fractional)
-    k = s_max + 1
-    b_rows = np.zeros((n_workers, len(used), k))
-    for n in range(n_workers):
-        for i, s in enumerate(used):
-            row = codes.b(int(s))[n]  # support {n..n+s} cyclic
-            for slot in range(int(s) + 1):
-                b_rows[n, i, slot] = row[(n + slot) % n_workers]
-    return CodingPlan(
-        n_workers=n_workers, x=x, leaf_levels=levels,
-        leaf_costs=costs / costs.sum(), used_levels=used, s_max=s_max,
-        b_rows=b_rows, codes=codes, solver=solver,
-    )
+               prefer_fractional: bool = False, s_cap=None) -> Plan:
+    """Deprecated shim for ``Plan.build`` (old keyword ``solver`` is the
+    registry's ``scheme``)."""
+    return Plan.build(params, dist, n_workers, scheme=solver, rng=rng,
+                      prefer_fractional=prefer_fractional, s_cap=s_cap)
 
 
-def tau_weighted(plan: CodingPlan, times: np.ndarray,
+def tau_weighted(plan: Plan, times: np.ndarray,
                  cost: CostModel = DEFAULT_COST) -> float:
-    """Eq. (2) on the leaf-block layout: per-leaf cost weights w_j stand
-    in for the unit coordinates (footnote-4 extension)."""
-    s = plan.leaf_levels
-    t_sorted = np.sort(times)
-    t_term = t_sorted[plan.n_workers - s - 1]
-    work = np.cumsum((s + 1.0) * plan.leaf_costs) * UNIT_RESOLUTION
-    return float(cost.scale(plan.n_workers) * np.max(t_term * work))
+    """Deprecated shim for ``Plan.tau`` (eq. (2) on the leaf layout)."""
+    return plan.tau(times, cost)
 
 
-class StragglerSim:
-    """Per-step straggler realization + runtime ledger (the paper's
-    evaluation instrument, §VI)."""
-
-    def __init__(self, plan: CodingPlan, dist, seed: int = 0,
-                 cost: CostModel = DEFAULT_COST):
-        self.plan, self.dist, self.cost = plan, dist, cost
-        self.rng = np.random.default_rng(seed)
-        self.ledger: list[dict] = []
+class StragglerSim(PlanSimulator):
+    """Deprecated shim for ``plan.simulator(...)`` /
+    ``plan.simulate(...)``; keeps the old jnp return type of step()."""
 
     def step(self):
-        times = self.dist.sample(self.rng, (self.plan.n_workers,))
-        dec_w = self.plan.decode_weights(times)
-        t_coded = tau_weighted(self.plan, times, self.cost)
-        # uncoded synchronous data-parallel: wait for the slowest worker
-        t_uncoded = float(self.cost.scale(self.plan.n_workers)
-                          * times.max() * UNIT_RESOLUTION)
-        rec = {"times": times, "tau_coded": t_coded, "tau_uncoded": t_uncoded}
-        self.ledger.append(rec)
+        dec_w, rec = super().step()
         return jnp.asarray(dec_w, jnp.float32), rec
-
-    def summary(self) -> dict:
-        if not self.ledger:
-            return {}
-        coded = np.asarray([r["tau_coded"] for r in self.ledger])
-        unc = np.asarray([r["tau_uncoded"] for r in self.ledger])
-        return {
-            "steps": len(self.ledger),
-            "mean_tau_coded": float(coded.mean()),
-            "mean_tau_uncoded": float(unc.mean()),
-            "speedup": float(unc.mean() / coded.mean()),
-        }
 
 
 # ------------------------------------------------------------------ grads
@@ -323,10 +187,17 @@ def make_coded_grad_fn(cfg, plan: CodingPlan, *, mesh=None, data_axis: str = "da
     # keeping the pod axis manual also keeps all token gathers local,
     # which sidesteps an XLA partial-manual PartitionGather abort).
     assert mesh is not None
+    from repro.dist.compat import IS_LEGACY_JAX
     from repro.dist.sharding import current_rules, make_rules, strip_rules, use_mesh
 
     extra_axes = tuple(a for a in ("pod",) if a in mesh.shape)
     manual_axes = {data_axis, *extra_axes}
+    if IS_LEGACY_JAX:
+        # jax 0.4.x XLA aborts on sort/gather HLOs under a *partial*
+        # manual subgroup; go fully manual instead.  Axes beyond
+        # data/pod then carry replicated copies inside the coded region
+        # (no tensor parallelism there) — numerically identical.
+        manual_axes = set(mesh.shape)
     extra_size = 1
     for a in extra_axes:
         extra_size *= mesh.shape[a]
@@ -377,7 +248,7 @@ def make_coded_grad_fn(cfg, plan: CodingPlan, *, mesh=None, data_axis: str = "da
         # my_batches: (1, K, rows/P, S+1); my_rows: (1, n_used, K)
         # inside the manual region, sharding constraints may only use
         # the remaining auto axes — reinstall stripped rules.
-        with use_mesh(mesh, inner_rules):
+        with use_mesh(mesh, inner_rules, manual=True):
             rank = jax.lax.axis_index(data_axis)
             aux0 = None if my_aux is None else my_aux[0]
             g = _per_shard_grads(cfg, params, my_batches[0], aux0)

@@ -6,8 +6,8 @@
                             decode-weighted reduction, then AdamW.  The
                             decode weights (straggler realization) are a
                             per-step *input*, sampled host-side by
-                            StragglerSim, so one compiled step serves
-                            every realization.
+                            ``plan.simulator(dist)``, so one compiled
+                            step serves every realization.
 ``Trainer``               — loop: data, straggler sim, runtime ledger,
                             checkpointing, metrics.
 """
@@ -22,10 +22,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import Plan
 from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
 from repro.models.model import train_loss
 from repro.optim.optim import adamw_update, clip_by_global_norm, cosine_schedule
-from .coded import CodingPlan, StragglerSim, build_plan, make_coded_grad_fn
+from .coded import make_coded_grad_fn
 from .state import TrainState, init_train_state
 
 
@@ -62,14 +63,14 @@ def make_train_step(cfg, cfg_t: TrainConfig) -> Callable:
     return step
 
 
-def make_coded_train_step(cfg, cfg_t: TrainConfig, plan: CodingPlan, *,
+def make_coded_train_step(cfg, cfg_t: TrainConfig, plan: Plan, *,
                           mesh=None, mode: str = "sim", reduce_mode: str = "psum",
                           grad_dtype=None, param_shapes=None,
                           param_axes=None) -> Callable:
     """Coded step: (state, worker_batches, dec_w) -> (state, metrics).
 
     worker_batches: (N, K, rows, S+1); dec_w: (n_used, N) from
-    StragglerSim.step() — zeros drop the realized stragglers, Tandon
+    ``plan.simulator(...).step()`` — zeros drop the realized stragglers, Tandon
     decode weights rescale the survivors, psum makes it exact.
     reduce_mode/grad_dtype: see make_coded_grad_fn (beyond-paper opts).
     """
@@ -93,14 +94,18 @@ class Trainer:
     """End-to-end coded-training driver (used by examples/train_lm.py)."""
 
     def __init__(self, cfg, cfg_t: TrainConfig, dist, *, n_workers: int = 8,
-                 solver: str = "xf", global_batch: int = 32, seed: int = 0,
-                 mesh=None, mode: str = "sim", data_kind: str = "zipf"):
+                 scheme: str = None, global_batch: int = 32, seed: int = 0,
+                 mesh=None, mode: str = "sim", data_kind: str = "zipf",
+                 solver: str = None):
+        if scheme is None:
+            scheme = solver if solver is not None else "xf"  # `solver` is the legacy kw
         self.cfg, self.cfg_t, self.dist = cfg, cfg_t, dist
         self.n_workers = n_workers
         key = jax.random.PRNGKey(seed)
         self.state, self.axes = init_train_state(cfg, key)
-        self.plan = build_plan(self.state.params, dist, n_workers, solver, rng=seed)
-        self.sim = StragglerSim(self.plan, dist, seed=seed)
+        self.plan = Plan.build(self.state.params, dist, n_workers,
+                               scheme=scheme, rng=seed)
+        self.sim = self.plan.simulator(dist, seed=seed)
         self.data = SyntheticTokens(DataConfig(
             vocab=cfg.vocab, seq_len=min(cfg.max_seq, 512),
             global_batch=global_batch, seed=seed, kind=data_kind))

@@ -8,10 +8,9 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import ShiftedExponential, UniformStraggler
+from repro.core import Plan, ShiftedExponential, UniformStraggler
 from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
-from repro.train.coded import (StragglerSim, build_plan, make_coded_grad_fn,
-                               tau_weighted, uncoded_grad_fn)
+from repro.train.coded import make_coded_grad_fn, uncoded_grad_fn
 from repro.train.state import init_train_state
 from repro.train.trainer import TrainConfig, Trainer
 
@@ -23,7 +22,7 @@ def small_setup():
     cfg = get_config("gc-lm-110m").reduced(n_layers=2, d_model=128)
     state, _ = init_train_state(cfg, jax.random.PRNGKey(0))
     n = 4
-    plan = build_plan(state.params, DIST, n, solver="xf")
+    plan = Plan.build(state.params, DIST, n, scheme="xf")
     data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=48, global_batch=8))
     wb = jnp.asarray(coded_worker_batches(data, 0, n, plan.s_max))
     shards = jnp.asarray(np.stack([data.shard(0, i, n) for i in range(n)]))
@@ -65,23 +64,20 @@ def test_worker_batches_cover_global_batch(small_setup):
 
 def test_runtime_ledger_and_tau_weighted(small_setup):
     cfg, state, plan, wb, g_ref, coded_fn, n = small_setup
-    sim = StragglerSim(plan, DIST, seed=0)
-    for _ in range(50):
-        sim.step()
-    summary = sim.summary()
+    summary = plan.simulate(DIST, 50, seed=0).summary()
     assert summary["steps"] == 50
     assert summary["speedup"] > 1.0  # coded wins in expectation
-    # tau_weighted equals eq.(2) semantics: monotone in times
+    # plan.tau keeps eq.(2) semantics: monotone in times
     t1 = np.ones(n)
     t2 = t1.copy(); t2[-1] = 10.0
-    assert tau_weighted(plan, t2) >= tau_weighted(plan, t1)
+    assert plan.tau(t2) >= plan.tau(t1)
 
 
 def test_trainer_loss_decreases():
     cfg = get_config("gc-lm-110m").reduced(n_layers=2, d_model=128)
     cfg_t = TrainConfig(lr=1e-3, warmup=5, total_steps=40)
     trainer = Trainer(cfg, cfg_t, UniformStraggler(lo=0.5, hi=2.0),
-                      n_workers=3, solver="xt", global_batch=6, seed=0)
+                      n_workers=3, scheme="xt", global_batch=6, seed=0)
     state, summary = trainer.run(25, log_every=0)
     losses = [h["loss"] for h in trainer.history]
     assert losses[-1] < losses[0]
@@ -89,10 +85,12 @@ def test_trainer_loss_decreases():
     assert summary["steps"] == 25
 
 
-def test_plan_respects_solver_choice():
+def test_plan_respects_scheme_choice():
     cfg = get_config("gc-lm-110m").reduced(n_layers=2, d_model=128)
     state, _ = init_train_state(cfg, jax.random.PRNGKey(0))
-    plan_u = build_plan(state.params, DIST, 4, solver="uniform")
+    plan_u = Plan.build(state.params, DIST, 4, scheme="uniform")
     assert plan_u.s_max == 0 and plan_u.used_levels.tolist() == [0]
+    # legacy shim keeps working (old kw name, old scheme alias)
+    from repro.train.coded import build_plan
     plan_b = build_plan(state.params, DIST, 4, solver="single-bcgc")
     assert len(plan_b.used_levels) == 1

@@ -1,0 +1,223 @@
+"""Public API: the Scheme registry and the first-class Plan.
+
+Covers the acceptance surface of the registry redesign: name/alias
+lookup, unknown-scheme errors, simplex feasibility of every registered
+scheme, Plan JSON round-trip (bit-identical decode weights), legacy
+entry-point shims, and the checkpoint->serve plan restore path.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Plan,
+    Scheme,
+    ShiftedExponential,
+    available_schemes,
+    get_scheme,
+    register_scheme,
+    scheme_bank,
+    solve_scheme,
+)
+
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+
+# one leaf-cost vector reused across Plan tests: no jax model needed
+COSTS = np.array([5.0, 3.0, 1.0, 2.0, 9.0, 4.0])
+
+
+# ---------------------------------------------------------------- registry
+def test_available_schemes_canonical():
+    names = available_schemes()
+    assert names == sorted(names)
+    for expected in ("xf", "xt", "spsg", "uniform", "single-bcgc",
+                     "tandon-alpha", "ferdinand-l", "ferdinand-l2",
+                     "single-real"):
+        assert expected in names
+
+
+def test_unknown_scheme_raises_with_listing():
+    with pytest.raises(KeyError) as ei:
+        get_scheme("definitely-not-a-scheme")
+    assert "available" in str(ei.value)
+    with pytest.raises(KeyError):
+        solve_scheme("definitely-not-a-scheme", DIST, 4, 100)
+
+
+def test_aliases_resolve_to_canonical():
+    # every legacy solve_blocks string and plot-legend name resolves
+    for legacy, canonical in [
+        ("tandon", "tandon-alpha"),
+        ("Tandon et al. (alpha)", "tandon-alpha"),
+        ("single-BCGC", "single-bcgc"),
+        ("Ferdinand et al. (r=L)", "ferdinand-l"),
+        ("Ferdinand et al. (r=L/2)", "ferdinand-l2"),
+        ("uncoded", "uniform"),
+        ("x_f", "xf"),
+        ("x_t", "xt"),
+        ("x_dagger", "spsg"),
+    ]:
+        assert get_scheme(legacy).name == canonical
+    # canonical names resolve to themselves
+    for name in available_schemes():
+        assert get_scheme(name).name == name
+
+
+def test_every_scheme_simplex_feasible():
+    n, total = 6, 600
+    for name in available_schemes():
+        x = solve_scheme(name, DIST, n, total, rng=1)
+        assert x.shape == (n,), name
+        assert (x >= 0).all(), name
+        assert int(x.sum()) == total, name
+
+
+def test_s_cap_respected_by_closed_forms():
+    x = solve_scheme("xf", DIST, 8, 800, s_cap=2)
+    assert (x[3:] == 0).all() and x.sum() == 800
+
+
+def test_scheme_bank_canonical_keys_with_display_metadata():
+    bank = scheme_bank(DIST, 8, 100)
+    assert sorted(bank) == ["ferdinand-l", "ferdinand-l2", "single-bcgc",
+                            "tandon-alpha"]
+    for key in bank:
+        scheme = get_scheme(key)
+        assert scheme.kind == "baseline"
+        assert scheme.display  # legend names live on the scheme, not the keys
+
+
+def test_register_scheme_extension_and_duplicate_error():
+    name = "test-only-halfsplit"
+    if name not in available_schemes():
+        @register_scheme(name, display="half/half", kind="extra")
+        def _half(dist, n_workers, total, *, cost=None, rng=0, s_cap=None):
+            x = np.zeros(n_workers)
+            x[0] = total / 2
+            x[-1] = total - x[0]
+            return x
+
+    x = solve_scheme(name, DIST, 4, 101)
+    assert x.sum() == 101 and x[0] + x[-1] == 101
+    assert isinstance(get_scheme(name), Scheme)
+    with pytest.raises(ValueError):
+        register_scheme(name)(lambda *a, **k: None)
+    # an alias may not shadow an existing canonical name or alias
+    with pytest.raises(ValueError):
+        register_scheme("test-only-hijack", aliases=("xf",))(lambda *a, **k: None)
+    with pytest.raises(ValueError):
+        register_scheme("test-only-hijack2", aliases=("tandon",))(lambda *a, **k: None)
+    assert "test-only-hijack" not in available_schemes()
+    assert get_scheme("xf").name == "xf"
+
+
+# -------------------------------------------------------------------- plan
+def test_plan_build_from_costs_and_roundtrip_identical():
+    plan = Plan.build(COSTS, DIST, 4, scheme="xf", rng=3)
+    blob = json.loads(json.dumps(plan.to_dict()))  # through real JSON text
+    plan2 = Plan.from_dict(blob)
+    np.testing.assert_array_equal(plan.leaf_levels, plan2.leaf_levels)
+    np.testing.assert_array_equal(plan.b_rows, plan2.b_rows)
+    np.testing.assert_array_equal(plan.x, plan2.x)
+    assert plan2.scheme == plan.scheme
+    # bit-identical decode weights for the same straggler realization
+    for seed in range(5):
+        times = DIST.sample(np.random.default_rng(seed), (4,))
+        np.testing.assert_array_equal(plan.decode_weights(times),
+                                      plan2.decode_weights(times))
+    np.testing.assert_array_equal(plan.full_decode_weights(),
+                                  plan2.full_decode_weights())
+
+
+def test_plan_simulate_ledger_and_tau():
+    plan = Plan.build(COSTS, DIST, 4, scheme="xt")
+    sim = plan.simulate(DIST, 40, seed=0)
+    s = sim.summary()
+    assert s["steps"] == 40 and len(sim.ledger) == 40
+    assert s["speedup"] > 1.0  # coded wins in expectation
+    t1 = np.ones(4)
+    t2 = t1.copy()
+    t2[-1] = 10.0
+    assert plan.tau(t2) >= plan.tau(t1)  # eq.(2): monotone in times
+
+
+def test_plan_build_accepts_cost_list_and_pytree():
+    p1 = Plan.build([5.0, 3.0, 1.0, 2.0, 9.0, 4.0], DIST, 4, scheme="xf")
+    p2 = Plan.build(COSTS, DIST, 4, scheme="xf")
+    np.testing.assert_array_equal(p1.leaf_levels, p2.leaf_levels)
+    # pytree of shaped leaves is priced by element count
+    tree = {"a": np.zeros((5,)), "b": {"c": np.zeros((3,)), "d": np.zeros((1,)),
+                                       "e": np.zeros((2,)),
+                                       "f": np.zeros((3, 3)),
+                                       "g": np.zeros((4,))}}
+    p3 = Plan.build(tree, DIST, 4, scheme="xf")
+    np.testing.assert_array_equal(p3.leaf_levels, p2.leaf_levels)
+
+
+def test_plan_decode_exact_under_every_pattern():
+    """Registry-built plans decode sum(g) exactly from any N-s workers."""
+    import itertools
+
+    n = 5
+    plan = Plan.build(COSTS, DIST, n, scheme="spsg", rng=0)
+    g = np.random.default_rng(0).standard_normal((n, 7))  # shard gradients
+    for i, s in enumerate(plan.used_levels):
+        b = plan.codes.b(int(s))
+        coded = b @ g
+        for drop in itertools.combinations(range(n), int(s)):
+            times = np.ones(n)
+            times[list(drop)] = 1e9
+            a = plan.decode_weights(times)[i]
+            np.testing.assert_allclose(a @ coded, g.sum(0), atol=1e-8)
+
+
+# ----------------------------------------------------------- legacy shims
+def test_legacy_entry_points_still_work():
+    from repro.train.coded import (CodingPlan, StragglerSim, build_plan,
+                                   solve_blocks, tau_weighted)
+
+    assert CodingPlan is Plan
+    for legacy in ("xt", "xf", "uniform", "single-bcgc", "tandon",
+                   "ferdinand-l", "ferdinand-l2"):
+        x = solve_blocks(legacy, DIST, 4, 100)
+        assert x.sum() == 100
+    with pytest.raises(KeyError):
+        solve_blocks("nope", DIST, 4, 100)
+    plan = build_plan(COSTS, DIST, 4, solver="xt")
+    assert plan.scheme == "xt" and plan.solver == "xt"
+    sim = StragglerSim(plan, DIST, seed=0)
+    dec_w, rec = sim.step()
+    assert dec_w.shape == (len(plan.used_levels), 4)
+    assert tau_weighted(plan, np.ones(4)) == plan.tau(np.ones(4))
+
+
+def test_restore_plan_from_checkpoint(tmp_path):
+    import jax.numpy as jnp
+
+    from repro.checkpoint.ckpt import save_checkpoint
+    from repro.serve.engine import restore_plan
+
+    plan = Plan.build(COSTS, DIST, 4, scheme="xf", rng=5)
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 3, {"w": jnp.zeros((2,))}, extra={"plan": plan.to_dict()})
+    restored = restore_plan(d)
+    np.testing.assert_array_equal(restored.b_rows, plan.b_rows)
+    times = DIST.sample(np.random.default_rng(11), (4,))
+    np.testing.assert_array_equal(restored.decode_weights(times),
+                                  plan.decode_weights(times))
+    # checkpoints without a plan return None
+    save_checkpoint(d, 4, {"w": jnp.zeros((2,))})
+    assert restore_plan(d, 4) is None
+
+
+def test_api_facade_surface():
+    from repro import api
+
+    assert "xf" in api.available_schemes()
+    assert api.Plan is Plan
+    assert callable(api.solve_scheme)
+    # lazy attributes resolve (maps to the trainer stack)
+    assert callable(api.build_plan)
+    with pytest.raises(AttributeError):
+        api.not_a_symbol
