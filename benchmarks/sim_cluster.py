@@ -1,0 +1,106 @@
+"""Cluster-simulator benchmark: statistical cross-check + engine speed.
+
+Validates the repro.sim substrate against the paper's analytics and
+measures its throughput:
+
+  * Monte-Carlo cross-check — the jitted ``repro.sim.mc`` backend's
+    simulated mean runtime must agree with ``expected_tau_hat`` within
+    2% for the ``xf`` and ``xt`` schemes at the Fig. 4 operating point
+    (N=8, shifted-exponential mu=1e-3, t0=50).
+  * Event-engine fidelity — barrier-mode per-round durations equal
+    eq. (5) bit-for-bit on shared draws.
+  * Wave-scheduling gain + engine throughput (rounds/s, events/s).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ShiftedExponential, solve_scheme
+from repro.core.runtime import expected_tau_hat, tau_hat_batch
+
+
+N_WORKERS = 8
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+TOTAL = 20_000
+TOL = 0.02
+
+
+def mc_crosscheck(n_samples: int) -> dict:
+    from repro.sim import mc
+
+    gaps = {}
+    for scheme in ("xf", "xt"):
+        x = solve_scheme(scheme, DIST, N_WORKERS, TOTAL)
+        est = mc.expected_runtime(x, DIST, N_WORKERS, n_samples=n_samples,
+                                  seed=2024)
+        ref = expected_tau_hat(x, DIST, N_WORKERS)
+        gap = abs(est["mean"] / ref - 1.0)
+        gaps[scheme] = gap
+        print(f"  {scheme}: mc={est['mean']:.6g}  eq5={ref:.6g}  "
+              f"gap={gap:.3%}  (sem {est['sem'] / est['mean']:.3%})")
+        assert gap < TOL, f"{scheme}: MC mean off by {gap:.2%} (tol {TOL:.0%})"
+    return gaps
+
+
+def event_fidelity_and_speed(rounds: int) -> None:
+    from repro.sim import ClusterSim, schedule_from_x
+
+    x = solve_scheme("xf", DIST, N_WORKERS, TOTAL)
+    sched = schedule_from_x(x)
+    rng = np.random.default_rng(7)
+    times = DIST.sample(rng, (rounds, N_WORKERS))
+
+    t0 = time.perf_counter()
+    barrier = ClusterSim(sched, DIST, N_WORKERS, wave=False).run(
+        rounds=rounds, times=times)
+    dt = time.perf_counter() - t0
+    want = tau_hat_batch(x, times)
+    np.testing.assert_allclose(barrier.round_durations(), want, rtol=1e-9)
+    n_events = rounds * len(sched) * N_WORKERS * 2  # finish + deliver
+    print(f"  barrier == eq.(5) on {rounds} rounds "
+          f"({rounds / dt:.0f} rounds/s, ~{n_events / dt:.0f} events/s)")
+
+    wave = ClusterSim(sched, DIST, N_WORKERS, wave=True).run(
+        rounds=rounds, times=times)
+    assert wave.makespan <= barrier.makespan * (1 + 1e-12)
+    print(f"  wave pipelining: {barrier.makespan / wave.makespan:.4f}x "
+          f"over barrier, utilization "
+          f"{wave.summary()['mean_utilization']:.2%}")
+
+
+def fault_injection(rounds: int) -> None:
+    from repro.sim import ClusterSim, DegradedWorker, WorkerDeath, schedule_from_x
+
+    x = np.zeros(N_WORKERS)
+    x[2] = float(TOTAL)  # single level s=2: tolerates two dead workers
+    sched = schedule_from_x(x)
+    rng = np.random.default_rng(11)
+    times = DIST.sample(rng, (rounds, N_WORKERS))
+    clean = ClusterSim(sched, DIST, N_WORKERS, wave=False).run(
+        rounds=rounds, times=times)
+    faulted = ClusterSim(
+        sched, DIST, N_WORKERS, wave=False,
+        faults=[WorkerDeath(0, at_round=0), DegradedWorker(1, 4.0)],
+    ).run(rounds=rounds, times=times)
+    assert not faulted.stalled and faulted.makespan >= clean.makespan
+    print(f"  1 death + 1 degraded absorbed: makespan "
+          f"{faulted.makespan / clean.makespan:.3f}x clean (no stall)")
+
+
+def main(smoke: bool = False):
+    n_samples = 8_000 if smoke else 60_000
+    rounds = 150 if smoke else 1_500
+    print(f"[sim_cluster] MC cross-check vs expected_tau_hat "
+          f"(N={N_WORKERS}, {n_samples} samples, tol {TOL:.0%})")
+    mc_crosscheck(n_samples)
+    print("[sim_cluster] event engine")
+    event_fidelity_and_speed(rounds)
+    print("[sim_cluster] fault injection")
+    fault_injection(max(rounds // 10, 10))
+    print("sim_cluster: OK")
+
+
+if __name__ == "__main__":
+    main()

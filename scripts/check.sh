@@ -1,24 +1,50 @@
 #!/usr/bin/env bash
-# Repo check: tier-1 tests + smoke benchmarks (the CI fast path).
+# Repo check: tier-1 tests + seeded property pass + smoke benchmarks.
 #
-#   scripts/check.sh            # full tier-1 pytest + smoke benchmarks
+#   scripts/check.sh            # full tier-1 pytest + property pass + smoke
 #   scripts/check.sh --fast     # skip the slow SPMD subprocess tests
 #
-# The smoke benchmarks re-validate the paper's Fig. 3 / 4(a) / 4(b)
-# claims on reduced settings (small N, few SPSG iters / MC samples), so
-# regressions in the fig-reproduction path are caught without a full run.
+# The tier-1 run fails on any regression below the pinned passed-count
+# baseline (so silently lost/skipped tests fail CI, not just failures).
+# The property pass re-runs the property-based coding tests at 3x
+# example depth — a deeper deterministic search than tier-1's defaults
+# (hypothesis is derandomized by tests/conftest.py; the fallback stub
+# is deterministic by construction).  The smoke benchmarks re-validate
+# the paper's Fig. 3 / 4(a) / 4(b) claims and the sim_cluster
+# MC-vs-eq.(5) cross-check on reduced settings.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# tier-1 passed-count baseline as of PR 2 (PR 1: 143; seed: 36).
+# Bump this when a PR adds tests — it is what catches silently
+# lost/uncollected files, not just failures.
+BASELINE=208
+
 PYTEST_ARGS=(-x -q)
 if [[ "${1:-}" == "--fast" ]]; then
   PYTEST_ARGS+=(--ignore=tests/test_spmd.py --ignore=tests/test_moe_manual.py)
+  BASELINE=$((BASELINE - 5))  # the two ignored files hold 5 tests
 fi
 
 echo "== tier-1 pytest =="
-python -m pytest "${PYTEST_ARGS[@]}"
+pytest_log="$(mktemp)"
+trap 'rm -f "$pytest_log"' EXIT
+python -m pytest "${PYTEST_ARGS[@]}" | tee "$pytest_log"
+passed="$(grep -oE '[0-9]+ passed' "$pytest_log" | tail -1 | grep -oE '[0-9]+' || echo 0)"
+if (( passed < BASELINE )); then
+  echo "check.sh: REGRESSION — $passed passed < baseline $BASELINE" >&2
+  exit 1
+fi
+echo "check.sh: $passed passed (baseline $BASELINE)"
+
+echo
+echo "== seeded property pass (3x examples) =="
+# deeper deterministic search than the tier-1 defaults: the property
+# tests scale their example counts by REPRO_PROPERTY_EXAMPLES
+REPRO_PROPERTY_EXAMPLES=3 python -m pytest -q \
+  tests/test_property_coding.py
 
 echo
 echo "== smoke benchmarks =="

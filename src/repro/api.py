@@ -49,13 +49,24 @@ _LAZY = {
     "generate": ("repro.serve.engine", "generate"),
     "make_serve_step": ("repro.serve.engine", "make_serve_step"),
     "restore_plan": ("repro.serve.engine", "restore_plan"),
+    # cluster simulation (numpy event engine; repro.sim.mc pulls in jax)
+    "ClusterSim": ("repro.sim", "ClusterSim"),
+    "ClusterConfig": ("repro.sim", "ClusterConfig"),
+    "Trace": ("repro.sim", "Trace"),
+    "WorkerDeath": ("repro.sim", "WorkerDeath"),
+    "DegradedWorker": ("repro.sim", "DegradedWorker"),
+    "simulate_plan": ("repro.sim", "simulate_plan"),
+    "simulate_x": ("repro.sim", "simulate_x"),
+    "schedule_from_plan": ("repro.sim", "schedule_from_plan"),
+    "schedule_from_x": ("repro.sim", "schedule_from_x"),
     # configs
     "get_config": ("repro.configs", "get_config"),
     "list_archs": ("repro.configs", "list_archs"),
 }
 
 __all__ = sorted(
-    [k for k in dict(globals()) if not k.startswith("_")] + list(_LAZY)
+    [k for k in dict(globals())
+     if not k.startswith("_") and k != "annotations"] + list(_LAZY)
 )
 
 

@@ -41,9 +41,10 @@ def leaf_costs_of(params_or_costs) -> np.ndarray:
 
     Pytree leaves with a ``.shape`` are priced by element count (the
     gradient-compute proxy the paper's footnote-4 uses); a plain 1-D
-    array or list of scalars is taken as the costs themselves.
+    array (numpy or jax) or list of scalars is taken as the costs
+    themselves.
     """
-    if isinstance(params_or_costs, np.ndarray) and params_or_costs.ndim == 1:
+    if getattr(params_or_costs, "ndim", None) == 1:
         return np.asarray(params_or_costs, np.float64)
     import jax  # deferred: keep repro.core importable without a device runtime
 
@@ -158,12 +159,55 @@ class Plan:
         return PlanSimulator(self, dist, seed=seed, cost=cost)
 
     def simulate(self, dist, steps: int, *, seed: int = 0,
-                 cost: CostModel = DEFAULT_COST) -> "PlanSimulator":
+                 cost: CostModel = DEFAULT_COST,
+                 backend: str = "eq2") -> "PlanSimulator":
         """Run ``steps`` straggler realizations; returns the simulator
-        with its eq.(2) ledger filled (``.ledger``, ``.summary()``)."""
+        with its eq.(2) ledger filled (``.ledger``, ``.summary()``).
+
+        ``backend`` selects how each round is priced:
+
+        * ``"eq2"``  — the closed-form fast path (default): eq. (2) on
+          the leaf-block layout, one numpy evaluation per draw.
+        * ``"event"`` — the ``repro.sim`` discrete-event engine runs the
+          plan end-to-end (barrier rounds, leaf-form schedule).  Same
+          draws, same ledger — per-round durations agree with eq. (2)
+          to float precision; use ``repro.sim`` directly for wave
+          pipelining, faults, and traces.
+        * ``"mc"``  — the jitted ``repro.sim.mc`` vmap backend: all
+          ``steps`` realizations priced in one vectorized call.  Runs
+          in jax's default fp32, so ledger values agree with the fp64
+          backends to ~1e-4 relative, not bitwise.
+        """
         sim = self.simulator(dist, seed=seed, cost=cost)
-        for _ in range(steps):
-            sim.step()
+        if backend == "eq2":
+            for _ in range(steps):
+                sim.step()
+            return sim
+        if backend not in ("event", "mc"):
+            raise ValueError(f"unknown backend {backend!r}; "
+                             "expected 'eq2', 'event', or 'mc'")
+        # identical draw stream to the eq2 path: one (N,) row per step
+        times = np.stack([dist.sample(sim.rng, (self.n_workers,))
+                          for _ in range(steps)])
+        if backend == "event":
+            from repro.sim import ClusterSim, schedule_from_plan
+
+            res = ClusterSim(schedule_from_plan(self), dist, self.n_workers,
+                             cost=cost, wave=False).run(rounds=steps,
+                                                        times=times)
+            tau_coded = res.round_durations()
+        else:
+            from repro.sim import mc
+
+            tau_coded = mc.runtime_batch(mc.schedule_from_plan(self), times,
+                                         cost=cost)
+        unc_scale = cost.scale(self.n_workers) * self.total_units
+        for r in range(steps):
+            sim.ledger.append({
+                "times": times[r],
+                "tau_coded": float(tau_coded[r]),
+                "tau_uncoded": float(unc_scale * times[r].max()),
+            })
         return sim
 
     # --------------------------------------------------------- serialization

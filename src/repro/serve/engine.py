@@ -13,6 +13,8 @@ re-solving the partition.
 """
 from __future__ import annotations
 
+import functools
+from collections import Counter
 from typing import Optional
 
 import jax
@@ -22,7 +24,8 @@ import numpy as np
 from repro.core import Plan
 from repro.models.model import decode_step, init_decode_caches, prefill
 
-__all__ = ["make_serve_step", "generate", "restore_plan"]
+__all__ = ["make_serve_step", "generate", "restore_plan", "trace_counts",
+           "clear_jit_cache"]
 
 
 def restore_plan(ckpt_dir: str, step: Optional[int] = None) -> Optional[Plan]:
@@ -56,21 +59,80 @@ def _sample(logits, key, temperature: float):
     return jax.random.categorical(key, logits / temperature, axis=-1)
 
 
+# --------------------------------------------------------------- jit caching
+# ``generate`` used to wrap prefill/decode_step in fresh ``jax.jit(lambda
+# ...)`` closures on every call, so each generation re-traced and
+# re-compiled from scratch.  The jitted callables are pure functions of
+# (cfg, target_len, ambient sharding context) — cfg is a frozen
+# dataclass, and ``shard()`` inside the model reads the active
+# (mesh, rules) at *trace* time, so the context must be part of the
+# memo key or a compilation traced under one mesh would silently serve
+# another.  ``aux_inputs`` moved from a closure capture to a traced
+# pytree argument (None and array pytrees trace fine) so it no longer
+# forces a rebuild.
+#
+# ``_TRACE_COUNTS`` increments only while jax *traces* (python execution
+# of the wrapped function), giving tests a retrace counter that is
+# independent of jax version internals.
+_TRACE_COUNTS: Counter = Counter()
+
+
+def _sharding_ctx_key():
+    """Hashable identity of the ambient (mesh, rules) sharding context."""
+    from repro.dist.sharding import current_mesh, current_rules
+
+    mesh = current_mesh()
+    rules = current_rules()
+    return (mesh, tuple(sorted((k, tuple(v)) for k, v in rules.items())))
+
+
+@functools.lru_cache(maxsize=64)
+def _prefill_fn(cfg, target_len: int, ctx_key):
+    def fn(p, tokens, aux_inputs):
+        _TRACE_COUNTS["prefill"] += 1
+        return prefill(cfg, p, tokens, aux_inputs=aux_inputs,
+                       target_len=target_len)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def _decode_fn(cfg, ctx_key):
+    def fn(p, caches, token, aux_inputs):
+        _TRACE_COUNTS["decode"] += 1
+        return decode_step(cfg, p, caches, token, aux_inputs=aux_inputs)
+
+    return jax.jit(fn)
+
+
+def trace_counts() -> dict:
+    """How many times the serving entry points have been (re)traced."""
+    return dict(_TRACE_COUNTS)
+
+
+def clear_jit_cache() -> None:
+    """Drop the memoized jitted callables and reset the trace counters."""
+    _prefill_fn.cache_clear()
+    _decode_fn.cache_clear()
+    _TRACE_COUNTS.clear()
+
+
 def generate(cfg, params, prompt_tokens, max_new: int = 32, *,
              temperature: float = 0.0, key=None, aux_inputs=None):
     """prompt_tokens: (B, S) -> (B, S + max_new) greedy/temperature output."""
+    if max_new <= 0:
+        return prompt_tokens
     key = jax.random.PRNGKey(0) if key is None else key
     b, s = prompt_tokens.shape
-    logits, caches = jax.jit(
-        lambda p, t: prefill(cfg, p, t, aux_inputs=aux_inputs,
-                             target_len=s + max_new)
-    )(params, prompt_tokens)
-    step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t, aux_inputs=aux_inputs))
+    ctx = _sharding_ctx_key()
+    logits, caches = _prefill_fn(cfg, s + max_new, ctx)(params, prompt_tokens,
+                                                        aux_inputs)
+    step = _decode_fn(cfg, ctx)
     tok = _sample(logits[:, -1], key, temperature)[:, None].astype(jnp.int32)
     out = [tok]
     for i in range(max_new - 1):
         key = jax.random.fold_in(key, i)
-        logits, caches = step(params, caches, tok)
+        logits, caches = step(params, caches, tok, aux_inputs)
         tok = _sample(logits[:, -1], key, temperature)[:, None].astype(jnp.int32)
         out.append(tok)
     return jnp.concatenate([prompt_tokens] + out, axis=1)

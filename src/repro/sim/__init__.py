@@ -1,0 +1,54 @@
+"""Event-driven coded-cluster simulation (`repro.sim`).
+
+Executes coding plans against simulated clusters under the general
+partial-straggler model: the deterministic event engine (``ClusterSim``)
+covers wave-pipelined multi-round training, fault injection, and trace
+replay; the jitted ``mc`` backend vmaps the same decode-time model over
+thousands of realizations for statistical cross-checks against the
+paper's closed forms.  See docs/SIMULATOR.md.
+
+The event engine and trace/fault tooling are pure numpy; the ``mc``
+module (and only it) imports jax lazily, so ``import repro.sim`` stays
+cheap for solver-only users.
+"""
+from .cluster import (
+    Block,
+    ClusterConfig,
+    ClusterResult,
+    ClusterSim,
+    draw_times,
+    schedule_from_plan,
+    schedule_from_x,
+    simulate_plan,
+    simulate_x,
+)
+from .faults import DegradedWorker, WorkerDeath, apply_faults, heterogeneous
+from .trace import Trace
+
+__all__ = [
+    "Block",
+    "ClusterConfig",
+    "ClusterResult",
+    "ClusterSim",
+    "DegradedWorker",
+    "Trace",
+    "WorkerDeath",
+    "apply_faults",
+    "draw_times",
+    "heterogeneous",
+    "mc",
+    "schedule_from_plan",
+    "schedule_from_x",
+    "simulate_plan",
+    "simulate_x",
+]
+
+
+def __getattr__(name: str):
+    if name == "mc":  # lazy: pulls in jax
+        import importlib
+
+        mod = importlib.import_module(__name__ + ".mc")
+        globals()["mc"] = mod
+        return mod
+    raise AttributeError(f"module 'repro.sim' has no attribute {name!r}")

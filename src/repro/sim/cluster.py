@@ -1,0 +1,440 @@
+"""Deterministic event-driven coded-cluster simulator.
+
+Executes a coding plan against N simulated workers under the paper's
+general *partial* straggler model (§II): each worker n draws a cycle
+time T_n per round and computes its assigned gradient blocks in the
+sequential block order of §III, delivering a block-completion event to
+the master as it finishes each one.  The master decodes block b (level
+s_b) the instant the fastest N - s_b workers have delivered it — the
+event that eq. (2)/(5) prices analytically, here realized as an actual
+discrete-event timeline so the same engine also covers regimes the
+closed forms cannot: multi-round wave pipelining, mid-round worker
+death, heterogeneous per-worker distributions, decoded-block
+cancellation, and communication latency.
+
+Fidelity contract (tested): with ``wave=False`` and zero latencies,
+per-round durations equal ``tau_hat(x, T)`` (x-form schedules) /
+``Plan.tau(T)`` (leaf-form schedules) bit-for-bit up to float
+accumulation, so Monte-Carlo means cross-check ``expected_tau_hat``.
+
+Event model
+-----------
+Two event kinds flow through one time-ordered heap:
+
+* ``finish``  — worker w completes the compute of block b of round r;
+  the worker immediately tries to start its next block (possibly
+  parking on an undecoded dependency).
+* ``deliver`` — block b of round r from worker w reaches the master
+  (``comm_delay`` after the finish); the master counts it and, at the
+  (N - s_b)-th distinct delivery, marks the block decoded and wakes any
+  workers parked on it.
+
+Ties are broken by a monotone sequence number, so a run is a pure
+function of (schedule, times, faults, config): record the drawn times
+and every run replays exactly (see trace.py).
+
+Wave scheduling
+---------------
+Block-coordinate descent updates coordinate block b of round r+1 using
+only block b's decoded gradient from round r.  ``wave=True`` exploits
+that: a worker may start block b of round r+1 as soon as (a) it has
+finished its own earlier round-(r+1) blocks and (b) the master has
+broadcast round r's block-b update — so round r+1's low-redundancy
+head overlaps the slow high-redundancy tail of round r.  ``wave=False``
+inserts a full barrier (round r+1 starts only when every round-r block
+is decoded), which is the analytical eq.(2)-per-round regime.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.runtime import CostModel, DEFAULT_COST
+
+__all__ = [
+    "Block",
+    "ClusterConfig",
+    "ClusterResult",
+    "ClusterSim",
+    "schedule_from_x",
+    "schedule_from_plan",
+    "simulate_plan",
+    "simulate_x",
+    "draw_times",
+]
+
+
+# --------------------------------------------------------------- schedules
+@dataclass(frozen=True)
+class Block:
+    """One decodable unit of a round, in sequential compute order.
+
+    ``work`` is the *cumulative* per-worker work (abstract units, before
+    the ``CostModel`` scale) through the end of this block; ``level`` is
+    the number of stragglers the block's code tolerates (s_b), so the
+    master needs ``N - level`` deliveries to decode it.
+    """
+
+    index: int
+    level: int
+    work: float
+
+
+def schedule_from_x(x) -> tuple:
+    """Block schedule of an eq.(5) block solution x (skips empty levels).
+
+    Level n contributes (n+1) * x_n cumulative work units.  Skipping
+    x_n == 0 blocks is exact: an empty block's max-term is dominated by
+    its predecessor (same work, larger order statistic).
+    """
+    x = np.asarray(x, dtype=np.float64)
+    blocks, cum, idx = [], 0.0, 0
+    for n, xn in enumerate(x):
+        if xn <= 0:
+            continue
+        cum += (n + 1.0) * float(xn)
+        blocks.append(Block(index=idx, level=n, work=cum))
+        idx += 1
+    if not blocks:
+        raise ValueError("schedule_from_x: x has no positive mass")
+    return tuple(blocks)
+
+
+def schedule_from_plan(plan) -> tuple:
+    """Leaf-form schedule of a ``Plan``: one block per parameter leaf.
+
+    Mirrors ``Plan.tau``: leaf j (level s_j, normalized cost w_j)
+    contributes (s_j + 1) * w_j * total_units cumulative work, so the
+    barrier round duration equals ``plan.tau(T)`` for the same draw.
+    """
+    levels = np.asarray(plan.leaf_levels, np.int64)
+    costs = np.asarray(plan.leaf_costs, np.float64)
+    cum = np.cumsum((levels + 1.0) * costs) * float(plan.total_units)
+    return tuple(
+        Block(index=j, level=int(levels[j]), work=float(cum[j]))
+        for j in range(len(levels))
+    )
+
+
+def draw_times(dist, rng, rounds: int, n_workers: int) -> np.ndarray:
+    """(rounds, N) cycle-time draws.
+
+    ``dist`` is a single ``StragglerDistribution`` (i.i.d. workers), a
+    length-N sequence of per-worker distributions (heterogeneous
+    cluster), or a ready (rounds, N) array (trace replay).
+    """
+    if isinstance(dist, np.ndarray):
+        t = np.asarray(dist, np.float64)
+        if t.shape != (rounds, n_workers):
+            raise ValueError(f"times shape {t.shape} != {(rounds, n_workers)}")
+        return t
+    if isinstance(dist, (list, tuple)):
+        if len(dist) != n_workers:
+            raise ValueError(f"need {n_workers} per-worker dists, got {len(dist)}")
+        cols = [d.sample(rng, (rounds,)) for d in dist]
+        return np.stack(cols, axis=1).astype(np.float64)
+    return np.asarray(dist.sample(rng, (rounds, n_workers)), np.float64)
+
+
+# ----------------------------------------------------------- configuration
+@dataclass(frozen=True)
+class ClusterConfig:
+    """Knobs of the event engine.
+
+    The default enables wave pipelining (the simulator's reason to
+    exist); for the analytical eq.(2)/(5) barrier regime — per-round
+    durations equal to ``tau_hat`` — set ``wave=False`` and keep the
+    zero-latency defaults.
+    """
+
+    #: pipeline rounds per decoded block (True) vs full round barrier.
+    wave: bool = True
+    #: workers skip blocks the master has already decoded (jump ahead).
+    #: Off by default: eq. (5) assumes every worker computes every block.
+    cancel_decoded: bool = False
+    #: master -> worker update latency added to every dependency.
+    broadcast_latency: float = 0.0
+    #: worker -> master delivery latency added to every completion.
+    comm_delay: float = 0.0
+    #: keep the full event log on the result (debugging / timelines).
+    record_events: bool = False
+
+
+class _Worker:
+    __slots__ = ("idx", "free_at", "round", "pos", "dead_at", "dead_round",
+                 "stopped", "busy", "running", "epoch", "cur_start")
+
+    def __init__(self, idx: int):
+        self.idx = idx
+        self.free_at = 0.0
+        self.round = 0
+        self.pos = 0
+        self.dead_at = np.inf
+        self.dead_round = np.inf
+        self.stopped = False
+        self.busy = 0.0
+        self.running = False     # a compute is in flight (finish event queued)
+        self.epoch = 0           # bumps invalidate queued finish events
+        self.cur_start = 0.0     # start time of the in-flight compute
+
+
+# ----------------------------------------------------------------- results
+@dataclass
+class ClusterResult:
+    """Timeline of one simulated run."""
+
+    schedule: tuple
+    times: np.ndarray          # (R, N) drawn cycle times
+    decode_times: np.ndarray   # (R, n_blocks) absolute decode instants
+    round_done: np.ndarray     # (R,) last decode of each round (inf if stalled)
+    makespan: float            # last decode overall (inf if stalled)
+    stalled: bool              # some block never reached N - s deliveries
+    undecoded: list            # [(round, block_index), ...] when stalled
+    worker_busy: np.ndarray    # (N,) per-worker total compute time
+    config: ClusterConfig
+    events: Optional[list] = field(default=None, repr=False)
+
+    def round_durations(self) -> np.ndarray:
+        """Per-round wall time against the previous round's completion.
+
+        With ``wave=False`` this is exactly eq. (2)/(5) per round; with
+        waves, rounds overlap and the durations are the *marginal* cost
+        of each round (they sum to the makespan either way).
+        """
+        starts = np.concatenate([[0.0], self.round_done[:-1]])
+        return self.round_done - starts
+
+    def trace(self, meta: Optional[dict] = None):
+        """Record the drawn per-(round, worker) times for replay."""
+        from .trace import Trace
+
+        return Trace.from_times(self.times, meta=meta)
+
+    def summary(self) -> dict:
+        dur = self.round_durations()
+        finite = dur[np.isfinite(dur)]
+        util = (self.worker_busy / self.makespan
+                if np.isfinite(self.makespan) and self.makespan > 0
+                else np.zeros_like(self.worker_busy))
+        return {
+            "rounds": int(len(self.round_done)),
+            "makespan": float(self.makespan),
+            "mean_round": float(finite.mean()) if finite.size else float("inf"),
+            "stalled": bool(self.stalled),
+            "mean_utilization": float(util.mean()),
+            "wave": bool(self.config.wave),
+        }
+
+
+# ------------------------------------------------------------------ engine
+class ClusterSim:
+    """Event-driven master/worker cluster for a block schedule.
+
+    Parameters
+    ----------
+    schedule : tuple[Block, ...] from ``schedule_from_x``/``schedule_from_plan``.
+    dist     : straggler model — one distribution, a per-worker list, or
+               a (rounds, N) array (see ``draw_times``).
+    n_workers: cluster size N.
+    faults   : iterable of fault objects from ``repro.sim.faults``.
+    """
+
+    def __init__(self, schedule, dist, n_workers: int, *,
+                 cost: CostModel = DEFAULT_COST, seed: int = 0,
+                 faults: Sequence = (), config: Optional[ClusterConfig] = None,
+                 **config_kw):
+        if config is not None and config_kw:
+            raise ValueError("pass either config= or config keywords, not both")
+        self.schedule = tuple(schedule)
+        if not self.schedule:
+            raise ValueError("empty schedule")
+        works = [b.work for b in self.schedule]
+        if any(b.level >= n_workers or b.level < 0 for b in self.schedule):
+            raise ValueError("block level must be in [0, N)")
+        if any(b <= a for a, b in zip([0.0] + works[:-1], works)):
+            raise ValueError("cumulative work must be strictly increasing")
+        self.dist = dist
+        self.n_workers = int(n_workers)
+        self.cost = cost
+        self.seed = int(seed)
+        self.faults = tuple(faults)
+        self.config = config if config is not None else ClusterConfig(**config_kw)
+
+    # ------------------------------------------------------------- running
+    def run(self, rounds: int = 1, times: Optional[np.ndarray] = None
+            ) -> ClusterResult:
+        """Simulate ``rounds`` rounds; ``times`` overrides the draws."""
+        from .faults import apply_faults
+
+        if rounds < 1:
+            raise ValueError("rounds must be >= 1")
+        cfg = self.config
+        n, n_blocks = self.n_workers, len(self.schedule)
+        rng = np.random.default_rng(self.seed)
+        if times is None:
+            times = draw_times(self.dist, rng, rounds, n)
+        else:
+            times = draw_times(times, rng, rounds, n)
+        times, deaths = apply_faults(times, self.faults)
+        scale = self.cost.scale(n)
+        incr = np.diff([0.0] + [b.work for b in self.schedule])
+
+        workers = [_Worker(i) for i in range(n)]
+        for w, (at_time, at_round) in deaths.items():
+            workers[w].dead_at = at_time
+            workers[w].dead_round = at_round
+
+        heap: list = []           # (time, seq, kind, *payload)
+        seq = 0
+        delivered = np.zeros((rounds, n_blocks), np.int64)
+        decoded_at = np.full((rounds, n_blocks), np.inf)
+        blocks_left = np.full(rounds, n_blocks, np.int64)
+        round_done = np.full(rounds, np.inf)
+        waiters: dict = {}        # dep key -> [worker, ...]
+        events = [] if cfg.record_events else None
+
+        def push(t, kind, *payload):
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, payload))
+            seq += 1
+
+        def dep_of(r: int, pos: int):
+            """Dependency key + ready time for block ``pos`` of round ``r``."""
+            if r == 0:
+                return None, 0.0
+            if cfg.wave:
+                t_dep = decoded_at[r - 1, pos]
+                return (("blk", r - 1, pos), t_dep + cfg.broadcast_latency)
+            t_dep = round_done[r - 1]
+            return (("rnd", r - 1), t_dep + cfg.broadcast_latency)
+
+        def try_start(w: _Worker):
+            """Advance ``w`` to its next runnable block (or park/stop it)."""
+            if w.running:
+                return
+            while not w.stopped and w.round < rounds:
+                r, pos = w.round, w.pos
+                if r >= w.dead_round:
+                    w.stopped = True
+                    return
+                if cfg.cancel_decoded and np.isfinite(decoded_at[r, pos]):
+                    _advance(w)
+                    continue
+                key, ready = dep_of(r, pos)
+                if not np.isfinite(ready):
+                    waiters.setdefault(key, []).append(w)
+                    return
+                start = max(w.free_at, ready)
+                dur = scale * times[r, w.idx] * incr[pos]
+                finish = start + dur
+                if finish >= w.dead_at:
+                    w.stopped = True        # dies mid-compute: no delivery
+                    w.busy += max(w.dead_at - start, 0.0)
+                    if events is not None:
+                        events.append((w.dead_at, "death", w.idx, r, pos))
+                    return
+                w.free_at = finish
+                w.running = True
+                w.cur_start = start
+                push(finish, "finish", w.idx, r, pos, w.epoch)
+                return
+
+        def _advance(w: _Worker):
+            w.pos += 1
+            if w.pos == n_blocks:
+                w.pos = 0
+                w.round += 1
+
+        def wake(key):
+            for w in waiters.pop(key, []):
+                try_start(w)
+
+        def flush_round(r: int, t: float):
+            """Round r fully decoded: remaining round-r work is stale.
+
+            The master's broadcast makes every outstanding round-r block
+            worthless, so workers still inside round r abandon it —
+            preempting an in-flight compute — and move to round r + 1.
+            This is what makes barrier rounds i.i.d. eq.(2) realizations
+            (and what eq. (5) implicitly assumes between rounds).
+            """
+            for w in workers:
+                if w.stopped or w.round != r:
+                    continue
+                if w.running:
+                    w.epoch += 1            # invalidate the queued finish
+                    w.running = False
+                    w.busy += max(t - w.cur_start, 0.0)
+                    w.free_at = t
+                w.round, w.pos = r + 1, 0
+                try_start(w)
+
+        for w in workers:
+            try_start(w)
+
+        while heap:
+            t, _, kind, payload = heapq.heappop(heap)
+            if kind == "finish":
+                widx, r, pos, epoch = payload
+                w = workers[widx]
+                if epoch != w.epoch:        # preempted by a round flush
+                    continue
+                if events is not None:
+                    events.append((t, "finish", widx, r, pos))
+                w.running = False
+                w.busy += t - w.cur_start
+                push(t + cfg.comm_delay, "deliver", widx, r, pos)
+                _advance(w)
+                try_start(w)
+            else:  # deliver
+                widx, r, pos = payload
+                if t >= workers[widx].dead_at:
+                    continue    # in-flight message dies with its sender
+                if events is not None:
+                    events.append((t, "deliver", widx, r, pos))
+                delivered[r, pos] += 1
+                need = n - self.schedule[pos].level
+                if delivered[r, pos] == need:
+                    decoded_at[r, pos] = t
+                    if events is not None:
+                        events.append((t, "decode", -1, r, pos))
+                    blocks_left[r] -= 1
+                    wake(("blk", r, pos))
+                    if blocks_left[r] == 0:
+                        round_done[r] = t
+                        wake(("rnd", r))
+                        flush_round(r, t)
+
+        undecoded = [(int(r), int(b))
+                     for r in range(rounds) for b in range(n_blocks)
+                     if not np.isfinite(decoded_at[r, b])]
+        makespan = float(round_done[-1]) if not undecoded else float("inf")
+        return ClusterResult(
+            schedule=self.schedule, times=times, decode_times=decoded_at,
+            round_done=round_done, makespan=makespan,
+            stalled=bool(undecoded), undecoded=undecoded,
+            worker_busy=np.asarray([w.busy for w in workers]),
+            config=cfg, events=events,
+        )
+
+
+# ------------------------------------------------------------ conveniences
+def simulate_plan(plan, dist, rounds: int = 1, *, seed: int = 0,
+                  cost: CostModel = DEFAULT_COST, faults: Sequence = (),
+                  **config_kw) -> ClusterResult:
+    """Run a ``Plan`` end-to-end on the event engine (leaf-form schedule)."""
+    sim = ClusterSim(schedule_from_plan(plan), dist, plan.n_workers,
+                     cost=cost, seed=seed, faults=faults, **config_kw)
+    return sim.run(rounds)
+
+
+def simulate_x(x, dist, n_workers: int, rounds: int = 1, *, seed: int = 0,
+               cost: CostModel = DEFAULT_COST, faults: Sequence = (),
+               **config_kw) -> ClusterResult:
+    """Run an eq.(5) block solution x on the event engine."""
+    sim = ClusterSim(schedule_from_x(x), dist, n_workers,
+                     cost=cost, seed=seed, faults=faults, **config_kw)
+    return sim.run(rounds)

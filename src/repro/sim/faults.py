@@ -1,0 +1,94 @@
+"""Fault injection for the coded-cluster simulator.
+
+Faults are declarative objects applied to the drawn (rounds, N) cycle
+time matrix before the event engine runs, so a faulted run stays a pure
+function of (schedule, times, faults) and replays exactly from a trace.
+
+* ``WorkerDeath``   — the worker stops delivering at an absolute time or
+  from a given round on.  Gradient coding absorbs deaths as permanent
+  stragglers: block b still decodes while ``N - s_b`` workers survive;
+  otherwise the run reports ``stalled=True`` (the master can never
+  decode, exactly the failure mode redundancy exists to cover).
+* ``DegradedWorker`` — multiplies one worker's cycle times by a factor
+  from a given round on (thermal throttling, noisy neighbor).
+* ``heterogeneous`` — convenience constructor for per-worker
+  distribution lists (a cluster of mixed machine generations).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = ["WorkerDeath", "DegradedWorker", "apply_faults", "heterogeneous"]
+
+
+@dataclass(frozen=True)
+class WorkerDeath:
+    """Worker ``worker`` delivers nothing at/after ``at_time`` (absolute
+    simulated time) or from round ``at_round`` on; a block mid-compute
+    when the death hits is lost."""
+
+    worker: int
+    at_time: Optional[float] = None
+    at_round: Optional[int] = None
+
+    def __post_init__(self):
+        if self.at_time is None and self.at_round is None:
+            raise ValueError("WorkerDeath needs at_time or at_round")
+
+
+@dataclass(frozen=True)
+class DegradedWorker:
+    """Worker ``worker`` runs ``factor``x slower from round ``from_round``."""
+
+    worker: int
+    factor: float
+    from_round: int = 0
+
+    def __post_init__(self):
+        if self.factor <= 0:
+            raise ValueError("factor must be positive")
+
+
+def apply_faults(times: np.ndarray, faults: Sequence):
+    """(times, faults) -> (times', deaths).
+
+    ``times'`` is a copy with degradations applied; ``deaths`` maps
+    worker index -> (death_time, death_round) for the event engine
+    (np.inf where the axis is unused).
+    """
+    times = np.array(times, np.float64, copy=True)
+    rounds, n = times.shape
+    deaths: dict = {}
+    for f in faults:
+        if isinstance(f, DegradedWorker):
+            if not (0 <= f.worker < n):
+                raise ValueError(f"DegradedWorker.worker {f.worker} out of range")
+            times[f.from_round:, f.worker] *= f.factor
+        elif isinstance(f, WorkerDeath):
+            if not (0 <= f.worker < n):
+                raise ValueError(f"WorkerDeath.worker {f.worker} out of range")
+            at_t = np.inf if f.at_time is None else float(f.at_time)
+            at_r = np.inf if f.at_round is None else int(f.at_round)
+            prev = deaths.get(f.worker, (np.inf, np.inf))
+            deaths[f.worker] = (min(prev[0], at_t), min(prev[1], at_r))
+        else:
+            raise TypeError(f"unknown fault {f!r}")
+    return times, deaths
+
+
+def heterogeneous(dist, n_workers: int, slow_workers: dict):
+    """Per-worker distribution list: ``dist`` everywhere, except worker
+    j gets ``slow_workers[j]`` (a replacement distribution).
+
+        dists = heterogeneous(fast, 8, {7: ShiftedExponential(mu=1e-4)})
+        ClusterSim(schedule, dists, 8).run(...)
+    """
+    out = [dist] * n_workers
+    for j, d in slow_workers.items():
+        if not (0 <= j < n_workers):
+            raise ValueError(f"slow worker {j} out of range")
+        out[j] = d
+    return out

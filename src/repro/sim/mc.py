@@ -1,0 +1,138 @@
+"""Vectorized JAX Monte-Carlo backend for the cluster simulator.
+
+The event engine (cluster.py) walks one realization at a time; this
+module evaluates the *same* decode-time model — block b decodes at
+``scale * T_(N - s_b) * W_b`` — as a jitted ``vmap`` over thousands of
+straggler realizations at once, so simulated expected runtime
+cross-checks ``repro.core.runtime.expected_tau_hat`` at benchmark
+speed (tested to <2% at the Fig. 4 operating points).
+
+Scope: single-round decode times and multi-round *barrier* totals
+(sums of per-round maxima).  Wave pipelining and fault injection are
+inherently event-driven — use ``ClusterSim`` for those.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.core.runtime import CostModel, DEFAULT_COST
+
+from .cluster import Block, draw_times, schedule_from_plan, schedule_from_x
+
+__all__ = [
+    "runtime_batch",
+    "decode_times_batch",
+    "expected_runtime",
+    "as_schedule",
+]
+
+
+def as_schedule(target, n_workers: Optional[int] = None) -> tuple:
+    """Normalize a schedule / Plan / eq.(5) x-vector to tuple[Block, ...]."""
+    if isinstance(target, (tuple, list)) and target and isinstance(target[0], Block):
+        return tuple(target)
+    if hasattr(target, "leaf_levels"):  # a Plan
+        return schedule_from_plan(target)
+    return schedule_from_x(np.asarray(target, np.float64))
+
+
+def _arrays_of(schedule):
+    levels = np.asarray([b.level for b in schedule], np.int32)
+    works = np.asarray([b.work for b in schedule], np.float64)
+    return levels, works
+
+
+def _jax():
+    import jax
+    import jax.numpy as jnp
+
+    return jax, jnp
+
+
+def _round_time_fn(levels, works, n_workers: int, scale: float):
+    """One-realization decode times: T (N,) -> (n_blocks,) absolute times."""
+    if levels.size and int(levels.max()) >= n_workers:
+        raise ValueError(
+            f"block level {int(levels.max())} >= n_workers {n_workers}: "
+            "schedule and realizations disagree on the cluster size")
+    jax, jnp = _jax()
+    lv = jnp.asarray(levels)
+    wk = jnp.asarray(works)
+
+    def one(t):
+        ts = jnp.sort(t)
+        t_term = ts[n_workers - 1 - lv]  # T_(N - s_b) per block
+        return scale * t_term * wk
+
+    return one
+
+
+def decode_times_batch(schedule, times_batch, *,
+                       cost: CostModel = DEFAULT_COST) -> np.ndarray:
+    """(S, N) realizations -> (S, n_blocks) absolute decode times (vmap)."""
+    jax, jnp = _jax()
+    schedule = tuple(schedule)
+    times_batch = np.asarray(times_batch, np.float64)
+    n_workers = times_batch.shape[-1]
+    levels, works = _arrays_of(schedule)
+    one = _round_time_fn(levels, works, n_workers, cost.scale(n_workers))
+    out = jax.jit(jax.vmap(one))(jnp.asarray(times_batch))
+    return np.asarray(out, np.float64)
+
+
+def runtime_batch(schedule, times_batch, *,
+                  cost: CostModel = DEFAULT_COST) -> np.ndarray:
+    """Per-realization round runtime (max decode time), vmapped.
+
+    ``times_batch``: (S, N) for single rounds -> (S,); (S, R, N) for
+    R-round barrier totals -> (S,) sums of per-round maxima.
+    """
+    jax, jnp = _jax()
+    schedule = tuple(schedule)
+    times_batch = np.asarray(times_batch, np.float64)
+    n_workers = times_batch.shape[-1]
+    levels, works = _arrays_of(schedule)
+    one = _round_time_fn(levels, works, n_workers, cost.scale(n_workers))
+
+    def round_max(t):
+        return jnp.max(one(t))
+
+    if times_batch.ndim == 2:
+        fn = jax.jit(jax.vmap(round_max))
+    elif times_batch.ndim == 3:
+        per_round = jax.vmap(round_max)          # over R
+        fn = jax.jit(jax.vmap(lambda tr: jnp.sum(per_round(tr))))  # over S
+    else:
+        raise ValueError(f"times_batch must be (S,N) or (S,R,N), "
+                         f"got {times_batch.shape}")
+    return np.asarray(fn(jnp.asarray(times_batch)), np.float64)
+
+
+def expected_runtime(target, dist, n_workers: int, *, n_samples: int = 20_000,
+                     rounds: int = 1, seed: int = 0,
+                     cost: CostModel = DEFAULT_COST) -> dict:
+    """Monte-Carlo expected runtime of a Plan / x-vector / schedule.
+
+    Returns mean, std, and the standard error of the mean so callers
+    can assert statistical agreement (e.g. vs ``expected_tau_hat``)
+    with an explicit tolerance.
+    """
+    schedule = as_schedule(target, n_workers)
+    rng = np.random.default_rng(seed)
+    if rounds == 1:
+        times = draw_times(dist, rng, n_samples, n_workers)
+    else:
+        flat = draw_times(dist, rng, n_samples * rounds, n_workers)
+        times = flat.reshape(n_samples, rounds, n_workers)
+    samples = runtime_batch(schedule, times, cost=cost)
+    mean = float(samples.mean())
+    std = float(samples.std(ddof=1)) if n_samples > 1 else 0.0
+    return {
+        "mean": mean,
+        "std": std,
+        "sem": std / np.sqrt(n_samples),
+        "n_samples": int(n_samples),
+        "rounds": int(rounds),
+    }

@@ -42,6 +42,10 @@ def _install_hypothesis_stub() -> None:
     def booleans():
         return _Strategy(lambda rng: bool(rng.integers(0, 2)))
 
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
     def data():
         return _DataStrategy()
 
@@ -75,6 +79,7 @@ def _install_hypothesis_stub() -> None:
     strategies = types.ModuleType("hypothesis.strategies")
     strategies.integers = integers
     strategies.booleans = booleans
+    strategies.sampled_from = sampled_from
     strategies.data = data
     mod.given = given
     mod.settings = settings
@@ -89,3 +94,7 @@ try:  # pragma: no cover - prefer the real package when present
     import hypothesis  # noqa: F401
 except ImportError:
     _install_hypothesis_stub()
+else:  # pragma: no cover - derandomize so CI property runs are seeded
+    hypothesis.settings.register_profile(
+        "repro-ci", derandomize=True, deadline=None)
+    hypothesis.settings.load_profile("repro-ci")

@@ -1,0 +1,251 @@
+"""Event-driven cluster simulator (repro.sim): fidelity to the paper's
+cost model, wave scheduling, fault injection, trace replay, and the
+ISSUE-2 acceptance cross-check against ``expected_tau_hat``."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Plan, ShiftedExponential, solve_scheme
+from repro.core.runtime import expected_tau_hat, tau_hat_batch
+from repro.sim import (
+    ClusterSim,
+    DegradedWorker,
+    Trace,
+    WorkerDeath,
+    schedule_from_plan,
+    schedule_from_x,
+    simulate_plan,
+)
+
+N = 8
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+
+
+def _times(rounds, seed=0, n=N):
+    return DIST.sample(np.random.default_rng(seed), (rounds, n))
+
+
+# ------------------------------------------------------------- fidelity
+def test_single_round_equals_tau_hat_exactly():
+    x = solve_scheme("xf", DIST, N, 2000)
+    t = _times(1)
+    for wave in (False, True):
+        res = ClusterSim(schedule_from_x(x), DIST, N, wave=wave).run(
+            rounds=1, times=t)
+        np.testing.assert_allclose(res.makespan, tau_hat_batch(x, t)[0],
+                                   rtol=1e-12)
+
+
+def test_barrier_rounds_are_iid_eq5_realizations():
+    """Multi-round barrier: each round's duration equals eq. (5) on that
+    round's draw — the stale-work flush makes rounds independent."""
+    x = solve_scheme("xt", DIST, N, 2000)
+    t = _times(40, seed=3)
+    res = ClusterSim(schedule_from_x(x), DIST, N, wave=False).run(
+        rounds=40, times=t)
+    np.testing.assert_allclose(res.round_durations(), tau_hat_batch(x, t),
+                               rtol=1e-9)
+
+
+def test_leaf_schedule_matches_plan_tau():
+    plan = Plan.build(np.asarray([3.0, 1.0, 2.0, 5.0, 1.0]), DIST, N,
+                      scheme="xf")
+    t = _times(10, seed=4)
+    res = ClusterSim(schedule_from_plan(plan), DIST, N, wave=False).run(
+        rounds=10, times=t)
+    np.testing.assert_allclose(res.round_durations(),
+                               [plan.tau(row) for row in t], rtol=1e-9)
+
+
+def test_plan_simulate_event_backend_matches_eq2():
+    """Plan.simulate(backend='event') fills the same ledger as the eq.(2)
+    fast path for the same seed (identical draw stream)."""
+    plan = Plan.build(np.asarray([4.0, 2.0, 1.0, 6.0]), DIST, N, scheme="xf")
+    ref = plan.simulate(DIST, 25, seed=11).ledger
+    evt = plan.simulate(DIST, 25, seed=11, backend="event").ledger
+    assert len(ref) == len(evt) == 25
+    for a, b in zip(ref, evt):
+        np.testing.assert_array_equal(a["times"], b["times"])
+        np.testing.assert_allclose(a["tau_coded"], b["tau_coded"], rtol=1e-9)
+        np.testing.assert_allclose(a["tau_uncoded"], b["tau_uncoded"],
+                                   rtol=1e-12)
+
+
+def test_determinism_and_seed_sensitivity():
+    sched = schedule_from_x(solve_scheme("xf", DIST, N, 1000))
+    r1 = ClusterSim(sched, DIST, N, seed=5).run(rounds=6)
+    r2 = ClusterSim(sched, DIST, N, seed=5).run(rounds=6)
+    r3 = ClusterSim(sched, DIST, N, seed=6).run(rounds=6)
+    np.testing.assert_array_equal(r1.decode_times, r2.decode_times)
+    assert not np.array_equal(r1.times, r3.times)
+
+
+# ------------------------------------------------------- wave scheduling
+def test_wave_overlaps_and_never_loses_to_barrier():
+    sched = schedule_from_x(solve_scheme("xf", DIST, N, 2000))
+    t = _times(50, seed=7)
+    barrier = ClusterSim(sched, DIST, N, wave=False).run(rounds=50, times=t)
+    wave = ClusterSim(sched, DIST, N, wave=True).run(rounds=50, times=t)
+    assert wave.makespan <= barrier.makespan * (1 + 1e-12)
+    assert wave.makespan < barrier.makespan  # strict: tail overlap exists
+    # decoding order/needs are identical — only scheduling changed
+    assert not wave.stalled and not barrier.stalled
+
+
+def test_cancel_decoded_only_helps():
+    sched = schedule_from_x(solve_scheme("xf", DIST, N, 2000))
+    t = _times(30, seed=8)
+    plain = ClusterSim(sched, DIST, N, wave=True).run(rounds=30, times=t)
+    cancel = ClusterSim(sched, DIST, N, wave=True, cancel_decoded=True).run(
+        rounds=30, times=t)
+    assert cancel.makespan <= plain.makespan * (1 + 1e-12)
+
+
+def test_latencies_push_makespan_out():
+    sched = schedule_from_x(solve_scheme("xf", DIST, N, 1000))
+    t = _times(5, seed=9)
+    base = ClusterSim(sched, DIST, N, wave=False).run(rounds=5, times=t)
+    lat = ClusterSim(sched, DIST, N, wave=False, comm_delay=50.0,
+                     broadcast_latency=25.0).run(rounds=5, times=t)
+    assert lat.makespan > base.makespan
+
+
+# ------------------------------------------------------- fault injection
+def test_worker_death_absorbed_by_redundancy():
+    x = np.zeros(N)
+    x[2] = 1000.0  # single level s=2: two deaths tolerated
+    sched = schedule_from_x(x)
+    t = _times(4, seed=10)
+    clean = ClusterSim(sched, DIST, N, wave=False).run(rounds=4, times=t)
+    dead = ClusterSim(sched, DIST, N, wave=False,
+                      faults=[WorkerDeath(0, at_round=0),
+                              WorkerDeath(5, at_round=2)]).run(rounds=4,
+                                                               times=t)
+    assert not dead.stalled
+    assert dead.makespan >= clean.makespan - 1e-12
+    assert np.isfinite(dead.makespan)
+
+
+def test_worker_death_stalls_uncoded():
+    x = np.zeros(N)
+    x[0] = 1000.0  # no redundancy: every block needs all N workers
+    res = ClusterSim(schedule_from_x(x), DIST, N, wave=False,
+                     faults=[WorkerDeath(3, at_round=0)]).run(
+        rounds=2, times=_times(2, seed=12))
+    assert res.stalled
+    assert res.makespan == np.inf
+    assert (0, 0) in res.undecoded
+
+
+def test_mid_compute_death_loses_the_inflight_block():
+    """An at_time death mid-round: the worker's in-flight block never
+    delivers, so decode falls to the next-fastest worker."""
+    x = np.zeros(N)
+    x[6] = 1000.0  # s=6: decode needs only the two fastest deliveries
+    t = np.full((1, N), 100.0)
+    t[0, 0] = t[0, 1] = 1.0  # two far-fastest workers...
+    sched = schedule_from_x(x)
+    clean = ClusterSim(sched, DIST, N, wave=False).run(rounds=1, times=t)
+    # ...one dies mid-compute: its in-flight block never delivers, so
+    # the second decode slot falls to a 100x-slower worker
+    dead = ClusterSim(sched, DIST, N, wave=False,
+                      faults=[WorkerDeath(0, at_time=100.0)]).run(
+        rounds=1, times=t)
+    assert not dead.stalled
+    assert dead.makespan > 50.0 * clean.makespan
+
+
+def test_death_kills_inflight_delivery_under_comm_delay():
+    """A message still in flight when its sender dies never reaches the
+    master (WorkerDeath contract: nothing delivered at/after at_time)."""
+    x = np.zeros(N)
+    x[6] = 1000.0  # decode needs 2 deliveries
+    t = np.full((1, N), 100.0)
+    t[0, 0] = t[0, 1] = 1.0
+    sched = schedule_from_x(x)
+    scale_work = 50.0 / N * 7 * 1000.0  # finish time of the fast pair
+    # both fast workers finish compute alive, but worker 0 dies while
+    # its delivery is on the wire (comm_delay 50 > time-to-death margin)
+    dead = ClusterSim(sched, DIST, N, wave=False, comm_delay=50.0,
+                      faults=[WorkerDeath(0, at_time=scale_work + 1.0)]).run(
+        rounds=1, times=t)
+    alive = ClusterSim(sched, DIST, N, wave=False, comm_delay=50.0).run(
+        rounds=1, times=t)
+    assert not dead.stalled
+    assert dead.makespan > 50.0 * alive.makespan  # fell to a 100x worker
+
+
+def test_degraded_worker_and_heterogeneous_dists():
+    from repro.sim import heterogeneous
+
+    sched = schedule_from_x(solve_scheme("xf", DIST, N, 1000))
+    t = _times(6, seed=13)
+    base = ClusterSim(sched, DIST, N, wave=False).run(rounds=6, times=t)
+    slow = ClusterSim(sched, DIST, N, wave=False,
+                      faults=[DegradedWorker(0, 40.0)]).run(rounds=6, times=t)
+    assert slow.makespan >= base.makespan - 1e-12
+    # per-worker distribution list drives the sampler column-wise
+    dists = heterogeneous(DIST, N, {1: ShiftedExponential(mu=1e-4, t0=500.0)})
+    res = ClusterSim(sched, dists, N, wave=False, seed=2).run(rounds=200)
+    assert res.times.shape == (200, N)
+    assert res.times[:, 1].mean() > 2.0 * res.times[:, 0].mean()
+
+
+# ------------------------------------------------------------- traces
+def test_trace_record_replay_and_empirical():
+    plan = Plan.build(np.asarray([2.0, 3.0, 1.0]), DIST, N, scheme="xt")
+    res = simulate_plan(plan, DIST, rounds=20, seed=21, wave=True)
+    trace = res.trace(meta={"seed": 21})
+    blob = json.loads(json.dumps(trace.to_dict()))  # through real JSON
+    back = Trace.from_dict(blob)
+    assert back.rounds == 20 and back.n_workers == N
+    np.testing.assert_array_equal(back.times, res.times)
+    # replay: identical event timeline, bit for bit
+    res2 = ClusterSim(schedule_from_plan(plan), None, N, wave=True).run(
+        rounds=20, times=back.replay())
+    np.testing.assert_array_equal(res2.decode_times, res.decode_times)
+    assert res2.makespan == res.makespan
+    # bootstrap: the empirical marginal feeds EmpiricalStraggler
+    emp = back.to_empirical()
+    draws = emp.sample(np.random.default_rng(0), (64,))
+    assert set(np.round(draws, 12)).issubset(set(np.round(trace.times.ravel(),
+                                                          12)))
+    per_worker = back.to_empirical(per_worker=True)
+    assert len(per_worker) == N
+
+
+def test_trace_rejects_bad_shapes_and_versions():
+    with pytest.raises(ValueError):
+        Trace.from_times(np.ones(5))
+    with pytest.raises(ValueError):
+        Trace.from_times(np.zeros((2, 3)))
+    with pytest.raises(ValueError):
+        Trace.from_dict({"version": 99, "times": [[1.0]]})
+
+
+# ------------------------------------------------- acceptance criterion
+@pytest.mark.parametrize("scheme", ["xf", "xt"])
+def test_mc_simulated_mean_matches_expected_tau_hat(scheme):
+    """ISSUE 2 acceptance: simulated mean runtime from the repro.sim
+    Monte-Carlo backend agrees with ``expected_tau_hat`` within 2% at
+    the Fig. 4 operating point (N=8, shifted-exponential)."""
+    from repro.sim import mc
+
+    x = solve_scheme(scheme, DIST, N, 20_000)
+    est = mc.expected_runtime(x, DIST, N, n_samples=40_000, seed=2024)
+    ref = expected_tau_hat(x, DIST, N)
+    assert abs(est["mean"] / ref - 1.0) < 0.02, (scheme, est["mean"], ref)
+
+
+def test_event_engine_mean_matches_analytics_on_shared_draws():
+    """The event engine's Monte-Carlo mean is *identical* (not just
+    within tolerance) to eq. (5) evaluated on the same draws — the
+    discrete-event realization and the closed form price the same
+    timeline."""
+    x = solve_scheme("xf", DIST, N, 20_000)
+    t = _times(300, seed=31)
+    res = ClusterSim(schedule_from_x(x), DIST, N, wave=False).run(
+        rounds=300, times=t)
+    np.testing.assert_allclose(res.round_durations().mean(),
+                               tau_hat_batch(x, t).mean(), rtol=1e-9)

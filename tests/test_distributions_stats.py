@@ -1,0 +1,71 @@
+"""Statistical tests for core/distributions.py (ISSUE 2 satellite):
+the ShiftedExponential closed forms — eq. (11) order-statistic means and
+the Lemma-2 quadrature for 1/E[1/T_(n)] — must agree with the generic
+seeded Monte-Carlo defaults of ``StragglerDistribution`` for
+N in {4, 8, 16}."""
+import numpy as np
+import pytest
+
+from repro.core import ShiftedExponential, StragglerDistribution
+
+NS = [4, 8, 16]
+# two paper-relevant operating points: Fig. 4's and a faster-worker one
+DISTS = [ShiftedExponential(mu=1e-3, t0=50.0),
+         ShiftedExponential(mu=1e-2, t0=5.0)]
+MC_TOL = 0.015  # 200k samples -> ~0.5% sampling error; 1.5% is safe
+
+
+def _mc(dist, n, method, seed):
+    """The generic Monte-Carlo default, bypassing the closed-form
+    overrides (call the base-class implementation explicitly)."""
+    return getattr(StragglerDistribution, method)(dist, n, rng=seed)
+
+
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("dist", DISTS, ids=["fig4", "fast"])
+def test_eq11_order_stats_match_mc(dist, n):
+    closed = dist.expected_order_stats(n)
+    mc = _mc(dist, n, "expected_order_stats", seed=123)
+    assert closed.shape == mc.shape == (n,)
+    np.testing.assert_allclose(mc, closed, rtol=MC_TOL)
+
+
+@pytest.mark.parametrize("n", NS)
+@pytest.mark.parametrize("dist", DISTS, ids=["fig4", "fast"])
+def test_lemma2_tprime_match_mc(dist, n):
+    closed = dist.inv_expected_inv_order_stats(n)
+    mc = _mc(dist, n, "inv_expected_inv_order_stats", seed=321)
+    assert closed.shape == mc.shape == (n,)
+    np.testing.assert_allclose(mc, closed, rtol=MC_TOL)
+
+
+@pytest.mark.parametrize("n", NS)
+def test_eq8_cross_validates_quadrature(n):
+    """The paper's eq. (8) alternating sum (valid at small N) agrees
+    with the robust quadrature path at every tested N."""
+    dist = ShiftedExponential(mu=1e-2, t0=5.0)
+    np.testing.assert_allclose(dist._tprime_eq8(n), dist._tprime_quad(n),
+                               rtol=1e-7)
+
+
+@pytest.mark.parametrize("n", NS)
+def test_order_stat_structure(n):
+    """Structural invariants the solvers rely on: both sequences are
+    strictly increasing, bounded below by t0, and harmonic-mean order
+    stats never exceed the plain means (Jensen)."""
+    dist = ShiftedExponential(mu=1e-3, t0=50.0)
+    t = dist.expected_order_stats(n)
+    tp = dist.inv_expected_inv_order_stats(n)
+    assert (np.diff(t) > 0).all() and (np.diff(tp) > 0).all()
+    assert (t > dist.t0).all() and (tp > dist.t0).all()
+    assert (tp <= t + 1e-9).all()
+    # eq. (11) mean of the top order statistic: t_N = t0 + H_N / mu
+    h_n = (1.0 / np.arange(1, n + 1)).sum()
+    np.testing.assert_allclose(t[-1], dist.t0 + h_n / dist.mu, rtol=1e-12)
+
+
+def test_mc_seeding_is_deterministic():
+    dist = ShiftedExponential(mu=1e-3, t0=50.0)
+    a = _mc(dist, 8, "expected_order_stats", seed=7)
+    b = _mc(dist, 8, "expected_order_stats", seed=7)
+    np.testing.assert_array_equal(a, b)

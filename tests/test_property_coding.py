@@ -1,0 +1,102 @@
+"""Property-based tests for the coding layer (ISSUE 2 satellite).
+
+Invariants, for EVERY registered scheme and random (N, L) draws:
+
+  * feasibility — the solved x is a nonnegative integer partition with
+    sum(x) == L, and the plan's leaf levels are monotone (Lemma 1);
+  * decode exactness — for every redundancy level s in use and ANY
+    straggler set of size u <= s, the decode vector a (zeros on the
+    stragglers) satisfies  a @ (B @ G) == sum_j G_j  to fp32 tolerance;
+  * serialization — ``Plan.from_dict(plan.to_dict())`` round-trips
+    through real JSON bit-identically: same arrays, same code bank,
+    same decode weights for the same straggler realization.
+
+Runs under real hypothesis (derandomized by conftest) or the
+deterministic conftest stub when the package is absent.  The
+``REPRO_PROPERTY_EXAMPLES`` env var scales the example counts — the
+dedicated scripts/check.sh property pass sets it to 3 so CI explores
+beyond the tier-1 defaults.
+"""
+import json
+import os
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Plan, ShiftedExponential, available_schemes
+
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+_EX = max(int(os.environ.get("REPRO_PROPERTY_EXAMPLES", "1")), 1)
+
+
+def _random_plan(rng, scheme, n_workers, total, n_leaves):
+    costs = np.asarray(rng.uniform(0.5, 8.0, size=n_leaves))
+    return Plan.build(costs, DIST, n_workers, scheme=scheme, total=total,
+                      rng=int(rng.integers(0, 2**16)))
+
+
+@settings(max_examples=6 * _EX, deadline=None)
+@given(st.data())
+def test_every_scheme_feasible_and_decodes_exactly(data):
+    n = data.draw(st.integers(3, 9), label="n_workers")
+    total = data.draw(st.integers(60, 3000), label="total")
+    n_leaves = data.draw(st.integers(1, 10), label="n_leaves")
+    seed = data.draw(st.integers(0, 2**31), label="seed")
+    rng = np.random.default_rng(seed)
+    for scheme in available_schemes():
+        plan = _random_plan(rng, scheme, n, total, n_leaves)
+        # feasibility: integer partition of the L abstract units
+        x = np.asarray(plan.x)
+        assert x.shape == (n,) and (x >= 0).all() and x.sum() == total, scheme
+        # Lemma 1: levels monotone along the (cost-ordered) leaf axis
+        assert (np.diff(plan.leaf_levels) >= 0).all(), scheme
+        # decode exactness at every level in use, any stragglers <= s
+        d = 16
+        g = rng.standard_normal((n, d))
+        want = g.sum(axis=0)
+        for s in plan.used_levels:
+            s = int(s)
+            u = int(rng.integers(0, s + 1))  # any straggler set size <= s
+            stragglers = rng.choice(n, size=u, replace=False)
+            fastest = np.setdiff1d(np.arange(n), stragglers)
+            a = plan.codes.decode(s, fastest)
+            assert np.all(a[stragglers] == 0.0), (scheme, s)
+            got = a @ (plan.codes.b(s) @ g)
+            np.testing.assert_allclose(
+                got, want, rtol=1e-4, atol=1e-4,
+                err_msg=f"scheme={scheme} N={n} s={s} u={u}")
+
+
+@settings(max_examples=12 * _EX, deadline=None)
+@given(st.data())
+def test_plan_json_roundtrip_bit_identical(data):
+    scheme = data.draw(st.sampled_from(available_schemes()), label="scheme")
+    n = data.draw(st.integers(3, 9), label="n_workers")
+    total = data.draw(st.integers(60, 2000), label="total")
+    n_leaves = data.draw(st.integers(1, 8), label="n_leaves")
+    seed = data.draw(st.integers(0, 2**31), label="seed")
+    rng = np.random.default_rng(seed)
+    plan = _random_plan(rng, scheme, n, total, n_leaves)
+
+    blob = json.loads(json.dumps(plan.to_dict()))  # through real JSON
+    plan2 = Plan.from_dict(blob)
+
+    assert plan2.scheme == plan.scheme
+    assert plan2.n_workers == plan.n_workers
+    assert plan2.total_units == plan.total_units
+    for attr in ("x", "leaf_levels", "leaf_costs", "used_levels", "b_rows"):
+        np.testing.assert_array_equal(
+            getattr(plan, attr), getattr(plan2, attr), err_msg=attr)
+    # the embedded code bank restores bit-identically ...
+    for s in plan.used_levels:
+        np.testing.assert_array_equal(plan.codes.b(int(s)),
+                                      plan2.codes.b(int(s)))
+    # ... so decode weights and eq.(2) runtimes for the SAME straggler
+    # realization are bitwise equal.
+    times = DIST.sample(rng, (n,))
+    np.testing.assert_array_equal(plan.decode_weights(times),
+                                  plan2.decode_weights(times))
+    assert plan.tau(times) == plan2.tau(times)
+    # and a second serialization is byte-stable (fixed point)
+    assert json.dumps(plan2.to_dict(), sort_keys=True) == \
+        json.dumps(blob, sort_keys=True)

@@ -221,3 +221,27 @@ def test_api_facade_surface():
     assert callable(api.build_plan)
     with pytest.raises(AttributeError):
         api.not_a_symbol
+
+
+def test_leaf_costs_of_accepts_1d_jax_costs():
+    """A 1-D jax array of costs is the cost vector itself — not a single
+    pytree leaf priced by element count."""
+    import jax.numpy as jnp
+
+    from repro.core import leaf_costs_of
+
+    want = leaf_costs_of(COSTS)
+    np.testing.assert_array_equal(leaf_costs_of(jnp.asarray(COSTS)), want)
+    np.testing.assert_array_equal(want, COSTS)
+    # 2-D arrays are still pytree leaves priced by element count
+    np.testing.assert_array_equal(leaf_costs_of(np.ones((3, 4))), [12.0])
+
+
+def test_api_all_exports_resolve():
+    """Every name advertised by repro.api.__all__ is importable and no
+    __future__ artifacts leak into the public surface."""
+    from repro import api
+
+    assert "annotations" not in api.__all__
+    for name in api.__all__:
+        assert getattr(api, name) is not None, name

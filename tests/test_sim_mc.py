@@ -1,0 +1,84 @@
+"""repro.sim.mc — the jitted vmap Monte-Carlo backend — against the
+numpy closed forms and the Plan API."""
+import numpy as np
+import pytest
+
+from repro.core import Plan, ShiftedExponential, solve_scheme
+from repro.core.runtime import tau_hat_batch
+from repro.sim import mc, schedule_from_x
+
+N = 8
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+
+
+def _times(s, seed=0, shape=None):
+    return DIST.sample(np.random.default_rng(seed), shape or (s, N))
+
+
+def test_runtime_batch_matches_numpy_eq5():
+    x = solve_scheme("xf", DIST, N, 5000)
+    t = _times(512, seed=1)
+    got = mc.runtime_batch(schedule_from_x(x), t)
+    want = tau_hat_batch(x, t)
+    # jax default fp32 vs numpy fp64
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_runtime_batch_plan_form_matches_plan_tau():
+    plan = Plan.build(np.asarray([3.0, 1.0, 4.0, 1.0, 5.0]), DIST, N,
+                      scheme="xt")
+    t = _times(64, seed=2)
+    got = mc.runtime_batch(mc.as_schedule(plan), t)
+    want = np.asarray([plan.tau(row) for row in t])
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_decode_times_batch_shape_and_order():
+    x = solve_scheme("xf", DIST, N, 5000)
+    sched = schedule_from_x(x)
+    t = _times(32, seed=3)
+    dt = mc.decode_times_batch(sched, t)
+    assert dt.shape == (32, len(sched))
+    np.testing.assert_allclose(dt.max(axis=1),
+                               mc.runtime_batch(sched, t), rtol=1e-6)
+
+
+def test_multi_round_barrier_totals():
+    """(S, R, N) input: totals are sums of per-round maxima."""
+    x = solve_scheme("xt", DIST, N, 3000)
+    t3 = _times(0, seed=4, shape=(16, 5, N))
+    got = mc.runtime_batch(schedule_from_x(x), t3)
+    want = np.stack([tau_hat_batch(x, t3[i]).sum() for i in range(16)])
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+    with pytest.raises(ValueError):
+        mc.runtime_batch(schedule_from_x(x), t3[0, 0])  # 1-D is invalid
+
+
+def test_cluster_size_mismatch_raises():
+    """A schedule solved for N=8 evaluated against 4-worker realizations
+    must error, not wrap negative indices into plausible numbers."""
+    x = solve_scheme("xf", DIST, N, 5000)  # levels up to 7
+    t4 = DIST.sample(np.random.default_rng(6), (16, 4))
+    with pytest.raises(ValueError, match="n_workers"):
+        mc.runtime_batch(schedule_from_x(x), t4)
+
+
+def test_expected_runtime_reports_sampling_error():
+    x = solve_scheme("xf", DIST, N, 5000)
+    est = mc.expected_runtime(x, DIST, N, n_samples=4000, seed=5)
+    assert est["n_samples"] == 4000 and est["rounds"] == 1
+    assert est["sem"] > 0 and est["std"] > est["sem"]
+    # seeded: exact reproducibility
+    est2 = mc.expected_runtime(x, DIST, N, n_samples=4000, seed=5)
+    assert est["mean"] == est2["mean"]
+
+
+def test_plan_simulate_mc_backend_matches_eq2_ledger():
+    plan = Plan.build(np.asarray([2.0, 7.0, 1.0]), DIST, N, scheme="xf")
+    ref = plan.simulate(DIST, 30, seed=9).ledger
+    got = plan.simulate(DIST, 30, seed=9, backend="mc").ledger
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a["times"], b["times"])
+        np.testing.assert_allclose(a["tau_coded"], b["tau_coded"], rtol=1e-4)
+    with pytest.raises(ValueError):
+        plan.simulate(DIST, 2, backend="nope")
