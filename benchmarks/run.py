@@ -24,10 +24,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from . import fig3_partitions, fig4a_runtime_vs_n, fig4b_runtime_vs_mu
-    from . import kernel_bench, roofline, sim_cluster
+    from . import heterogeneous_env, kernel_bench, roofline, sim_cluster
 
     known = {"fig3_partitions", "fig4a_runtime_vs_n", "fig4b_runtime_vs_mu",
-             "kernel_bench", "roofline", "sim_cluster"}
+             "heterogeneous_env", "kernel_bench", "roofline", "sim_cluster"}
     rows = []
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     unknown = only - known
@@ -55,6 +55,7 @@ def main(argv=None) -> None:
     section("kernel_bench", kernel_bench.main, smoke=smoke)  # encode/decode hot spot
     section("roofline", roofline.main)                       # §Roofline table
     section("sim_cluster", sim_cluster.main, smoke=smoke)    # event/MC simulator
+    section("heterogeneous_env", heterogeneous_env.main, smoke=smoke)  # Env payoff
 
     print("\nname,metric,value,status")
     for r in rows:

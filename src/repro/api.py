@@ -14,11 +14,14 @@ from __future__ import annotations
 
 from repro.core import (  # noqa: F401
     CostModel,
+    DegradedWorker,
+    Env,
     GradientCode,
     Plan,
     PlanSimulator,
     Scheme,
     UNIT_RESOLUTION,
+    WorkerDeath,
     available_schemes,
     get_scheme,
     leaf_costs_of,
@@ -30,10 +33,13 @@ from repro.core.distributions import (  # noqa: F401
     BernoulliStraggler,
     EmpiricalStraggler,
     LogNormalStraggler,
+    MixtureStraggler,
     ParetoStraggler,
+    ScaledStraggler,
     ShiftedExponential,
     StragglerDistribution,
     UniformStraggler,
+    register_distribution,
 )
 
 _LAZY = {
@@ -53,8 +59,6 @@ _LAZY = {
     "ClusterSim": ("repro.sim", "ClusterSim"),
     "ClusterConfig": ("repro.sim", "ClusterConfig"),
     "Trace": ("repro.sim", "Trace"),
-    "WorkerDeath": ("repro.sim", "WorkerDeath"),
-    "DegradedWorker": ("repro.sim", "DegradedWorker"),
     "simulate_plan": ("repro.sim", "simulate_plan"),
     "simulate_x": ("repro.sim", "simulate_x"),
     "schedule_from_plan": ("repro.sim", "schedule_from_plan"),

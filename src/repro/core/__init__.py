@@ -11,7 +11,10 @@ Public API surface (see docs/API.md):
     behind one uniform solve signature;
   * ``Plan`` — solve -> assign -> code bound to a model's leaves, with
     JSON round-trip (``to_dict``/``from_dict``) and the eq.(2) runtime
-    simulator (``plan.simulate``).
+    simulator (``plan.simulate``);
+  * ``Env`` — the worker-population model (i.i.d., heterogeneous,
+    faulted, trace-driven) every solver/simulator/trainer entry point
+    consumes; bare distributions coerce to ``Env.iid`` everywhere.
 """
 from .assignment import assign_levels_to_layers, round_x, s_to_x, x_to_s
 from .baselines import (
@@ -34,10 +37,22 @@ from .distributions import (
     BernoulliStraggler,
     EmpiricalStraggler,
     LogNormalStraggler,
+    MixtureStraggler,
     ParetoStraggler,
+    ScaledStraggler,
     ShiftedExponential,
     StragglerDistribution,
     UniformStraggler,
+    dist_from_dict,
+    dist_to_dict,
+    register_distribution,
+)
+from .env import (
+    DegradedWorker,
+    Env,
+    WorkerDeath,
+    fault_from_dict,
+    fault_to_dict,
 )
 from .runtime import (
     CostModel,

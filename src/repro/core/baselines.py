@@ -65,7 +65,10 @@ def tandon_alpha_level(dist, n_workers: int, n_samples: int = 200_000, rng=0) ->
     treating it as erasured costs (s+1)/N while waiting costs alpha/N:
     coding pays up to s* = ceil(alpha) - 1.
     """
-    draws = dist.sample(np.random.default_rng(rng), (n_samples,))
+    # marginal (worker-axis-free) draws: for an Env this is the pooled
+    # mixture "a uniformly random worker", for a distribution itself.
+    marginal = dist.pooled() if hasattr(dist, "pooled") else dist
+    draws = marginal.sample(np.random.default_rng(rng), (n_samples,))
     med = np.median(draws)
     slow = draws[draws > med].mean()
     fast = draws[draws <= med].mean()

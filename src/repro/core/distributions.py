@@ -8,10 +8,16 @@ log-normal heavy tails, uniform, and empirical (trace-driven) models.
 
 All distributions expose
   - ``sample(rng, shape)``            -> np.ndarray of cycle times  (>0)
+  - ``cdf(t)``                        -> Pr[T <= t] (vectorized)
   - ``expected_order_stats(n)``       -> t_n = E[T_(n)], n=1..N     (paper eq. 11)
   - ``inv_expected_inv_order_stats(n)``-> t'_n = 1 / E[1/T_(n)]     (paper Lemma 2)
 the latter two defaulting to Monte-Carlo / quadrature estimates; the
 shifted-exponential overrides them with the paper's closed forms.
+
+Every distribution is a frozen dataclass and JSON round-trips through
+``dist_to_dict``/``dist_from_dict`` (the class registry that lets a
+``repro.core.env.Env`` embed bit-identically inside ``Plan.to_dict``).
+Third-party distributions join with ``@register_distribution``.
 """
 from __future__ import annotations
 
@@ -31,6 +37,11 @@ __all__ = [
     "LogNormalStraggler",
     "UniformStraggler",
     "EmpiricalStraggler",
+    "ScaledStraggler",
+    "MixtureStraggler",
+    "register_distribution",
+    "dist_to_dict",
+    "dist_from_dict",
 ]
 
 
@@ -38,6 +49,60 @@ def _as_rng(rng) -> np.random.Generator:
     if isinstance(rng, np.random.Generator):
         return rng
     return np.random.default_rng(rng)
+
+
+# ------------------------------------------------------- JSON serialization
+#: class-name -> class registry for ``dist_from_dict`` (the Env/Plan
+#: serialization path).  Built-ins register below; third parties via
+#: ``@register_distribution``.
+_DIST_REGISTRY: dict = {}
+
+
+def register_distribution(cls):
+    """Class decorator: make ``cls`` JSON round-trippable by name."""
+    if not (isinstance(cls, type) and issubclass(cls, StragglerDistribution)):
+        raise TypeError("register_distribution needs a StragglerDistribution "
+                        "subclass")
+    _DIST_REGISTRY[cls.__name__] = cls
+    return cls
+
+
+def _encode_field(v):
+    if isinstance(v, StragglerDistribution):
+        return {"__dist__": dist_to_dict(v)}
+    if isinstance(v, (tuple, list)):
+        return [_encode_field(x) for x in v]
+    return v
+
+
+def _decode_field(v):
+    if isinstance(v, dict) and "__dist__" in v:
+        return dist_from_dict(v["__dist__"])
+    if isinstance(v, list):  # all sequence-valued fields are stored as tuples
+        return tuple(_decode_field(x) for x in v)
+    return v
+
+
+def dist_to_dict(d: "StragglerDistribution") -> dict:
+    """JSON-able snapshot {type, **fields}; exact (no float formatting)."""
+    name = type(d).__name__
+    if _DIST_REGISTRY.get(name) is not type(d):
+        raise TypeError(
+            f"{name} is not registered; decorate it with @register_distribution")
+    out = {"type": name}
+    for f in dataclasses.fields(d):
+        out[f.name] = _encode_field(getattr(d, f.name))
+    return out
+
+
+def dist_from_dict(blob: dict) -> "StragglerDistribution":
+    """Inverse of ``dist_to_dict`` (bit-identical fields)."""
+    cls = _DIST_REGISTRY.get(blob.get("type"))
+    if cls is None:
+        raise KeyError(f"unknown distribution type {blob.get('type')!r}; "
+                       f"registered: {sorted(_DIST_REGISTRY)}")
+    kw = {k: _decode_field(v) for k, v in blob.items() if k != "type"}
+    return cls(**kw)
 
 
 @dataclass(frozen=True)
@@ -52,6 +117,14 @@ class StragglerDistribution:
     # ------------------------------------------------------------------ api
     def sample(self, rng, shape) -> np.ndarray:  # pragma: no cover - abstract
         raise NotImplementedError
+
+    def cdf(self, t) -> np.ndarray:
+        """Pr[T <= t].  Subclasses with a closed form override; the
+        quadrature order-statistic path (``Env`` non-i.i.d. populations)
+        requires it, the MC path does not."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no cdf; use the Monte-Carlo "
+            "order-statistic estimators")
 
     def mean(self) -> float:
         rng = np.random.default_rng(0)
@@ -81,6 +154,7 @@ class StragglerDistribution:
 # ---------------------------------------------------------------------------
 # Shifted exponential (paper §V-C):  Pr[T <= t] = 1 - exp(-mu (t - t0)), t>=t0
 # ---------------------------------------------------------------------------
+@register_distribution
 @dataclass(frozen=True)
 class ShiftedExponential(StragglerDistribution):
     mu: float = 1e-3
@@ -171,6 +245,7 @@ class ShiftedExponential(StragglerDistribution):
 # Two-point (Bernoulli) model: recovers the FULL straggler model of [1]-[3]
 # when t_slow -> inf (a straggler contributes nothing in finite time).
 # ---------------------------------------------------------------------------
+@register_distribution
 @dataclass(frozen=True)
 class BernoulliStraggler(StragglerDistribution):
     p_straggle: float = 0.1
@@ -182,10 +257,16 @@ class BernoulliStraggler(StragglerDistribution):
         is_slow = rng.random(shape) < self.p_straggle
         return np.where(is_slow, self.t_slow, self.t_fast)
 
+    def cdf(self, t) -> np.ndarray:
+        t = np.asarray(t, np.float64)
+        return np.where(t >= self.t_slow, 1.0,
+                        np.where(t >= self.t_fast, 1.0 - self.p_straggle, 0.0))
+
     def mean(self) -> float:
         return self.p_straggle * self.t_slow + (1 - self.p_straggle) * self.t_fast
 
 
+@register_distribution
 @dataclass(frozen=True)
 class ParetoStraggler(StragglerDistribution):
     alpha: float = 2.5
@@ -195,12 +276,19 @@ class ParetoStraggler(StragglerDistribution):
         rng = _as_rng(rng)
         return self.t_min * (1.0 + rng.pareto(self.alpha, size=shape))
 
+    def cdf(self, t) -> np.ndarray:
+        t = np.asarray(t, np.float64)
+        with np.errstate(divide="ignore"):
+            tail = np.power(np.where(t > 0, self.t_min / t, np.inf), self.alpha)
+        return np.where(t >= self.t_min, 1.0 - tail, 0.0)
+
     def mean(self) -> float:
         if self.alpha <= 1:
             return math.inf
         return self.t_min * self.alpha / (self.alpha - 1.0)
 
 
+@register_distribution
 @dataclass(frozen=True)
 class LogNormalStraggler(StragglerDistribution):
     mu_log: float = 0.0
@@ -211,10 +299,18 @@ class LogNormalStraggler(StragglerDistribution):
         rng = _as_rng(rng)
         return self.shift + rng.lognormal(self.mu_log, self.sigma_log, size=shape)
 
+    def cdf(self, t) -> np.ndarray:
+        t = np.asarray(t, np.float64)
+        z = np.where(t > self.shift, t - self.shift, np.nan)
+        out = 0.5 * (1.0 + special.erf(
+            (np.log(z) - self.mu_log) / (self.sigma_log * math.sqrt(2.0))))
+        return np.where(t > self.shift, out, 0.0)
+
     def mean(self) -> float:
         return self.shift + math.exp(self.mu_log + 0.5 * self.sigma_log**2)
 
 
+@register_distribution
 @dataclass(frozen=True)
 class UniformStraggler(StragglerDistribution):
     lo: float = 0.5
@@ -224,10 +320,15 @@ class UniformStraggler(StragglerDistribution):
         rng = _as_rng(rng)
         return rng.uniform(self.lo, self.hi, size=shape)
 
+    def cdf(self, t) -> np.ndarray:
+        t = np.asarray(t, np.float64)
+        return np.clip((t - self.lo) / (self.hi - self.lo), 0.0, 1.0)
+
     def mean(self) -> float:
         return 0.5 * (self.lo + self.hi)
 
 
+@register_distribution
 @dataclass(frozen=True)
 class EmpiricalStraggler(StragglerDistribution):
     """Bootstrap-resamples a measured trace of cycle times."""
@@ -241,5 +342,84 @@ class EmpiricalStraggler(StragglerDistribution):
         arr = np.asarray(self.trace, dtype=np.float64)
         return rng.choice(arr, size=shape, replace=True)
 
+    def cdf(self, t) -> np.ndarray:
+        if not self.trace:
+            raise ValueError("EmpiricalStraggler needs a non-empty trace")
+        arr = np.sort(np.asarray(self.trace, np.float64))
+        t = np.asarray(t, np.float64)
+        return np.searchsorted(arr, t, side="right") / arr.size
+
     def mean(self) -> float:
         return float(np.mean(np.asarray(self.trace)))
+
+
+# ---------------------------------------------------------------------------
+# Population-building combinators (the `Env` vocabulary): a worker that is
+# a scaled copy of another generation's machine, and the marginal mixture
+# "a uniformly random worker of a heterogeneous cluster".
+# ---------------------------------------------------------------------------
+@register_distribution
+@dataclass(frozen=True)
+class ScaledStraggler(StragglerDistribution):
+    """``factor`` x a base distribution — e.g. a previous-generation
+    machine that runs every cycle 2.5x slower than the current fleet."""
+
+    base: Optional[StragglerDistribution] = None
+    factor: float = 1.0
+
+    def __post_init__(self):
+        if self.base is None:
+            raise ValueError("ScaledStraggler needs a base distribution")
+        if self.factor <= 0:
+            raise ValueError("factor must be positive")
+
+    def sample(self, rng, shape) -> np.ndarray:
+        return self.factor * self.base.sample(rng, shape)
+
+    def cdf(self, t) -> np.ndarray:
+        return self.base.cdf(np.asarray(t, np.float64) / self.factor)
+
+    def mean(self) -> float:
+        return self.factor * self.base.mean()
+
+
+@register_distribution
+@dataclass(frozen=True)
+class MixtureStraggler(StragglerDistribution):
+    """Finite mixture: each draw picks a component (the i.i.d. marginal
+    of a heterogeneous population, ``Env.pooled()``)."""
+
+    components: tuple = ()
+    weights: Optional[tuple] = None  # None -> uniform
+
+    def __post_init__(self):
+        if not self.components:
+            raise ValueError("MixtureStraggler needs components")
+        if self.weights is not None and len(self.weights) != len(self.components):
+            raise ValueError("weights/components length mismatch")
+
+    def _p(self):
+        if self.weights is None:
+            return None
+        w = np.asarray(self.weights, np.float64)
+        return w / w.sum()
+
+    def sample(self, rng, shape) -> np.ndarray:
+        rng = _as_rng(rng)
+        shape = (shape,) if isinstance(shape, int) else tuple(shape)
+        idx = rng.choice(len(self.components), size=shape, p=self._p())
+        draws = np.stack([c.sample(rng, shape) for c in self.components],
+                         axis=-1)
+        return np.take_along_axis(draws, idx[..., None], axis=-1)[..., 0]
+
+    def cdf(self, t) -> np.ndarray:
+        p = self._p()
+        if p is None:
+            p = np.full(len(self.components), 1.0 / len(self.components))
+        return sum(w * c.cdf(t) for w, c in zip(p, self.components))
+
+    def mean(self) -> float:
+        p = self._p()
+        if p is None:
+            p = np.full(len(self.components), 1.0 / len(self.components))
+        return float(sum(w * c.mean() for w, c in zip(p, self.components)))

@@ -1,0 +1,427 @@
+"""First-class straggler-environment API: ONE worker-population model.
+
+The paper (§II) assumes i.i.d. cycle times T_n known to the master, but
+a real cluster is richer: mixed machine generations, thermally
+throttled nodes, deaths, measured traces.  ``Env`` unifies everything
+the system knows about the N workers behind one protocol that every
+layer consumes — solvers (``solve_scheme``), ``Plan.build``,
+``plan.simulate(backend=...)``, ``ClusterSim``, ``Trainer``,
+``launch/train.py``:
+
+    env = Env.iid(ShiftedExponential(mu=1e-3, t0=50.0), 8)
+    env = Env.heterogeneous([fast] * 6 + [ScaledStraggler(fast, 2.5)] * 2)
+    env = env.with_faults(WorkerDeath(0, at_round=5),
+                          DegradedWorker(3, 6.0, from_round=10))
+    env = Env.from_trace("cluster.json")          # measured, per-worker
+
+A bare ``StragglerDistribution`` coerces to ``Env.iid(dist, n)`` at
+every entry point (``Env.coerce``), so pre-Env call sites run
+unchanged and — because the i.i.d. fast path delegates straight to the
+wrapped distribution — produce bit-identical results.
+
+``Env`` exposes the same order-statistic interface as a distribution
+(``expected_order_stats`` / ``inv_expected_inv_order_stats``), which is
+exactly what Theorems 2/3 need: for a *non-identical* population the
+closed forms evaluate at the population's E[T_(n)] / 1/E[1/T_(n)],
+estimated by Monte-Carlo (default) or by Poisson-binomial quadrature
+over the per-worker CDFs (``method="quad"``).  That turns
+heterogeneous-cluster optimization — partition the blocks knowing
+worker 7 is a previous-generation machine — into a first-class
+workload (benchmarks/heterogeneous_env.py).
+
+JSON round-trip: ``Env.to_dict()``/``from_dict`` are exact, so an env
+embeds bit-identically inside ``Plan.to_dict`` (checkpoint -> serve).
+
+Fault semantics by consumer:
+
+* the event engine (``ClusterSim``, ``plan.simulate(backend="event")``)
+  realizes every fault — deaths stall a block when redundancy runs out;
+* the analytical backends (eq2 / mc) fold ``DegradedWorker`` factors
+  into the drawn times (same math as ``sim.faults.apply_faults``) and
+  *reject* deaths — eq. (2) cannot price a permanently absent worker;
+* the solver view (order statistics) folds in only the *static*
+  degradations (``from_round == 0``, permanent machine facts); deaths
+  and mid-run throttling are transient events the master cannot plan
+  coordinates around.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .distributions import (
+    MixtureStraggler,
+    ScaledStraggler,
+    StragglerDistribution,
+    _as_rng,
+    dist_from_dict,
+    dist_to_dict,
+)
+
+__all__ = [
+    "Env",
+    "WorkerDeath",
+    "DegradedWorker",
+    "fault_to_dict",
+    "fault_from_dict",
+]
+
+_ENV_VERSION = 1
+
+
+# ------------------------------------------------------- declarative faults
+# Canonical home of the fault vocabulary (repro.sim.faults re-exports
+# these for back-compat; apply_faults — the times-matrix realization —
+# stays sim-side).
+@dataclass(frozen=True)
+class WorkerDeath:
+    """Worker ``worker`` delivers nothing at/after ``at_time`` (absolute
+    simulated time) or from round ``at_round`` on; a block mid-compute
+    when the death hits is lost."""
+
+    worker: int
+    at_time: Optional[float] = None
+    at_round: Optional[int] = None
+
+    def __post_init__(self):
+        if self.at_time is None and self.at_round is None:
+            raise ValueError("WorkerDeath needs at_time or at_round")
+
+
+@dataclass(frozen=True)
+class DegradedWorker:
+    """Worker ``worker`` runs ``factor``x slower from round ``from_round``."""
+
+    worker: int
+    factor: float
+    from_round: int = 0
+
+    def __post_init__(self):
+        if self.factor <= 0:
+            raise ValueError("factor must be positive")
+
+
+_FAULT_TYPES = {"WorkerDeath": WorkerDeath, "DegradedWorker": DegradedWorker}
+
+
+def fault_to_dict(f) -> dict:
+    """JSON-able snapshot {type, **fields} of a declarative fault."""
+    name = type(f).__name__
+    if _FAULT_TYPES.get(name) is not type(f):
+        raise TypeError(f"unknown fault type {name!r}")
+    return {"type": name, **dataclasses.asdict(f)}
+
+
+def fault_from_dict(blob: dict):
+    cls = _FAULT_TYPES.get(blob.get("type"))
+    if cls is None:
+        raise KeyError(f"unknown fault type {blob.get('type')!r}; "
+                       f"known: {sorted(_FAULT_TYPES)}")
+    return cls(**{k: v for k, v in blob.items() if k != "type"})
+
+
+# ------------------------------------------------------------------ the Env
+@dataclass(frozen=True)
+class Env:
+    """A worker population: per-worker cycle-time distributions plus
+    declarative faults.  Construct via ``iid`` / ``heterogeneous`` /
+    ``with_faults`` / ``from_trace`` / ``coerce``."""
+
+    dists: tuple                 # length-N per-worker distributions
+    faults: tuple = ()           # WorkerDeath / DegradedWorker, declarative
+    #: sample count for the Monte-Carlo order-statistic estimators of a
+    #: non-identical population (the i.i.d. path delegates to the dist).
+    mc_samples: int = 200_000
+
+    def __post_init__(self):
+        dists = tuple(self.dists)
+        object.__setattr__(self, "dists", dists)
+        object.__setattr__(self, "faults", tuple(self.faults))
+        if not dists:
+            raise ValueError("Env needs at least one worker distribution")
+        for d in dists:
+            if not isinstance(d, StragglerDistribution):
+                raise TypeError(f"Env worker model {d!r} is not a "
+                                "StragglerDistribution")
+        n = len(dists)
+        for f in self.faults:
+            if type(f).__name__ not in _FAULT_TYPES:
+                raise TypeError(f"unknown fault {f!r}")
+            if not (0 <= f.worker < n):
+                raise ValueError(f"fault worker {f.worker} out of range [0,{n})")
+
+    # ------------------------------------------------------------- building
+    @classmethod
+    def iid(cls, dist: StragglerDistribution, n_workers: int, **kw) -> "Env":
+        """Homogeneous population: N i.i.d. workers (the paper's §II)."""
+        if n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
+        return cls(dists=(dist,) * int(n_workers), **kw)
+
+    @classmethod
+    def heterogeneous(cls, dists: Sequence[StragglerDistribution],
+                      **kw) -> "Env":
+        """Per-worker distribution list (mixed machine generations);
+        absorbs the old ``repro.sim.faults.heterogeneous`` helper."""
+        return cls(dists=tuple(dists), **kw)
+
+    def with_faults(self, *faults) -> "Env":
+        """A copy of this env with declarative faults appended."""
+        return dataclasses.replace(self, faults=self.faults + tuple(faults))
+
+    @classmethod
+    def from_trace(cls, trace_or_path, per_worker: bool = True, **kw) -> "Env":
+        """Bootstrap an env from a recorded ``repro.sim.Trace`` (object
+        or JSON path): worker j resamples column j (``per_worker=True``,
+        preserves heterogeneity) or the pooled marginals."""
+        from repro.sim.trace import Trace  # deferred: sim imports core
+
+        trace = (trace_or_path if isinstance(trace_or_path, Trace)
+                 else Trace.load(trace_or_path))
+        emp = trace.to_empirical(per_worker=per_worker)
+        if per_worker:
+            return cls.heterogeneous(emp, **kw)
+        return cls.iid(emp, trace.n_workers, **kw)
+
+    @classmethod
+    def coerce(cls, obj, n_workers: Optional[int] = None) -> "Env":
+        """The one coercion point every entry takes: an ``Env`` passes
+        through (validated against ``n_workers`` when given), a bare
+        distribution becomes ``Env.iid(dist, n_workers)``, a sequence of
+        distributions becomes ``Env.heterogeneous``."""
+        if isinstance(obj, cls):
+            if n_workers is not None and obj.n_workers != int(n_workers):
+                raise ValueError(f"env has {obj.n_workers} workers, caller "
+                                 f"expects {n_workers}")
+            return obj
+        if isinstance(obj, StragglerDistribution):
+            if n_workers is None:
+                raise ValueError("coercing a bare distribution needs n_workers")
+            return cls.iid(obj, n_workers)
+        if isinstance(obj, (list, tuple)):
+            env = cls.heterogeneous(obj)
+            if n_workers is not None and env.n_workers != int(n_workers):
+                raise ValueError(f"{env.n_workers} per-worker dists, caller "
+                                 f"expects {n_workers}")
+            return env
+        raise TypeError(f"cannot coerce {type(obj).__name__} to Env")
+
+    # -------------------------------------------------------------- queries
+    @property
+    def n_workers(self) -> int:
+        return len(self.dists)
+
+    @property
+    def is_iid(self) -> bool:
+        """Identical workers and no faults: the paper's §II regime, where
+        the closed-form order statistics apply verbatim."""
+        return not self.faults and all(d == self.dists[0] for d in self.dists)
+
+    @property
+    def iid_dist(self) -> Optional[StragglerDistribution]:
+        """The single shared distribution when ``is_iid``, else None."""
+        return self.dists[0] if self.is_iid else None
+
+    def has_deaths(self) -> bool:
+        return any(isinstance(f, WorkerDeath) for f in self.faults)
+
+    def degradation_factors(self, round_idx: int = 0) -> np.ndarray:
+        """(N,) slowdown per worker in effect at round ``round_idx``:
+        the product of ``DegradedWorker`` factors with
+        ``from_round <= round_idx``.  ``round_idx=0`` gives the *static*
+        (permanent machine-fact) factors the solver view folds in."""
+        fac = np.ones(self.n_workers)
+        for f in self.faults:
+            if isinstance(f, DegradedWorker) and f.from_round <= round_idx:
+                fac[f.worker] *= f.factor
+        return fac
+
+    def effective_dists(self) -> tuple:
+        """Per-worker distributions as the *solver* should see them:
+        static degradations folded in; deaths and mid-run throttling are
+        event-level and excluded (see module docstring)."""
+        fac = self.degradation_factors(0)
+        return tuple(d if fac[j] == 1.0 else ScaledStraggler(base=d, factor=float(fac[j]))
+                     for j, d in enumerate(self.dists))
+
+    def solver_view(self) -> "Env":
+        """The population as the block-partition solvers see it: static
+        degradations folded into the per-worker distributions, all other
+        faults (deaths, mid-run throttling — transient events the master
+        cannot plan coordinates around) dropped.  ``solve_scheme`` routes
+        every registered scheme through this view, so sampling-based
+        solvers (SPSG, single-BCGC, ...) and the closed forms optimize
+        against the same effective population.  Fault-free envs pass
+        through unchanged (identity — keeps the i.i.d. fast path
+        bit-identical)."""
+        if not self.faults:
+            return self
+        return Env(dists=self.effective_dists(), mc_samples=self.mc_samples)
+
+    def pooled(self) -> StragglerDistribution:
+        """The i.i.d. marginal of this population: what a uniformly
+        random worker looks like (the homogeneous approximation a
+        heterogeneity-blind solver would use)."""
+        eff = self.effective_dists()
+        if all(d == eff[0] for d in eff):
+            return eff[0]
+        return MixtureStraggler(components=eff)
+
+    # ------------------------------------------------------------- sampling
+    def sample(self, rng, shape) -> np.ndarray:
+        """Draw base cycle times (no faults).  For a non-identical
+        population the trailing axis must be ``n_workers`` (column j ~
+        worker j, matching ``repro.sim.draw_times``); the i.i.d. path
+        delegates to the wrapped distribution — any shape, identical
+        stream to the bare distribution."""
+        return self._sample(rng, shape, self.dists)
+
+    def sample_effective(self, rng, shape) -> np.ndarray:
+        """Like ``sample`` but from ``effective_dists()`` (static
+        degradations folded in) — the solver-view draw."""
+        return self._sample(rng, shape, self.effective_dists())
+
+    def _sample(self, rng, shape, dists) -> np.ndarray:
+        rng = _as_rng(rng)
+        if all(d == dists[0] for d in dists):
+            return dists[0].sample(rng, shape)
+        shape = (shape,) if isinstance(shape, int) else tuple(shape)
+        if not shape or shape[-1] != self.n_workers:
+            raise ValueError(
+                f"heterogeneous Env.sample needs a (..., {self.n_workers}) "
+                f"shape (one column per worker); got {shape}")
+        cols = [d.sample(rng, shape[:-1]) for d in dists]
+        return np.stack(cols, axis=-1).astype(np.float64)
+
+    def mean(self) -> float:
+        """Mean cycle time of a uniformly random worker."""
+        return float(np.mean([d.mean() for d in self.effective_dists()]))
+
+    def means(self) -> np.ndarray:
+        """(N,) per-worker mean cycle times (solver view)."""
+        return np.asarray([d.mean() for d in self.effective_dists()])
+
+    def sample_sorted(self, rng, n_workers: Optional[int] = None,
+                      n_draws: int = 0) -> np.ndarray:
+        """(n_draws, N) of order statistics T_(1) <= ... <= T_(N) of the
+        effective population (distribution-interface compatible)."""
+        self._check_n(n_workers)
+        t = self.sample_effective(rng, (int(n_draws), self.n_workers))
+        t.sort(axis=1)
+        return t
+
+    # ------------------------------------------------------ order statistics
+    def _check_n(self, n_workers) -> int:
+        if n_workers is not None and int(n_workers) != self.n_workers:
+            raise ValueError(f"env has {self.n_workers} workers, caller "
+                             f"expects {n_workers}")
+        return self.n_workers
+
+    def expected_order_stats(self, n_workers: Optional[int] = None, rng=0,
+                             method: str = "auto") -> np.ndarray:
+        """t with t[k-1] = E[T_(k)] of the (effective) population.
+
+        i.i.d. env -> delegate to the wrapped distribution (closed form
+        where it has one, e.g. shifted-exponential eq. (11) — bit-
+        identical to the bare-distribution path).  Non-identical ->
+        ``method="mc"`` (default under "auto") Monte-Carlo over
+        ``mc_samples`` joint draws, or ``method="quad"`` Poisson-
+        binomial quadrature over the per-worker CDFs (deterministic;
+        needs every dist to implement ``cdf``).
+        """
+        n = self._check_n(n_workers)
+        if self.is_iid:
+            return self.dists[0].expected_order_stats(n, rng)
+        if method == "quad":
+            return self._order_stats_quad("mean")
+        draws = self.sample_sorted(rng, n, self.mc_samples)
+        return draws.mean(axis=0)
+
+    def inv_expected_inv_order_stats(self, n_workers: Optional[int] = None,
+                                     rng=0, method: str = "auto") -> np.ndarray:
+        """t' with t'[k-1] = 1 / E[1/T_(k)] (paper Lemma 2, generalized
+        to non-identical populations; same method selection as
+        ``expected_order_stats``)."""
+        n = self._check_n(n_workers)
+        if self.is_iid:
+            return self.dists[0].inv_expected_inv_order_stats(n, rng)
+        if method == "quad":
+            return 1.0 / self._order_stats_quad("inv")
+        draws = self.sample_sorted(rng, n, self.mc_samples)
+        return 1.0 / (1.0 / draws).mean(axis=0)
+
+    def _order_stat_tails(self):
+        """t -> (N,) tail P[T_(k) > t], k = 1..N, via the Poisson-
+        binomial count DP (P[#{T_i <= t} = c] for independent
+        non-identical workers, O(N^2) per t).  CDF callables are hoisted
+        and evaluations memoized, since all N quadratures below share
+        the one tail function (quad just probes different abscissas)."""
+        n = self.n_workers
+        cdfs = [d.cdf for d in self.effective_dists()]
+        cache: dict = {}
+
+        def tails(t: float) -> np.ndarray:
+            out = cache.get(t)
+            if out is None:
+                count = np.zeros(n + 1)
+                count[0] = 1.0
+                for c in cdfs:
+                    pi = float(c(t))
+                    count[1:] = count[1:] * (1.0 - pi) + count[:-1] * pi
+                    count[0] *= 1.0 - pi
+                below = np.cumsum(count)  # P[#{T_i <= t} <= c], c = 0..N
+                out = cache[t] = below[:-1]  # P[T_(k) > t] = P[count <= k-1]
+            return out
+
+        return tails
+
+    def _order_stats_quad(self, kind: str) -> np.ndarray:
+        """E[T_(k)] ("mean") or E[1/T_(k)] ("inv") for every k by
+        quadrature over the Poisson-binomial order-statistic tail."""
+        from scipy import integrate
+
+        n = self.n_workers
+        tails = self._order_stat_tails()
+        out = np.empty(n)
+        for k in range(1, n + 1):
+            if kind == "mean":
+                # E[T_(k)] = int_0^inf P[T_(k) > t] dt   (T > 0)
+                def integrand(t, k=k):
+                    return float(tails(t)[k - 1])
+            else:
+                # E[1/T_(k)] = int_0^inf P[T_(k) < 1/u] du
+                def integrand(u, k=k):
+                    if u <= 0.0:
+                        return 1.0
+                    return 1.0 - float(tails(1.0 / u)[k - 1])
+            val, _ = integrate.quad(integrand, 0.0, np.inf, limit=400)
+            out[k - 1] = val
+        return out
+
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        """Exact JSON-able snapshot; embeds bit-identically inside
+        ``Plan.to_dict`` (floats round-trip exactly through json)."""
+        return {
+            "version": _ENV_VERSION,
+            "n_workers": self.n_workers,
+            "mc_samples": int(self.mc_samples),
+            "dists": [dist_to_dict(d) for d in self.dists],
+            "faults": [fault_to_dict(f) for f in self.faults],
+        }
+
+    @classmethod
+    def from_dict(cls, blob: dict) -> "Env":
+        if blob.get("version") != _ENV_VERSION:
+            raise ValueError(f"unknown Env version {blob.get('version')!r}")
+        env = cls(
+            dists=tuple(dist_from_dict(d) for d in blob["dists"]),
+            faults=tuple(fault_from_dict(f) for f in blob.get("faults", ())),
+            mc_samples=int(blob.get("mc_samples", 200_000)),
+        )
+        if env.n_workers != int(blob["n_workers"]):
+            raise ValueError("Env blob n_workers/dists length mismatch")
+        return env

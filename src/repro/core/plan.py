@@ -6,25 +6,32 @@ footnote-2/3 extension), the per-level Tandon cyclic codes, and each
 worker's dense coding rows.  It is the unit the trainer consumes, the
 benchmarks score, and the serving stack restores:
 
-    plan = Plan.build(params, dist, n_workers=8, scheme="xf")
-    sim  = plan.simulate(dist, steps=100)         # eq.(2) runtime ledger
-    blob = plan.to_dict()                         # JSON round-trip
+    env  = Env.iid(dist, 8)        # or heterogeneous/faulted/trace-driven
+    plan = Plan.build(params, env, scheme="xf")
+    sim  = plan.simulate(env, steps=100)          # eq.(2) runtime ledger
+    blob = plan.to_dict()                         # JSON round-trip (+ env)
     plan2 = Plan.from_dict(blob)                  # bit-identical decode
 
 ``Plan.build`` accepts a parameter pytree (leaves priced by size), a
 pytree of ShapeDtypeStructs (dry-run, zero allocation), or a plain 1-D
-cost vector.  Serialization embeds the per-level code matrices, so a
-restored plan decodes bit-identically for the same straggler
-realization (checkpoint/serve reuse).
+cost vector; its straggler argument is an ``Env`` or anything
+``Env.coerce`` accepts (a bare ``StragglerDistribution`` plus
+``n_workers`` keeps working unchanged).  Serialization embeds the
+per-level code matrices AND the env (bit-identical round-trip), so a
+restored plan decodes identically for the same straggler realization
+and remembers the population it was optimized for (checkpoint/serve
+reuse, heterogeneous-cluster audits).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
 
 from .assignment import assign_levels_to_layers
 from .coding import GradientCode
+from .env import Env
 from .runtime import CostModel, DEFAULT_COST
 from .schemes import solve_scheme
 
@@ -72,22 +79,31 @@ class Plan:
     codes: GradientCode = field(repr=False, default=None)
     scheme: str = "xf"
     total_units: int = UNIT_RESOLUTION
+    #: the worker population this plan was optimized for (None on plans
+    #: restored from pre-Env blobs).
+    env: Optional[Env] = None
 
     # ------------------------------------------------------------ construction
     @classmethod
-    def build(cls, params_or_costs, dist, n_workers: int, *,
+    def build(cls, params_or_costs, env, n_workers: Optional[int] = None, *,
               scheme: str = "xf", rng: int = 0, cost: CostModel = DEFAULT_COST,
               prefer_fractional: bool = False, s_cap=None,
               total: int = UNIT_RESOLUTION) -> "Plan":
         """Optimize the partition and bind it to this model's leaves.
 
-        ``scheme`` is any name from ``available_schemes()`` (or a
-        registered alias).  ``prefer_fractional=False``: the trainer
-        always uses Tandon's cyclic code so every level shares the one
-        cyclic shard allocation I_n.  ``s_cap`` bounds the top
-        redundancy level (SPMD work/tolerance co-design).
+        ``env`` is an ``Env`` (``n_workers`` then optional, validated if
+        given) or anything ``Env.coerce`` accepts — a bare
+        ``StragglerDistribution`` with ``n_workers``, or a per-worker
+        distribution list.  ``scheme`` is any name from
+        ``available_schemes()`` (or a registered alias).
+        ``prefer_fractional=False``: the trainer always uses Tandon's
+        cyclic code so every level shares the one cyclic shard
+        allocation I_n.  ``s_cap`` bounds the top redundancy level
+        (SPMD work/tolerance co-design).
         """
-        x = solve_scheme(scheme, dist, n_workers, total, cost=cost, rng=rng,
+        env = Env.coerce(env, n_workers)
+        n_workers = env.n_workers
+        x = solve_scheme(scheme, env, n_workers, total, cost=cost, rng=rng,
                          s_cap=s_cap)
         costs = leaf_costs_of(params_or_costs)
         levels = assign_levels_to_layers(costs, x)
@@ -100,6 +116,7 @@ class Plan:
             n_workers=n_workers, x=x, leaf_levels=levels,
             leaf_costs=costs / costs.sum(), used_levels=used, s_max=s_max,
             b_rows=b_rows, codes=codes, scheme=scheme, total_units=int(total),
+            env=env,
         )
 
     @staticmethod
@@ -153,18 +170,30 @@ class Plan:
         return float(cost.scale(self.n_workers) * np.max(t_term * work))
 
     # ------------------------------------------------------------ simulation
-    def simulator(self, dist, seed: int = 0,
-                  cost: CostModel = DEFAULT_COST) -> "PlanSimulator":
-        """Per-step straggler sampler + runtime ledger for this plan."""
-        return PlanSimulator(self, dist, seed=seed, cost=cost)
+    def _env_of(self, env) -> Env:
+        """The population to simulate against: the argument if given,
+        else the env this plan was built for."""
+        if env is None:
+            if self.env is None:
+                raise ValueError("plan has no bound env; pass one explicitly")
+            return self.env
+        return Env.coerce(env, self.n_workers)
 
-    def simulate(self, dist, steps: int, *, seed: int = 0,
+    def simulator(self, env=None, seed: int = 0,
+                  cost: CostModel = DEFAULT_COST) -> "PlanSimulator":
+        """Per-step straggler sampler + runtime ledger for this plan.
+        ``env`` defaults to the plan's bound env; a bare distribution
+        coerces to ``Env.iid``."""
+        return PlanSimulator(self, self._env_of(env), seed=seed, cost=cost)
+
+    def simulate(self, env=None, steps: int = 1, *, seed: int = 0,
                  cost: CostModel = DEFAULT_COST,
                  backend: str = "eq2") -> "PlanSimulator":
         """Run ``steps`` straggler realizations; returns the simulator
         with its eq.(2) ledger filled (``.ledger``, ``.summary()``).
 
-        ``backend`` selects how each round is priced:
+        ``env`` is an ``Env`` / bare distribution / None (the plan's
+        bound env).  ``backend`` selects how each round is priced:
 
         * ``"eq2"``  — the closed-form fast path (default): eq. (2) on
           the leaf-block layout, one numpy evaluation per draw.
@@ -172,13 +201,20 @@ class Plan:
           plan end-to-end (barrier rounds, leaf-form schedule).  Same
           draws, same ledger — per-round durations agree with eq. (2)
           to float precision; use ``repro.sim`` directly for wave
-          pipelining, faults, and traces.
+          pipelining and traces.
         * ``"mc"``  — the jitted ``repro.sim.mc`` vmap backend: all
           ``steps`` realizations priced in one vectorized call.  Runs
           in jax's default fp32, so ledger values agree with the fp64
           backends to ~1e-4 relative, not bitwise.
+
+        Env faults: ``DegradedWorker`` slowdowns are folded into the
+        drawn times on every backend (identically — the ledgers still
+        agree); ``WorkerDeath`` is realizable only by the event engine
+        (eq2/mc raise), where an uncovered death shows up as an
+        infinite round duration.
         """
-        sim = self.simulator(dist, seed=seed, cost=cost)
+        env = self._env_of(env)
+        sim = PlanSimulator(self, env, seed=seed, cost=cost)
         if backend == "eq2":
             for _ in range(steps):
                 sim.step()
@@ -186,39 +222,62 @@ class Plan:
         if backend not in ("event", "mc"):
             raise ValueError(f"unknown backend {backend!r}; "
                              "expected 'eq2', 'event', or 'mc'")
-        # identical draw stream to the eq2 path: one (N,) row per step
-        times = np.stack([dist.sample(sim.rng, (self.n_workers,))
+        # identical draw stream to the eq2 path: one (N,) base row per step
+        times = np.stack([env.sample(sim.rng, (self.n_workers,))
                           for _ in range(steps)])
+        from repro.sim.faults import apply_faults
+
+        eff_times, deaths = apply_faults(times, env.faults)
         if backend == "event":
             from repro.sim import ClusterSim, schedule_from_plan
 
-            res = ClusterSim(schedule_from_plan(self), dist, self.n_workers,
+            # ClusterSim absorbs the env's declarative faults itself
+            res = ClusterSim(schedule_from_plan(self), env, self.n_workers,
                              cost=cost, wave=False).run(rounds=steps,
                                                         times=times)
             tau_coded = res.round_durations()
         else:
+            if deaths:
+                raise ValueError("backend 'mc' cannot price WorkerDeath "
+                                 "faults; use backend='event'")
             from repro.sim import mc
 
-            tau_coded = mc.runtime_batch(mc.schedule_from_plan(self), times,
-                                         cost=cost)
+            tau_coded = mc.runtime_batch(mc.schedule_from_plan(self),
+                                         eff_times, cost=cost)
         unc_scale = cost.scale(self.n_workers) * self.total_units
+        tau_unc = unc_scale * eff_times.max(axis=1)
+        if deaths:
+            # uncoded data-parallel waits on every worker each round, so
+            # a death stalls it from that round (at_round) / from the
+            # round in flight when the death hits (at_time) onward.
+            cum = np.cumsum(tau_unc)
+            stall_from = steps
+            for d_time, d_round in deaths.values():
+                if np.isfinite(d_round):
+                    stall_from = min(stall_from, int(d_round))
+                if np.isfinite(d_time):
+                    stall_from = min(stall_from,
+                                     int(np.searchsorted(cum, d_time)))
+            tau_unc[stall_from:] = np.inf
         for r in range(steps):
             sim.ledger.append({
-                "times": times[r],
+                "times": eff_times[r],
                 "tau_coded": float(tau_coded[r]),
-                "tau_uncoded": float(unc_scale * times[r].max()),
+                "tau_uncoded": float(tau_unc[r]),
             })
         return sim
 
     # --------------------------------------------------------- serialization
     def to_dict(self) -> dict:
         """JSON-serializable snapshot, embedding the per-level code
-        matrices so a restored plan decodes bit-identically."""
+        matrices (bit-identical restored decode) and the worker
+        population (``env`` — bit-identical ``Env`` round-trip)."""
         bank = {str(int(s)): self.codes.b(int(s)).tolist()
                 for s in self.used_levels}
         return {
             "version": 1,
             "scheme": self.scheme,
+            "env": None if self.env is None else self.env.to_dict(),
             "n_workers": int(self.n_workers),
             "total_units": int(self.total_units),
             "x": np.asarray(self.x).astype(np.int64).tolist(),
@@ -255,25 +314,40 @@ class Plan:
             codes=codes,
             scheme=blob["scheme"],
             total_units=int(blob.get("total_units", UNIT_RESOLUTION)),
+            env=(Env.from_dict(blob["env"])
+                 if blob.get("env") is not None else None),
         )
 
 
 class PlanSimulator:
     """Per-step straggler realization + runtime ledger (the paper's
     evaluation instrument, §VI) — absorbed from train.coded.StragglerSim
-    so benchmarks/serving can score plans without the jax trainer."""
+    so benchmarks/serving can score plans without the jax trainer.
 
-    def __init__(self, plan: Plan, dist, seed: int = 0,
+    Draws from an ``Env`` (anything ``Env.coerce`` accepts): per-step,
+    the base population is sampled and the env's ``DegradedWorker``
+    factors in effect at that round are folded in.  ``WorkerDeath``
+    cannot be priced by eq. (2) — ``step()`` raises; use
+    ``plan.simulate(backend="event")``.
+    """
+
+    def __init__(self, plan: Plan, env, seed: int = 0,
                  cost: CostModel = DEFAULT_COST):
-        self.plan, self.dist, self.cost = plan, dist, cost
+        self.plan, self.cost = plan, cost
+        self.env = Env.coerce(env, plan.n_workers)
+        self.dist = self.env  # legacy attribute name
         self.rng = np.random.default_rng(seed)
         self.ledger: list[dict] = []
 
     def step(self):
-        """Sample T ~ dist; returns (decode weights (n_used, N) f32,
+        """Sample T ~ env; returns (decode weights (n_used, N) f32,
         ledger record) and appends to the eq.(2) ledger."""
         plan = self.plan
-        times = self.dist.sample(self.rng, (plan.n_workers,))
+        if self.env.has_deaths():
+            raise ValueError("eq.(2) cannot price WorkerDeath faults; "
+                             "use plan.simulate(backend='event')")
+        times = self.env.sample(self.rng, (plan.n_workers,))
+        times = times * self.env.degradation_factors(len(self.ledger))
         dec_w = plan.decode_weights(times)
         t_coded = plan.tau(times, self.cost)
         # uncoded synchronous data-parallel: wait for the slowest worker

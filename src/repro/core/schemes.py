@@ -6,12 +6,19 @@ optimum, and the §VI baselines (Tandon et al. ICML'17, Ferdinand et
 al., single-level BCGC).  Each one is registered here under a canonical
 programmatic key with a uniform solve signature
 
-    solve(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0, s_cap=None)
+    solve(env, n_workers, total, *, cost=DEFAULT_COST, rng=0, s_cap=None)
         -> x  (N,) nonnegative, sum(x) == total
 
 so trainers, benchmarks and examples pick schemes by name instead of
-hand-wired if/elif ladders.  Plot-legend names are *display metadata*
-(``Scheme.display``), not keys.
+hand-wired if/elif ladders.  ``solve_scheme`` coerces whatever the
+caller passes — a bare ``StragglerDistribution``, a per-worker list, or
+a full ``Env`` — to an ``Env`` (``Env.coerce``), so every registered
+scheme sees the one worker-population protocol: i.i.d. populations hit
+the closed-form order-statistic fast paths bit-identically, while
+heterogeneous/faulted/trace-driven populations flow through the same
+Theorem 2/3 water-filling at the population's E[T_(n)] / 1/E[1/T_(n)].
+Plot-legend names are *display metadata* (``Scheme.display``), not
+keys.
 
     >>> from repro.core import available_schemes, solve_scheme
     >>> available_schemes()
@@ -32,6 +39,7 @@ import numpy as np
 
 from .assignment import round_x
 from .baselines import ferdinand_x, single_bcgc, tandon_alpha_x
+from .env import Env
 from .runtime import CostModel, DEFAULT_COST, tau_hat_realized_batch
 from .solvers import solve_xf, solve_xt, spsg
 
@@ -115,31 +123,38 @@ def available_schemes() -> list[str]:
     return sorted(_REGISTRY)
 
 
-def solve_scheme(name: str, dist, n_workers: int, total: int, *,
+def solve_scheme(name: str, env, n_workers: int, total: int, *,
                  cost: CostModel = DEFAULT_COST, rng=0, s_cap=None,
                  integer: bool = True) -> np.ndarray:
     """Solve the block partition with the named scheme.
 
-    This is the registry-routed replacement for the old
-    ``train.coded.solve_blocks`` if/elif ladder.  ``integer=True``
-    largest-remainder-rounds the solution so ``sum(x) == total``
-    exactly.
+    ``env`` is an ``Env``, a bare ``StragglerDistribution`` (coerced to
+    ``Env.iid(dist, n_workers)`` — bit-identical to the pre-Env path),
+    or a per-worker distribution list.  This is the registry-routed
+    replacement for the old ``train.coded.solve_blocks`` if/elif
+    ladder.  ``integer=True`` largest-remainder-rounds the solution so
+    ``sum(x) == total`` exactly.
     """
     scheme = get_scheme(name)
-    x = scheme.solve(dist, n_workers, total, cost=cost, rng=rng, s_cap=s_cap)
+    # solver view: static degradations folded in, transient faults
+    # dropped — sampling-based and closed-form schemes then optimize
+    # against the same effective population.
+    env = Env.coerce(env, n_workers).solver_view()
+    x = scheme.solve(env, n_workers, total, cost=cost, rng=rng, s_cap=s_cap)
     x = np.asarray(x, np.float64)
     return round_x(x, total) if integer else x
 
 
-def scheme_bank(dist, n_workers: int, total: int, rng=0,
+def scheme_bank(env, n_workers: int, total: int, rng=0,
                 cost: CostModel = DEFAULT_COST) -> dict:
     """All §VI baseline x's, keyed by *canonical* scheme name.
 
     The paper's plot-legend strings live on each registered scheme's
     ``display`` attribute — presentation metadata, not lookup keys.
     """
+    env = Env.coerce(env, n_workers).solver_view()
     return {
-        name: _REGISTRY[name].solve(dist, n_workers, total, cost=cost,
+        name: _REGISTRY[name].solve(env, n_workers, total, cost=cost,
                                     rng=rng, s_cap=None)
         for name in available_schemes()
         if _REGISTRY[name].kind == "baseline"

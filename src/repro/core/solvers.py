@@ -5,6 +5,14 @@
   * ``spsg``       — stochastic projected subgradient on Problem 3
   * ``project_block_simplex`` — Euclidean projection onto {x>=0, sum=L}
   * ``brute_force_int`` — exhaustive Problem-2 solver for tiny (N, L)
+
+``dist`` in every solver is anything exposing the order-statistic /
+sampling protocol: a ``StragglerDistribution`` (i.i.d. workers, the
+paper's §II) or a ``repro.core.env.Env`` (heterogeneous / faulted /
+trace-driven populations) — the closed forms then water-fill at the
+*population's* E[T_(n)] / 1/E[1/T_(n)] and SPSG subsamples the joint
+per-worker draw, which is exactly the Theorem 2/3 argument with the
+i.i.d. assumption dropped from the order statistics.
 """
 from __future__ import annotations
 

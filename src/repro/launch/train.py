@@ -2,13 +2,20 @@
 
   PYTHONPATH=src python -m repro.launch.train \
       --arch gemma-2b [--reduced] --steps 100 --workers 4 \
-      --scheme xf --data-par 1 --model-par 1 [--coded/--uncoded]
+      --scheme xf --data-par 1 --model-par 1 [--coded/--uncoded] \
+      [--env cluster_env.json]
 
 Builds a (data, model) mesh over the available devices, initializes the
 TrainState with the config's sharding rules, and runs either the coded
 trainer (paper technique; straggler realizations simulated host-side)
 or the plain pjit baseline.  On a TPU slice the same entry point scales
 to the production meshes in launch/mesh.py.
+
+The straggler environment is ``Env.iid(ShiftedExponential(mu), N)`` by
+default; ``--env`` loads a full worker-population model (heterogeneous
+per-worker distributions, degradations, traces) from an
+``Env.to_dict()`` JSON file, so a production launch plans its partition
+for the cluster it actually runs on.
 """
 from __future__ import annotations
 
@@ -23,7 +30,7 @@ import numpy as np
 
 from repro.checkpoint.ckpt import save_checkpoint
 from repro.configs import get_config
-from repro.core import Plan, ShiftedExponential
+from repro.core import Env, Plan, ShiftedExponential
 from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
 from repro.dist.sharding import make_rules, use_mesh
 from repro.launch.mesh import make_local_mesh
@@ -46,6 +53,9 @@ def main():
     ap.add_argument("--model-par", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--mu", type=float, default=1e-3)
+    ap.add_argument("--env", default="",
+                    help="JSON file with an Env.to_dict() worker-population "
+                         "model (overrides --mu/--workers defaults)")
     ap.add_argument("--uncoded", action="store_true")
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
@@ -55,7 +65,12 @@ def main():
         cfg = cfg.reduced()
     cfg = cfg.replace(max_seq=max(args.seq * 2, 512))
     mesh = make_local_mesh(args.data_par, args.model_par)
-    dist = ShiftedExponential(mu=args.mu, t0=50.0)
+    if args.env:
+        with open(args.env) as f:
+            env = Env.from_dict(json.load(f))
+        args.workers = env.n_workers
+    else:
+        env = Env.iid(ShiftedExponential(mu=args.mu, t0=50.0), args.workers)
     cfg_t = TrainConfig(lr=args.lr, warmup=max(args.steps // 10, 5),
                         total_steps=args.steps)
     data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
@@ -75,9 +90,8 @@ def main():
                     print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
                           f"({time.perf_counter()-t0:.2f}s)")
         else:
-            plan = Plan.build(state.params, dist, args.workers,
-                              scheme=args.scheme)
-            sim = plan.simulator(dist)
+            plan = Plan.build(state.params, env, scheme=args.scheme)
+            sim = plan.simulator(env)
             mode = "spmd" if args.data_par == args.workers else "sim"
             step = jax.jit(make_coded_train_step(
                 cfg, cfg_t, plan, mesh=mesh if mode == "spmd" else None,

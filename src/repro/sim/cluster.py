@@ -52,6 +52,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core.env import Env
 from repro.core.runtime import CostModel, DEFAULT_COST
 
 __all__ = [
@@ -122,15 +123,21 @@ def schedule_from_plan(plan) -> tuple:
 def draw_times(dist, rng, rounds: int, n_workers: int) -> np.ndarray:
     """(rounds, N) cycle-time draws.
 
-    ``dist`` is a single ``StragglerDistribution`` (i.i.d. workers), a
-    length-N sequence of per-worker distributions (heterogeneous
-    cluster), or a ready (rounds, N) array (trace replay).
+    ``dist`` is an ``Env`` (base population, column j ~ worker j), a
+    single ``StragglerDistribution`` (i.i.d. workers), a length-N
+    sequence of per-worker distributions (heterogeneous cluster), or a
+    ready (rounds, N) array (trace replay).
     """
     if isinstance(dist, np.ndarray):
         t = np.asarray(dist, np.float64)
         if t.shape != (rounds, n_workers):
             raise ValueError(f"times shape {t.shape} != {(rounds, n_workers)}")
         return t
+    if isinstance(dist, Env):
+        if dist.n_workers != n_workers:
+            raise ValueError(f"env has {dist.n_workers} workers, "
+                             f"simulator expects {n_workers}")
+        return np.asarray(dist.sample(rng, (rounds, n_workers)), np.float64)
     if isinstance(dist, (list, tuple)):
         if len(dist) != n_workers:
             raise ValueError(f"need {n_workers} per-worker dists, got {len(dist)}")
@@ -236,10 +243,12 @@ class ClusterSim:
     Parameters
     ----------
     schedule : tuple[Block, ...] from ``schedule_from_x``/``schedule_from_plan``.
-    dist     : straggler model — one distribution, a per-worker list, or
-               a (rounds, N) array (see ``draw_times``).
+    dist     : straggler model — an ``Env`` (its declarative faults are
+               absorbed into ``faults``), one distribution, a per-worker
+               list, or a (rounds, N) array (see ``draw_times``).
     n_workers: cluster size N.
-    faults   : iterable of fault objects from ``repro.sim.faults``.
+    faults   : iterable of fault objects from ``repro.core.env`` /
+               ``repro.sim.faults`` (appended to any env faults).
     """
 
     def __init__(self, schedule, dist, n_workers: int, *,
@@ -248,6 +257,10 @@ class ClusterSim:
                  **config_kw):
         if config is not None and config_kw:
             raise ValueError("pass either config= or config keywords, not both")
+        if isinstance(dist, Env):
+            # one population object: the env's declarative faults ride
+            # along so ClusterSim(sched, env, N) realizes all of it
+            faults = tuple(dist.faults) + tuple(faults)
         self.schedule = tuple(schedule)
         if not self.schedule:
             raise ValueError("empty schedule")
@@ -422,10 +435,15 @@ class ClusterSim:
 
 
 # ------------------------------------------------------------ conveniences
-def simulate_plan(plan, dist, rounds: int = 1, *, seed: int = 0,
+def simulate_plan(plan, dist=None, rounds: int = 1, *, seed: int = 0,
                   cost: CostModel = DEFAULT_COST, faults: Sequence = (),
                   **config_kw) -> ClusterResult:
-    """Run a ``Plan`` end-to-end on the event engine (leaf-form schedule)."""
+    """Run a ``Plan`` end-to-end on the event engine (leaf-form
+    schedule).  ``dist=None`` uses the plan's bound env."""
+    if dist is None:
+        if plan.env is None:
+            raise ValueError("plan has no bound env; pass dist/env explicitly")
+        dist = plan.env
     sim = ClusterSim(schedule_from_plan(plan), dist, plan.n_workers,
                      cost=cost, seed=seed, faults=faults, **config_kw)
     return sim.run(rounds)

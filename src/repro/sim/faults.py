@@ -1,8 +1,13 @@
-"""Fault injection for the coded-cluster simulator.
+"""Fault realization for the coded-cluster simulator.
 
-Faults are declarative objects applied to the drawn (rounds, N) cycle
-time matrix before the event engine runs, so a faulted run stays a pure
-function of (schedule, times, faults) and replays exactly from a trace.
+The declarative fault vocabulary (``WorkerDeath``, ``DegradedWorker``)
+lives in ``repro.core.env`` — faults are part of the worker-population
+model (``Env.with_faults``), not a sim-only concept — and is
+re-exported here for back-compat.  This module keeps the sim-side
+*realization*: ``apply_faults`` maps (times, faults) onto the drawn
+(rounds, N) cycle-time matrix before the event engine runs, so a
+faulted run stays a pure function of (schedule, times, faults) and
+replays exactly from a trace.
 
 * ``WorkerDeath``   — the worker stops delivering at an absolute time or
   from a given round on.  Gradient coding absorbs deaths as permanent
@@ -11,45 +16,18 @@ function of (schedule, times, faults) and replays exactly from a trace.
   decode, exactly the failure mode redundancy exists to cover).
 * ``DegradedWorker`` — multiplies one worker's cycle times by a factor
   from a given round on (thermal throttling, noisy neighbor).
-* ``heterogeneous`` — convenience constructor for per-worker
-  distribution lists (a cluster of mixed machine generations).
+* ``heterogeneous`` — legacy convenience for per-worker distribution
+  lists; new code should use ``Env.heterogeneous``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 
+from repro.core.env import DegradedWorker, WorkerDeath
+
 __all__ = ["WorkerDeath", "DegradedWorker", "apply_faults", "heterogeneous"]
-
-
-@dataclass(frozen=True)
-class WorkerDeath:
-    """Worker ``worker`` delivers nothing at/after ``at_time`` (absolute
-    simulated time) or from round ``at_round`` on; a block mid-compute
-    when the death hits is lost."""
-
-    worker: int
-    at_time: Optional[float] = None
-    at_round: Optional[int] = None
-
-    def __post_init__(self):
-        if self.at_time is None and self.at_round is None:
-            raise ValueError("WorkerDeath needs at_time or at_round")
-
-
-@dataclass(frozen=True)
-class DegradedWorker:
-    """Worker ``worker`` runs ``factor``x slower from round ``from_round``."""
-
-    worker: int
-    factor: float
-    from_round: int = 0
-
-    def __post_init__(self):
-        if self.factor <= 0:
-            raise ValueError("factor must be positive")
 
 
 def apply_faults(times: np.ndarray, faults: Sequence):
@@ -85,6 +63,9 @@ def heterogeneous(dist, n_workers: int, slow_workers: dict):
 
         dists = heterogeneous(fast, 8, {7: ShiftedExponential(mu=1e-4)})
         ClusterSim(schedule, dists, 8).run(...)
+
+    Legacy helper — ``Env.heterogeneous(dists)`` is the first-class way
+    to say this (and reaches the solvers, not just the simulator).
     """
     out = [dist] * n_workers
     for j, d in slow_workers.items():

@@ -49,7 +49,8 @@ class Trace:
     @classmethod
     def record(cls, dist, rounds: int, n_workers: int, *, seed: int = 0,
                meta: Optional[dict] = None) -> "Trace":
-        """Sample a fresh trace from a straggler model (or per-worker list)."""
+        """Sample a fresh trace from a straggler model (an ``Env``, one
+        distribution, or a per-worker list — see ``draw_times``)."""
         from .cluster import draw_times
 
         rng = np.random.default_rng(seed)
@@ -81,6 +82,14 @@ class Trace:
             return [EmpiricalStraggler(trace=tuple(map(float, col)))
                     for col in self.times.T]
         return EmpiricalStraggler(trace=tuple(map(float, self.times.ravel())))
+
+    def to_env(self, per_worker: bool = True):
+        """The recorded cluster as a first-class ``Env`` (the object the
+        solvers/Plan/trainer consume): equivalent to
+        ``Env.from_trace(self, per_worker)``."""
+        from repro.core.env import Env
+
+        return Env.from_trace(self, per_worker=per_worker)
 
     # ------------------------------------------------------- serialization
     def to_dict(self) -> dict:

@@ -27,6 +27,7 @@ global batch, to float tolerance.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable
 
 import jax
@@ -36,6 +37,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import Plan, PlanSimulator, UNIT_RESOLUTION, solve_scheme
 from repro.core.runtime import CostModel, DEFAULT_COST
+from repro.core.schemes import get_scheme
 from repro.models.model import train_loss
 
 __all__ = ["CodingPlan", "build_plan", "solve_blocks", "StragglerSim",
@@ -45,12 +47,47 @@ __all__ = ["CodingPlan", "build_plan", "solve_blocks", "StragglerSim",
 #: Legacy name — ``CodingPlan`` was promoted to ``repro.core.plan.Plan``.
 CodingPlan = Plan
 
+# One-shot DeprecationWarnings: each legacy entry point (and each legacy
+# scheme key spelling) warns once per process, naming its registry-API
+# replacement.  ``_reset_deprecation_warnings`` is a test hook.
+_WARNED: set = set()
+
+
+def _warn_once(key: str, message: str) -> None:
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warnings() -> None:
+    """Forget which one-shot deprecation warnings already fired (tests)."""
+    _WARNED.clear()
+
+
+def _warn_legacy_key(name: str) -> None:
+    """Legend-string / legacy solver keys resolve via registry aliases;
+    nudge callers toward the canonical scheme name."""
+    try:
+        canonical = get_scheme(name).name
+    except KeyError:
+        return  # unknown scheme: let the registry raise its own error
+    if canonical != name:
+        _warn_once(f"key:{name}",
+                   f"legacy scheme key {name!r} is deprecated; use the "
+                   f"canonical registry name {canonical!r} "
+                   "(repro.core.available_schemes())")
+
 
 def solve_blocks(solver: str, dist, n_workers: int, total: int, rng=0,
                  s_cap=None) -> np.ndarray:
     """Deprecated shim — routes through the ``repro.core`` scheme
     registry (``solve_scheme``); every legacy solver string is a
     registered name or alias there."""
+    _warn_once("solve_blocks",
+               "repro.train.coded.solve_blocks is deprecated; use "
+               "repro.core.solve_scheme(name, env, n_workers, total)")
+    _warn_legacy_key(solver)
     return solve_scheme(solver, dist, n_workers, total, rng=rng, s_cap=s_cap)
 
 
@@ -58,6 +95,10 @@ def build_plan(params, dist, n_workers: int, solver: str = "xf", rng: int = 0,
                prefer_fractional: bool = False, s_cap=None) -> Plan:
     """Deprecated shim for ``Plan.build`` (old keyword ``solver`` is the
     registry's ``scheme``)."""
+    _warn_once("build_plan",
+               "repro.train.coded.build_plan is deprecated; use "
+               "repro.core.Plan.build(params, env, scheme=...)")
+    _warn_legacy_key(solver)
     return Plan.build(params, dist, n_workers, scheme=solver, rng=rng,
                       prefer_fractional=prefer_fractional, s_cap=s_cap)
 
@@ -65,12 +106,21 @@ def build_plan(params, dist, n_workers: int, solver: str = "xf", rng: int = 0,
 def tau_weighted(plan: Plan, times: np.ndarray,
                  cost: CostModel = DEFAULT_COST) -> float:
     """Deprecated shim for ``Plan.tau`` (eq. (2) on the leaf layout)."""
+    _warn_once("tau_weighted",
+               "repro.train.coded.tau_weighted is deprecated; use "
+               "plan.tau(times, cost)")
     return plan.tau(times, cost)
 
 
 class StragglerSim(PlanSimulator):
     """Deprecated shim for ``plan.simulator(...)`` /
     ``plan.simulate(...)``; keeps the old jnp return type of step()."""
+
+    def __init__(self, *args, **kw):
+        _warn_once("StragglerSim",
+                   "repro.train.coded.StragglerSim is deprecated; use "
+                   "plan.simulator(env) / plan.simulate(env, steps)")
+        super().__init__(*args, **kw)
 
     def step(self):
         dec_w, rec = super().step()

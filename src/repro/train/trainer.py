@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Plan
+from repro.core import Env, Plan
 from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
 from repro.models.model import train_loss
 from repro.optim.optim import adamw_update, clip_by_global_norm, cosine_schedule
@@ -91,21 +91,36 @@ def make_coded_train_step(cfg, cfg_t: TrainConfig, plan: Plan, *,
 
 
 class Trainer:
-    """End-to-end coded-training driver (used by examples/train_lm.py)."""
+    """End-to-end coded-training driver (used by examples/train_lm.py).
 
-    def __init__(self, cfg, cfg_t: TrainConfig, dist, *, n_workers: int = 8,
+    ``env`` is the worker population the run is planned and simulated
+    against: an ``Env`` (``n_workers`` then optional — the env knows its
+    size) or a bare ``StragglerDistribution`` (coerced to
+    ``Env.iid(dist, n_workers)``, the pre-Env behavior unchanged).
+    """
+
+    def __init__(self, cfg, cfg_t: TrainConfig, env, *, n_workers: int = None,
                  scheme: str = None, global_batch: int = 32, seed: int = 0,
                  mesh=None, mode: str = "sim", data_kind: str = "zipf",
                  solver: str = None):
         if scheme is None:
             scheme = solver if solver is not None else "xf"  # `solver` is the legacy kw
-        self.cfg, self.cfg_t, self.dist = cfg, cfg_t, dist
+        if n_workers is None:
+            if isinstance(env, Env):
+                n_workers = env.n_workers
+            elif isinstance(env, (list, tuple)):
+                n_workers = len(env)   # per-worker dists pin their own size
+            else:
+                n_workers = 8          # bare distribution: legacy default
+        env = Env.coerce(env, n_workers)
+        self.cfg, self.cfg_t = cfg, cfg_t
+        self.env = self.dist = env  # `dist` is the legacy attribute name
         self.n_workers = n_workers
         key = jax.random.PRNGKey(seed)
         self.state, self.axes = init_train_state(cfg, key)
-        self.plan = Plan.build(self.state.params, dist, n_workers,
+        self.plan = Plan.build(self.state.params, env,
                                scheme=scheme, rng=seed)
-        self.sim = self.plan.simulator(dist, seed=seed)
+        self.sim = self.plan.simulator(env, seed=seed)
         self.data = SyntheticTokens(DataConfig(
             vocab=cfg.vocab, seq_len=min(cfg.max_seq, 512),
             global_batch=global_batch, seed=seed, kind=data_kind))

@@ -1,0 +1,71 @@
+"""One-shot DeprecationWarnings from the legacy repro.train.coded shims.
+
+Each legacy entry point (build_plan / solve_blocks / StragglerSim /
+tau_weighted) and each legacy scheme-key spelling warns exactly once
+per process, naming its registry-API replacement.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import Plan, ShiftedExponential
+
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+COSTS = np.array([5.0, 3.0, 1.0, 2.0, 9.0, 4.0])
+
+
+@pytest.fixture
+def coded():
+    from repro.train import coded
+
+    coded._reset_deprecation_warnings()
+    yield coded
+    coded._reset_deprecation_warnings()
+
+
+def _no_warning(fn):
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        fn()
+    assert not [w for w in rec if issubclass(w.category, DeprecationWarning)]
+
+
+def test_solve_blocks_warns_once_with_replacement(coded):
+    with pytest.warns(DeprecationWarning, match="solve_scheme"):
+        coded.solve_blocks("xf", DIST, 4, 100)
+    # one-shot: the second call is silent
+    _no_warning(lambda: coded.solve_blocks("xf", DIST, 4, 100))
+
+
+def test_build_plan_warns_once_with_replacement(coded):
+    with pytest.warns(DeprecationWarning, match="Plan.build"):
+        coded.build_plan(COSTS, DIST, 4, solver="xf")
+    _no_warning(lambda: coded.build_plan(COSTS, DIST, 4, solver="xf"))
+
+
+def test_straggler_sim_warns_once_with_replacement(coded):
+    plan = Plan.build(COSTS, DIST, 4, scheme="xf")
+    with pytest.warns(DeprecationWarning, match="plan.simulator"):
+        sim = coded.StragglerSim(plan, DIST, seed=0)
+    dec_w, rec = sim.step()
+    assert dec_w.shape == (len(plan.used_levels), 4)
+    _no_warning(lambda: coded.StragglerSim(plan, DIST, seed=0))
+
+
+def test_tau_weighted_warns_with_replacement(coded):
+    plan = Plan.build(COSTS, DIST, 4, scheme="xf")
+    with pytest.warns(DeprecationWarning, match="plan.tau"):
+        coded.tau_weighted(plan, np.ones(4))
+
+
+def test_legend_string_key_warns_with_canonical_name(coded):
+    coded.solve_blocks("xf", DIST, 4, 100)  # consume the entry-point warning
+    with pytest.warns(DeprecationWarning, match="'tandon-alpha'"):
+        coded.solve_blocks("Tandon et al. (alpha)", DIST, 4, 100)
+    # one-shot per key spelling; canonical keys never warn
+    _no_warning(lambda: coded.solve_blocks("Tandon et al. (alpha)", DIST, 4, 100))
+    _no_warning(lambda: coded.solve_blocks("tandon-alpha", DIST, 4, 100))
+    # unknown keys still raise the registry's KeyError, not a warning
+    with pytest.raises(KeyError):
+        coded.solve_blocks("nope", DIST, 4, 100)

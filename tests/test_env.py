@@ -1,0 +1,329 @@
+"""The first-class `Env` worker-population API.
+
+Acceptance surface of the Env redesign: bare-distribution coercion is
+*exactly* ``Env.iid`` (same objects, same solver outputs, same draw
+streams), the env JSON round-trip is bit-identical inside
+``Plan.to_dict``, heterogeneous-population order statistics agree with
+a seeded event-simulator estimate, and declarative faults flow from the
+env into every backend with the documented semantics (degradations
+everywhere, deaths event-only).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DegradedWorker,
+    Env,
+    MixtureStraggler,
+    Plan,
+    ScaledStraggler,
+    ShiftedExponential,
+    UniformStraggler,
+    WorkerDeath,
+    solve_scheme,
+)
+from repro.core.distributions import dist_from_dict, dist_to_dict
+from repro.core.env import fault_from_dict, fault_to_dict
+
+FAST = ShiftedExponential(mu=1e-3, t0=50.0)
+SLOW = ScaledStraggler(base=FAST, factor=2.5)
+COSTS = np.array([5.0, 3.0, 1.0, 2.0, 9.0, 4.0])
+
+
+def het_env(n=8, n_slow=2) -> Env:
+    return Env.heterogeneous([FAST] * (n - n_slow) + [SLOW] * n_slow)
+
+
+# ------------------------------------------------------------- construction
+def test_coerce_bare_dist_equals_iid_exactly():
+    env = Env.coerce(FAST, 8)
+    assert env == Env.iid(FAST, 8)
+    assert env.is_iid and env.iid_dist == FAST and env.n_workers == 8
+    # same object per worker, not copies with drifted fields
+    assert all(d == FAST for d in env.dists)
+
+
+def test_coerce_passthrough_list_and_errors():
+    env = het_env()
+    assert Env.coerce(env) is env
+    assert Env.coerce(env, 8) is env
+    with pytest.raises(ValueError):
+        Env.coerce(env, 4)
+    lst = Env.coerce([FAST, SLOW])
+    assert lst.n_workers == 2 and not lst.is_iid
+    with pytest.raises(ValueError):
+        Env.coerce(FAST)  # bare dist needs n_workers
+    with pytest.raises(TypeError):
+        Env.coerce(42, 4)
+
+
+def test_env_validates_workers_and_faults():
+    with pytest.raises(ValueError):
+        Env(dists=())
+    with pytest.raises(TypeError):
+        Env(dists=(FAST, "not-a-dist"))
+    with pytest.raises(ValueError):
+        Env.iid(FAST, 4).with_faults(WorkerDeath(9, at_round=0))
+    with pytest.raises(ValueError):
+        WorkerDeath(0)  # needs at_time or at_round
+    with pytest.raises(ValueError):
+        DegradedWorker(0, factor=0.0)
+
+
+# ------------------------------------------------- coercion == bare-dist path
+def test_solver_outputs_bit_identical_under_coercion():
+    for scheme in ("xt", "xf", "spsg", "single-bcgc", "tandon-alpha"):
+        x_dist = solve_scheme(scheme, FAST, 6, 600, rng=1)
+        x_env = solve_scheme(scheme, Env.iid(FAST, 6), 6, 600, rng=1)
+        np.testing.assert_array_equal(x_dist, x_env, err_msg=scheme)
+
+
+def test_iid_env_sampling_stream_matches_bare_dist():
+    a = FAST.sample(np.random.default_rng(7), (5, 8))
+    b = Env.iid(FAST, 8).sample(np.random.default_rng(7), (5, 8))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_plan_build_bit_identical_under_coercion():
+    p_dist = Plan.build(COSTS, FAST, 4, scheme="xf", rng=3)
+    p_env = Plan.build(COSTS, Env.iid(FAST, 4), scheme="xf", rng=3)
+    np.testing.assert_array_equal(p_dist.x, p_env.x)
+    np.testing.assert_array_equal(p_dist.leaf_levels, p_env.leaf_levels)
+    np.testing.assert_array_equal(p_dist.b_rows, p_env.b_rows)
+    assert p_dist.env == p_env.env  # the bare dist coerced to the same env
+    # ledger parity on the same seed
+    s1 = p_dist.simulate(FAST, 10, seed=5).summary()
+    s2 = p_env.simulate(steps=10, seed=5).summary()  # bound env default
+    assert s1 == s2
+
+
+def test_plan_build_env_knows_n_workers_and_mismatch_raises():
+    env = het_env(8)
+    plan = Plan.build(COSTS, env, scheme="xt")
+    assert plan.n_workers == 8 and plan.env is env
+    with pytest.raises(ValueError):
+        Plan.build(COSTS, env, 4, scheme="xt")
+
+
+# ------------------------------------------------------------- serialization
+def test_env_json_roundtrip_bit_identical():
+    env = het_env().with_faults(WorkerDeath(0, at_round=5),
+                                DegradedWorker(3, 6.0, from_round=10))
+    blob = json.loads(json.dumps(env.to_dict()))
+    env2 = Env.from_dict(blob)
+    assert env2 == env
+    assert env2.to_dict() == env.to_dict()  # byte-level fixed point
+
+
+def test_env_roundtrip_inside_plan_to_dict_bit_identical():
+    env = het_env().with_faults(DegradedWorker(7, 1.5))
+    plan = Plan.build(COSTS, env, scheme="xt", rng=2)
+    blob = plan.to_dict()
+    j = json.loads(json.dumps(blob))      # through real JSON text
+    plan2 = Plan.from_dict(j)
+    assert plan2.env == plan.env
+    assert plan2.to_dict() == blob        # whole-plan fixed point incl. env
+    assert plan2.to_dict()["env"] == env.to_dict()
+
+
+def test_pre_env_blobs_still_load():
+    plan = Plan.build(COSTS, FAST, 4, scheme="xf")
+    blob = plan.to_dict()
+    del blob["env"]                        # a PR-1/PR-2 era snapshot
+    old = Plan.from_dict(json.loads(json.dumps(blob)))
+    assert old.env is None
+    np.testing.assert_array_equal(old.b_rows, plan.b_rows)
+    with pytest.raises(ValueError):
+        old.simulate(steps=1)              # no bound env, none passed
+    old.simulate(FAST, 1)                  # explicit env still fine
+
+
+def test_nested_and_empirical_dist_serialization():
+    from repro.core import EmpiricalStraggler
+
+    emp = EmpiricalStraggler(trace=(1.0, 2.0, 3.5))
+    mix = MixtureStraggler(components=(FAST, SLOW), weights=(0.25, 0.75))
+    for d in (emp, mix, SLOW):
+        back = dist_from_dict(json.loads(json.dumps(dist_to_dict(d))))
+        assert back == d
+    with pytest.raises(KeyError):
+        dist_from_dict({"type": "NoSuchDist"})
+
+
+def test_fault_serialization_roundtrip():
+    for f in (WorkerDeath(2, at_time=10.0), WorkerDeath(1, at_round=3),
+              DegradedWorker(0, 2.0, from_round=4)):
+        assert fault_from_dict(json.loads(json.dumps(fault_to_dict(f)))) == f
+    with pytest.raises(KeyError):
+        fault_from_dict({"type": "Nope"})
+
+
+# ------------------------------------------------------- order statistics
+def test_het_order_stats_mc_vs_quadrature():
+    env = het_env(6, 2)
+    t_mc = env.expected_order_stats()
+    t_q = env.expected_order_stats(method="quad")
+    np.testing.assert_allclose(t_mc, t_q, rtol=0.015)
+    tp_mc = env.inv_expected_inv_order_stats()
+    tp_q = env.inv_expected_inv_order_stats(method="quad")
+    np.testing.assert_allclose(tp_mc, tp_q, rtol=0.015)
+    # sorted order statistics are nondecreasing
+    assert (np.diff(t_mc) >= 0).all() and (np.diff(tp_q) >= 0).all()
+
+
+def test_het_order_stats_agree_with_event_simulator():
+    """E[T_(k)] of a non-identical population == what the event engine
+    realizes: a single block at level s decodes at scale * T_(N-s)."""
+    from repro.core.runtime import DEFAULT_COST
+    from repro.sim import Block, ClusterSim
+
+    n, rounds = 4, 8000
+    env = Env.heterogeneous([FAST, FAST, FAST, SLOW])
+    t_expect = env.expected_order_stats()
+    scale = DEFAULT_COST.scale(n)
+    times = env.sample(np.random.default_rng(17), (rounds, n))
+    for s in range(n):
+        sched = (Block(index=0, level=s, work=1.0),)
+        res = ClusterSim(sched, env, n, wave=False).run(rounds, times=times)
+        sim_mean = res.round_durations().mean() / scale
+        assert abs(sim_mean / t_expect[n - s - 1] - 1.0) < 0.03, (
+            s, sim_mean, t_expect[n - s - 1])
+
+
+def test_iid_order_stats_delegate_to_closed_form():
+    env = Env.iid(FAST, 8)
+    np.testing.assert_array_equal(env.expected_order_stats(),
+                                  FAST.expected_order_stats(8))
+    np.testing.assert_array_equal(env.inv_expected_inv_order_stats(),
+                                  FAST.inv_expected_inv_order_stats(8))
+
+
+def test_static_degradation_enters_solver_view():
+    env = Env.iid(FAST, 4).with_faults(DegradedWorker(3, 4.0))
+    assert not env.is_iid  # the fault breaks population identity
+    eff = env.effective_dists()
+    assert eff[3] == ScaledStraggler(base=FAST, factor=4.0)
+    assert eff[0] == FAST
+    # the slow machine inflates the top order statistics
+    t_fault = env.expected_order_stats()
+    t_clean = Env.iid(FAST, 4).expected_order_stats()
+    assert t_fault[-1] > t_clean[-1] * 1.5
+    # ... and the optimized partition shifts mass toward coded levels
+    x_fault = solve_scheme("xt", env, 4, 1000)
+    x_clean = solve_scheme("xt", FAST, 4, 1000)
+    assert x_fault[0] < x_clean[0]
+    # sampling-based schemes see the same solver view as the closed
+    # forms (solve_scheme routes through env.solver_view())
+    xs_fault = solve_scheme("spsg", env, 4, 1000, rng=0)
+    xs_clean = solve_scheme("spsg", FAST, 4, 1000, rng=0)
+    assert not np.array_equal(xs_fault, xs_clean)
+    # single-bcgc: a near-deterministic cluster wants no redundancy
+    # (s=0) until one worker is permanently 10x slower, at which point
+    # erasing it (s=1) must win — only visible through the solver view
+    tight = UniformStraggler(lo=1.0, hi=1.2)
+    x0 = solve_scheme("single-bcgc", Env.iid(tight, 4), 4, 1000)
+    x1 = solve_scheme("single-bcgc",
+                      Env.iid(tight, 4).with_faults(DegradedWorker(3, 10.0)),
+                      4, 1000)
+    assert x0[0] == 1000 and x1[1] == 1000, (x0, x1)
+
+
+def test_solver_view_identity_and_fault_drop():
+    env = Env.iid(FAST, 4)
+    assert env.solver_view() is env          # fault-free: pass-through
+    faulted = env.with_faults(WorkerDeath(0, at_round=0),
+                              DegradedWorker(1, 2.0),
+                              DegradedWorker(2, 3.0, from_round=5))
+    view = faulted.solver_view()
+    assert view.faults == ()                 # transient faults dropped
+    assert view.dists[1] == ScaledStraggler(base=FAST, factor=2.0)
+    assert view.dists[2] == FAST             # mid-run throttle: not static
+
+
+def test_pooled_marginal():
+    env = het_env(4, 1)
+    pooled = env.pooled()
+    assert isinstance(pooled, MixtureStraggler)
+    want = (3 * FAST.mean() + SLOW.mean()) / 4
+    assert abs(pooled.mean() / want - 1.0) < 1e-12
+    assert abs(env.mean() / want - 1.0) < 1e-12
+    # iid env pools to its own dist
+    assert Env.iid(FAST, 4).pooled() == FAST
+
+
+# ------------------------------------------------------------------ faults
+def test_env_faults_absorbed_by_cluster_sim():
+    from repro.sim import ClusterSim, schedule_from_x
+
+    n = 4
+    x = np.zeros(n)
+    x[1] = 100.0                           # level 1: tolerates one death
+    env = Env.iid(UniformStraggler(lo=1.0, hi=1.0), n).with_faults(
+        WorkerDeath(0, at_round=0))
+    res = ClusterSim(schedule_from_x(x), env, n, wave=False).run(rounds=3)
+    assert not res.stalled
+    # same env, two deaths: redundancy exhausted -> stall
+    env2 = env.with_faults(WorkerDeath(1, at_round=0))
+    res2 = ClusterSim(schedule_from_x(x), env2, n, wave=False).run(rounds=3)
+    assert res2.stalled
+
+
+def test_degradation_identical_across_backends():
+    env = Env.iid(FAST, 4).with_faults(DegradedWorker(1, 3.0, from_round=2))
+    plan = Plan.build(COSTS, env, scheme="xf")
+    led = {}
+    for backend in ("eq2", "event", "mc"):
+        sim = plan.simulate(steps=6, seed=3, backend=backend)
+        led[backend] = np.asarray([r["tau_coded"] for r in sim.ledger])
+    np.testing.assert_allclose(led["eq2"], led["event"], rtol=1e-9)
+    np.testing.assert_allclose(led["eq2"], led["mc"], rtol=2e-4)
+
+
+def test_deaths_rejected_by_analytic_backends():
+    env = Env.iid(FAST, 4).with_faults(WorkerDeath(0, at_round=0))
+    plan = Plan.build(COSTS, env, scheme="uniform")
+    with pytest.raises(ValueError):
+        plan.simulate(steps=2, backend="eq2")
+    with pytest.raises(ValueError):
+        plan.simulate(steps=2, backend="mc")
+    res = plan.simulate(steps=2, backend="event")   # realized, stalls
+    assert not np.isfinite([r["tau_coded"] for r in res.ledger]).all()
+    # the uncoded baseline waits on every worker, so it stalls too —
+    # the ledger must not present coding as losing to a dead baseline
+    assert all(not np.isfinite(r["tau_uncoded"]) for r in res.ledger)
+
+
+def test_event_uncoded_stalls_only_from_death_round():
+    env = Env.iid(FAST, 4).with_faults(WorkerDeath(2, at_round=3))
+    plan = Plan.build(COSTS, env, scheme="uniform")
+    res = plan.simulate(steps=5, backend="event")
+    unc = [r["tau_uncoded"] for r in res.ledger]
+    assert np.isfinite(unc[:3]).all() and not np.isfinite(unc[3:]).any()
+
+
+# ------------------------------------------------------------------ traces
+def test_env_from_trace_roundtrip(tmp_path):
+    from repro.sim import Trace
+
+    trace = Trace.record(het_env(4, 2), rounds=40, n_workers=4, seed=1)
+    path = str(tmp_path / "trace.json")
+    trace.save(path)
+    env = Env.from_trace(path)
+    assert env.n_workers == 4 and not env.is_iid
+    # worker columns preserved: slow workers resample slow marginals
+    assert env.dists[3].mean() > env.dists[0].mean()
+    assert env == trace.to_env()
+    pooled = Env.from_trace(path, per_worker=False)
+    assert pooled.is_iid
+    # from_trace envs serialize like any other env
+    assert Env.from_dict(env.to_dict()) == env
+
+
+def test_heterogeneous_sample_shape_contract():
+    env = het_env(4, 1)
+    with pytest.raises(ValueError):
+        env.sample(0, (100,))              # no worker axis
+    t = env.sample(0, (100, 4))
+    assert t.shape == (100, 4)
