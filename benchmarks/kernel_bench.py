@@ -1,6 +1,10 @@
-"""Kernel microbenchmark: gc_encode / gc_decode us-per-call + effective
-GB/s on this host (jnp oracle path — the TPU path is the Pallas kernel,
-validated in interpret mode by the test suite).
+"""Kernel microbenchmark: gc_encode / gc_decode / gc_fused us-per-call
+and effective GB/s on this host (jnp oracle path — the TPU path is the
+Pallas kernel, validated in interpret mode by the test suite).
+
+``gc_fused`` is the encode⊙decode single-pass combine the flat training
+pipeline runs (kernels/gc_fused); comparing its row against gc_encode +
+gc_decode at the same shape shows what the fusion saves.
 """
 from __future__ import annotations
 
@@ -10,12 +14,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 
 def _bench(fn, *args, iters: int = 20) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))  # one warmup/compile call
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -23,7 +26,7 @@ def _bench(fn, *args, iters: int = 20) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def run(verbose: bool = True, smoke: bool = False):
+def run(verbose: bool = True, smoke: bool = False) -> list:
     rng = np.random.default_rng(0)
     rows = []
     shapes = [(4, 1 << 16, jnp.float32)] if smoke else \
@@ -33,22 +36,27 @@ def run(verbose: bool = True, smoke: bool = False):
         g = jnp.asarray(rng.standard_normal((k, d)), dt)
         b = jnp.asarray(rng.standard_normal((1, k)), dt)
         a = jnp.asarray(rng.standard_normal(k), dt)
-        t_enc = _bench(ref.encode_ref, b, g)
-        t_dec = _bench(ref.decode_ref, a, g)
+        a1 = jnp.asarray(rng.standard_normal(1), dt)
         nbytes = g.size * g.dtype.itemsize
-        rows.append(("gc_encode", k, d, str(dt.__name__), t_enc * 1e6,
-                     nbytes / t_enc / 1e9))
-        rows.append(("gc_decode", k, d, str(dt.__name__), t_dec * 1e6,
-                     nbytes / t_dec / 1e9))
+        for name, t in (
+            ("gc_encode", _bench(ref.encode_ref, b, g)),
+            ("gc_decode", _bench(ref.decode_ref, a, g)),
+            ("gc_fused", _bench(ref.encode_decode_ref, a1, b, g)),
+        ):
+            rows.append({"kernel": name, "k": k, "d": d,
+                         "dtype": str(dt.__name__), "us": t * 1e6,
+                         "gbps": nbytes / t / 1e9})
     if verbose:
         for r in rows:
-            print(f"{r[0]},K={r[1]},D={r[2]},{r[3]},{r[4]:.1f}us,{r[5]:.1f}GB/s")
+            print(f"{r['kernel']},K={r['k']},D={r['d']},{r['dtype']},"
+                  f"{r['us']:.1f}us,{r['gbps']:.1f}GB/s")
     return rows
 
 
-def main(smoke: bool = False):
-    run(smoke=smoke)
+def main(smoke: bool = False) -> list:
+    rows = run(smoke=smoke)
     print("kernel_bench: OK")
+    return rows
 
 
 if __name__ == "__main__":

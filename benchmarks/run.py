@@ -6,11 +6,19 @@ CSV summary plus the per-benchmark detail above it.
 ``--smoke`` runs the same validations on reduced settings (small N,
 fewer SPSG iterations, fewer Monte-Carlo samples) in well under a
 minute — the CI fast path wired into scripts/check.sh, so regressions
-in the fig-reproduction pipeline surface without a full run.
+in the fig-reproduction pipeline surface without a full run.  The
+``coded_step`` section is the flat-vs-tree combine perf gate (it
+asserts the flat pipeline never regresses behind the tree baseline).
+
+``--json PATH`` dumps every section's returned rows plus the status
+table as one JSON document, so ``BENCH_kernels.json`` /
+``BENCH_coded_step.json`` (and CI's smoke artifact) join the repo's
+machine-readable perf trajectory.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 import traceback
 
@@ -21,14 +29,19 @@ def main(argv=None) -> None:
                     help="reduced settings for CI (small N, few samples)")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="dump all section rows + statuses as JSON")
     args = ap.parse_args(argv)
 
-    from . import fig3_partitions, fig4a_runtime_vs_n, fig4b_runtime_vs_mu
-    from . import heterogeneous_env, kernel_bench, roofline, sim_cluster
+    from . import coded_step, fig3_partitions, fig4a_runtime_vs_n
+    from . import fig4b_runtime_vs_mu, heterogeneous_env, kernel_bench
+    from . import roofline, sim_cluster
 
     known = {"fig3_partitions", "fig4a_runtime_vs_n", "fig4b_runtime_vs_mu",
-             "heterogeneous_env", "kernel_bench", "roofline", "sim_cluster"}
+             "kernel_bench", "coded_step", "roofline", "sim_cluster",
+             "heterogeneous_env"}
     rows = []
+    sections: dict = {}
     only = {s.strip() for s in args.only.split(",") if s.strip()}
     unknown = only - known
     if unknown:
@@ -41,7 +54,7 @@ def main(argv=None) -> None:
         print(f"\n===== {name} =====")
         t0 = time.perf_counter()
         try:
-            fn(**kw)
+            sections[name] = fn(**kw)
             rows.append((name, "seconds", f"{time.perf_counter()-t0:.1f}", "ok"))
         except Exception as e:  # noqa: BLE001
             traceback.print_exc()
@@ -53,6 +66,7 @@ def main(argv=None) -> None:
     section("fig4a_runtime_vs_n", fig4a_runtime_vs_n.main, smoke=smoke)  # Fig. 4(a)
     section("fig4b_runtime_vs_mu", fig4b_runtime_vs_mu.main, smoke=smoke)  # Fig. 4(b)
     section("kernel_bench", kernel_bench.main, smoke=smoke)  # encode/decode hot spot
+    section("coded_step", coded_step.main, smoke=smoke)      # flat-vs-tree perf gate
     section("roofline", roofline.main)                       # §Roofline table
     section("sim_cluster", sim_cluster.main, smoke=smoke)    # event/MC simulator
     section("heterogeneous_env", heterogeneous_env.main, smoke=smoke)  # Env payoff
@@ -60,6 +74,13 @@ def main(argv=None) -> None:
     print("\nname,metric,value,status")
     for r in rows:
         print(",".join(str(x) for x in r))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"sections": sections,
+                       "status": [{"name": n, "metric": m, "value": v,
+                                   "status": s} for n, m, v, s in rows]},
+                      f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
     if any(r[3].startswith("FAIL") for r in rows):
         raise SystemExit(1)
 

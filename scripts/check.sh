@@ -25,10 +25,10 @@ if git ls-files '*.pyc' | grep -q .; then
 fi
 echo "no tracked .pyc files"
 
-# tier-1 passed-count baseline as of PR 3 (PR 2: 208; PR 1: 143; seed: 36).
-# Bump this when a PR adds tests — it is what catches silently
-# lost/uncollected files, not just failures.
-BASELINE=237
+# tier-1 passed-count baseline as of PR 4 (PR 3: 237; PR 2: 208; PR 1:
+# 143; seed: 36).  Bump this when a PR adds tests — it is what catches
+# silently lost/uncollected files, not just failures.
+BASELINE=255
 
 PYTEST_ARGS=(-x -q)
 if [[ "${1:-}" == "--fast" ]]; then
@@ -56,7 +56,11 @@ REPRO_PROPERTY_EXAMPLES=3 python -m pytest -q \
 
 echo
 echo "== smoke benchmarks =="
-python -m benchmarks.run --smoke
+# includes the coded_step bench-regression guard: the flat fused combine
+# must never fall behind the tree baseline by >1.15x at the smoke shape
+# (assertion inside benchmarks/coded_step.py).  bench_smoke.json is the
+# machine-readable row dump (uploaded as a CI artifact).
+python -m benchmarks.run --smoke --json bench_smoke.json
 
 echo
 echo "check.sh: ALL OK"

@@ -50,6 +50,7 @@ _LAZY = {
     "make_train_step": ("repro.train.trainer", "make_train_step"),
     "make_coded_grad_fn": ("repro.train.coded", "make_coded_grad_fn"),
     "uncoded_grad_fn": ("repro.train.coded", "uncoded_grad_fn"),
+    "combine_grads": ("repro.train.coded", "combine_grads"),
     "build_plan": ("repro.train.coded", "build_plan"),
     # serving
     "generate": ("repro.serve.engine", "generate"),

@@ -81,6 +81,13 @@ from .schemes import (
     scheme_bank,
     solve_scheme,
 )
-from .plan import Plan, PlanSimulator, UNIT_RESOLUTION, leaf_costs_of
+from .flat import FlatLayout
+from .plan import (
+    Plan,
+    PlanSimulator,
+    UNIT_RESOLUTION,
+    leaf_costs_of,
+    leaf_shapes_of,
+)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -32,10 +32,12 @@ import numpy as np
 from .assignment import assign_levels_to_layers
 from .coding import GradientCode
 from .env import Env
+from .flat import FlatLayout
 from .runtime import CostModel, DEFAULT_COST
 from .schemes import solve_scheme
 
-__all__ = ["Plan", "PlanSimulator", "UNIT_RESOLUTION", "leaf_costs_of"]
+__all__ = ["Plan", "PlanSimulator", "UNIT_RESOLUTION", "leaf_costs_of",
+           "leaf_shapes_of"]
 
 # L: abstract coordinate-unit resolution for the block optimizer.  The
 # paper's L is the raw parameter count; only the *fractions* x/L matter
@@ -65,6 +67,21 @@ def leaf_costs_of(params_or_costs) -> np.ndarray:
     return np.asarray(out, np.float64)
 
 
+def leaf_shapes_of(params_or_costs):
+    """Per-leaf shapes from a param pytree / shape tree, or ``None``
+    when the input is a bare cost vector (or any leaf carries no shape)
+    — the cases where no ``FlatLayout`` can be bound."""
+    if getattr(params_or_costs, "ndim", None) == 1:
+        return None
+    import jax  # deferred: keep repro.core importable without a device runtime
+
+    shapes = [getattr(leaf, "shape", None)
+              for leaf in jax.tree.leaves(params_or_costs)]
+    if not shapes or any(s is None for s in shapes):
+        return None
+    return [tuple(int(d) for d in s) for s in shapes]
+
+
 @dataclass
 class Plan:
     """A solved, model-bound block coordinate gradient coding plan."""
@@ -82,6 +99,10 @@ class Plan:
     #: the worker population this plan was optimized for (None on plans
     #: restored from pre-Env blobs).
     env: Optional[Env] = None
+    #: per-level flat packing plan for the fused encode/decode pipeline
+    #: (None when the plan was built from a bare cost vector — no leaf
+    #: shapes to bind).
+    flat_layout: Optional[FlatLayout] = field(repr=False, default=None)
 
     # ------------------------------------------------------------ construction
     @classmethod
@@ -112,11 +133,17 @@ class Plan:
         codes = GradientCode(n_workers, rng_seed=rng,
                              prefer_fractional=prefer_fractional)
         b_rows = cls._pack_rows(codes, n_workers, used, s_max)
+        shapes = leaf_shapes_of(params_or_costs)
+        flat_layout = None
+        if shapes is not None:
+            lookup = {int(s): i for i, s in enumerate(used)}
+            flat_layout = FlatLayout.build(
+                shapes, [lookup[int(s)] for s in levels], n_workers)
         return cls(
             n_workers=n_workers, x=x, leaf_levels=levels,
             leaf_costs=costs / costs.sum(), used_levels=used, s_max=s_max,
             b_rows=b_rows, codes=codes, scheme=scheme, total_units=int(total),
-            env=env,
+            env=env, flat_layout=flat_layout,
         )
 
     @staticmethod
@@ -278,6 +305,8 @@ class Plan:
             "version": 1,
             "scheme": self.scheme,
             "env": None if self.env is None else self.env.to_dict(),
+            "flat": (None if self.flat_layout is None
+                     else self.flat_layout.to_dict()),
             "n_workers": int(self.n_workers),
             "total_units": int(self.total_units),
             "x": np.asarray(self.x).astype(np.int64).tolist(),
@@ -316,6 +345,7 @@ class Plan:
             total_units=int(blob.get("total_units", UNIT_RESOLUTION)),
             env=(Env.from_dict(blob["env"])
                  if blob.get("env") is not None else None),
+            flat_layout=FlatLayout.from_dict(blob.get("flat")),
         )
 
 

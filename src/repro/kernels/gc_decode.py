@@ -12,7 +12,8 @@ mask (already folded into `a` as zeros) with the reduction, so discarded
 workers' rows never contribute to the accumulator.
 
 Tiling mirrors gc_encode: D split into lane-aligned VMEM tiles, the
-weight vector resident, fp32 accumulation.
+weight vector resident, fp32 accumulation.  Ragged D is masked in the
+tail tile in-kernel (no host-side ``jnp.pad`` copy of C).
 """
 from __future__ import annotations
 
@@ -21,6 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ._tiling import mask_tail_lanes
 
 DEFAULT_TILE_D = 512
 
@@ -34,25 +37,34 @@ def _decode_kernel(a_ref, c_ref, out_ref):
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
+def _decode_kernel_masked(a_ref, c_ref, out_ref, *, d: int, tile_d: int):
+    """Tail-safe variant for ragged D (see ``mask_tail_lanes``)."""
+    a = a_ref[...]
+    c = mask_tail_lanes(c_ref[...], d, tile_d)
+    acc = jax.lax.dot_general(
+        a, c, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
 def decode_pallas(a: jax.Array, c: jax.Array, *, tile_d: int = DEFAULT_TILE_D,
                   interpret: bool = False) -> jax.Array:
-    """y = a @ C.  a: (N,), C: (N, D) -> (D,)."""
+    """y = a @ C.  a: (N,), C: (N, D) -> (D,).  Ragged D masked in-kernel."""
     n, d = c.shape
     assert a.shape == (n,)
-    d_pad = -(-d // tile_d) * tile_d
-    if d_pad != d:
-        c = jnp.pad(c, ((0, 0), (0, d_pad - d)))
-    grid = (d_pad // tile_d,)
+    grid = (pl.cdiv(d, tile_d),)
+    kernel = _decode_kernel if d % tile_d == 0 else functools.partial(
+        _decode_kernel_masked, d=d, tile_d=tile_d)
     out = pl.pallas_call(
-        _decode_kernel,
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, n), lambda i: (0, 0)),
             pl.BlockSpec((n, tile_d), lambda i: (0, i)),
         ],
         out_specs=pl.BlockSpec((1, tile_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, d_pad), c.dtype),
+        out_shape=jax.ShapeDtypeStruct((1, d), c.dtype),
         interpret=interpret,
     )(a.astype(c.dtype)[None, :], c)
-    return out[0, :d]
+    return out[0]

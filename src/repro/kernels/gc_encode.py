@@ -13,6 +13,12 @@ over G in HBM.  TPU mapping: tile the D axis into lane-aligned TILE_D
 columns resident in VMEM; the (NB, K) coefficient matrix is tiny and
 stays resident across the whole grid.  The MXU sees a skinny
 (NB, K) x (K, TILE_D) matmul per tile with fp32 accumulation.
+
+Ragged D (not a multiple of TILE_D) is handled by masking the tail tile
+inside the kernel: reads past the array edge are undefined (NaN in
+interpret mode, garbage on hardware), so the kernel zero-selects the
+out-of-range lanes before the matmul and the trailing output write is
+trimmed by pallas.  No host-side ``jnp.pad`` copy of G is ever made.
 """
 from __future__ import annotations
 
@@ -21,6 +27,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ._tiling import mask_tail_lanes
 
 DEFAULT_TILE_D = 512  # lanes: multiple of 128; 512 keeps VMEM use < 1 MiB
 
@@ -34,26 +42,34 @@ def _encode_kernel(b_ref, g_ref, out_ref):
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
+def _encode_kernel_masked(b_ref, g_ref, out_ref, *, d: int, tile_d: int):
+    """Tail-safe variant for ragged D (see ``mask_tail_lanes``)."""
+    b = b_ref[...]
+    g = mask_tail_lanes(g_ref[...], d, tile_d)
+    acc = jax.lax.dot_general(
+        b, g, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
 def encode_pallas(b_code: jax.Array, g: jax.Array, *, tile_d: int = DEFAULT_TILE_D,
                   interpret: bool = False) -> jax.Array:
-    """C = B_code @ G via pl.pallas_call.  Pads D to a tile multiple."""
+    """C = B_code @ G via pl.pallas_call.  Ragged D is masked in-kernel."""
     nb, k = b_code.shape
     k2, d = g.shape
     assert k == k2, (b_code.shape, g.shape)
-    d_pad = -(-d // tile_d) * tile_d
-    if d_pad != d:
-        g = jnp.pad(g, ((0, 0), (0, d_pad - d)))
-    grid = (d_pad // tile_d,)
-    out = pl.pallas_call(
-        _encode_kernel,
+    grid = (pl.cdiv(d, tile_d),)
+    kernel = _encode_kernel if d % tile_d == 0 else functools.partial(
+        _encode_kernel_masked, d=d, tile_d=tile_d)
+    return pl.pallas_call(
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((nb, k), lambda i: (0, 0)),       # coefficients: resident
             pl.BlockSpec((k, tile_d), lambda i: (0, i)),   # gradient tile
         ],
         out_specs=pl.BlockSpec((nb, tile_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((nb, d_pad), g.dtype),
+        out_shape=jax.ShapeDtypeStruct((nb, d), g.dtype),
         interpret=interpret,
     )(b_code.astype(g.dtype), g)
-    return out[:, :d]

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: FUSED gradient-coding encode + decode-weight.
+
+The coded training hot path wants, per redundancy level, this worker's
+decode-weighted coded block
+
+    y = (a ⊙ B_code) @ G      a      : (NB,)   per-row decode weights
+                              B_code : (NB, K) coding rows
+                              G      : (K, D)  packed flat gradients
+
+Computing ``encode`` then ``decode-scale`` as two ops costs two HBM
+passes (write C, read C, write a*C); folding the decode weight into the
+coding row turns the whole combine into ONE skinny matmul — a single
+streaming pass over G.  The weight fold ``w = a[:, None] * B_code`` is
+an (NB, K) flop-free-in-context VPU op computed once per kernel launch
+on the resident coefficients.
+
+Tiling mirrors gc_encode: the D axis is split into lane-aligned VMEM
+tiles, coefficients stay resident across the grid, fp32 accumulation on
+the MXU.  Ragged D is masked in the tail tile in-kernel (no host-side
+``jnp.pad`` copy) — though the flat pipeline's ``FlatLayout`` buffers
+are lane-aligned by construction, so the fused path normally runs the
+unmasked kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._tiling import mask_tail_lanes
+
+DEFAULT_TILE_D = 512
+
+
+def _fused_kernel(a_ref, b_ref, g_ref, out_ref):
+    w = a_ref[...] * b_ref[...]  # (NB, 1) * (NB, K): decode weight fold
+    g = g_ref[...]               # (K, TILE_D)
+    acc = jax.lax.dot_general(
+        w, g, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def _fused_kernel_masked(a_ref, b_ref, g_ref, out_ref, *, d: int, tile_d: int):
+    """Tail-safe variant for ragged D (see ``mask_tail_lanes``)."""
+    w = a_ref[...] * b_ref[...]
+    g = mask_tail_lanes(g_ref[...], d, tile_d)
+    acc = jax.lax.dot_general(
+        w, g, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def encode_decode_pallas(a: jax.Array, b_code: jax.Array, g: jax.Array, *,
+                         tile_d: int = DEFAULT_TILE_D,
+                         interpret: bool = False) -> jax.Array:
+    """y = (a ⊙ B_code) @ G in one HBM pass.
+
+    a: (NB,) decode weights, b_code: (NB, K), g: (K, D) -> (NB, D).
+    """
+    nb, k = b_code.shape
+    k2, d = g.shape
+    assert k == k2, (b_code.shape, g.shape)
+    assert a.shape == (nb,), (a.shape, b_code.shape)
+    grid = (pl.cdiv(d, tile_d),)
+    kernel = _fused_kernel if d % tile_d == 0 else functools.partial(
+        _fused_kernel_masked, d=d, tile_d=tile_d)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb, 1), lambda i: (0, 0)),       # decode weights: resident
+            pl.BlockSpec((nb, k), lambda i: (0, 0)),       # coding rows: resident
+            pl.BlockSpec((k, tile_d), lambda i: (0, i)),   # gradient tile
+        ],
+        out_specs=pl.BlockSpec((nb, tile_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nb, d), g.dtype),
+        interpret=interpret,
+    )(a.astype(g.dtype)[:, None], b_code.astype(g.dtype), g)

@@ -1,12 +1,16 @@
-"""Pure-jnp oracles for the gradient-coding kernels."""
+"""Pure-jnp oracles for the gradient-coding kernels.
+
+The underscored ``_*_math`` forms are unjitted (they inline cleanly into
+an enclosing jit / shard_map trace — the training hot path); the
+``*_ref`` names wrap them in jax.jit for standalone benchmark/test use.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 
-@jax.jit
-def encode_ref(b_code: jax.Array, g: jax.Array) -> jax.Array:
+def _encode_math(b_code: jax.Array, g: jax.Array) -> jax.Array:
     """C = B_code @ G with fp32 accumulation (matches kernel numerics)."""
     return jax.lax.dot_general(
         b_code.astype(g.dtype), g, (((1,), (0,)), ((), ())),
@@ -14,10 +18,23 @@ def encode_ref(b_code: jax.Array, g: jax.Array) -> jax.Array:
     ).astype(g.dtype)
 
 
-@jax.jit
-def decode_ref(a: jax.Array, c: jax.Array) -> jax.Array:
+def _decode_math(a: jax.Array, c: jax.Array) -> jax.Array:
     """y = a @ C with fp32 accumulation."""
     return jax.lax.dot_general(
         a.astype(c.dtype)[None, :], c, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )[0].astype(c.dtype)
+
+
+def _encode_decode_math(a: jax.Array, b_code: jax.Array,
+                        g: jax.Array) -> jax.Array:
+    """y = (a ⊙ B_code) @ G — encode and decode weight in one matmul."""
+    w = (a[:, None] * b_code).astype(g.dtype)
+    return jax.lax.dot_general(
+        w, g, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    ).astype(g.dtype)
+
+
+encode_ref = jax.jit(_encode_math)
+decode_ref = jax.jit(_decode_math)
+encode_decode_ref = jax.jit(_encode_decode_math)

@@ -5,14 +5,37 @@ ledger) lives in ``repro.core.plan``/``repro.core.schemes``; this module
 is the jax integration:
 
   * ``make_coded_grad_fn`` — the worker-side compute: (s_max+1)
-    per-shard gradients (the redundancy work), per-leaf ENCODE with this
-    worker's coding row (kernels/gc_encode math), then the
-    decode-weighted reduction that replaces the data-parallel
-    all-reduce (DESIGN.md §3).
+    per-shard gradients (the redundancy work), then the coded combine
+    that replaces the data-parallel all-reduce (DESIGN.md §3).  Two
+    combine pipelines share the math:
+
+      - ``pipeline='flat'`` (default when the plan carries a
+        ``FlatLayout``): the FUSED path.  Per leaf, encode row and
+        decode weight fold into ONE skinny matmul (kernels/gc_fused
+        math — a single streaming pass over the per-shard gradients,
+        no separate scale pass, no per-leaf reduction bookkeeping).
+        In spmd mode each rank's weighted contributions land in the
+        plan's packed per-level flat buffers (lane-aligned,
+        N-divisible — ``Plan.flat_layout``), so the decode-weighted
+        reduction is ONE collective per redundancy level instead of
+        one per leaf, ``psum_scatter`` is unconditionally available,
+        and bf16 ``grad_dtype`` casts happen once on the packed
+        buffer.  The optimizer tree is unflattened once, at the end.
+      - ``pipeline='tree'``: the legacy per-leaf loop (encode
+        tensordot + decode-weight scale per leaf, one collective per
+        leaf) — kept as the baseline the flat path is benchmarked
+        against (benchmarks/coded_step.py) and parity-tested against
+        (tests/test_flat_pipeline.py).
+
+  * ``combine_grads`` — the combine stage alone (stacked per-shard
+    grads -> decoded mean gradient), the bench/test surface for both
+    pipelines.
   * legacy shims — ``CodingPlan``/``build_plan``/``solve_blocks``/
     ``StragglerSim``/``tau_weighted`` keep the pre-registry entry points
     working; new code should use ``Plan.build`` and
-    ``repro.core.solve_scheme``.
+    ``repro.core.solve_scheme``.  Direct importers of the old tree-loop
+    helpers ``_encode_tree``/``_scale_tree`` get a one-shot
+    ``DeprecationWarning`` pointing at ``combine_grads``.
 
 Two execution modes share the math:
   * ``mode='spmd'``  — jax.shard_map over the mesh 'data' axis (manual),
@@ -23,7 +46,7 @@ Two execution modes share the math:
 
 Exactness invariant (tested): for EVERY straggler realization, the
 decoded gradient equals the plain data-parallel gradient over the same
-global batch, to float tolerance.
+global batch, to float tolerance — on both pipelines.
 """
 from __future__ import annotations
 
@@ -38,11 +61,12 @@ from jax.sharding import PartitionSpec as P
 from repro.core import Plan, PlanSimulator, UNIT_RESOLUTION, solve_scheme
 from repro.core.runtime import CostModel, DEFAULT_COST
 from repro.core.schemes import get_scheme
+from repro.kernels import ops
 from repro.models.model import train_loss
 
 __all__ = ["CodingPlan", "build_plan", "solve_blocks", "StragglerSim",
-           "make_coded_grad_fn", "uncoded_grad_fn", "tau_weighted",
-           "UNIT_RESOLUTION"]
+           "make_coded_grad_fn", "uncoded_grad_fn", "combine_grads",
+           "tau_weighted", "UNIT_RESOLUTION"]
 
 #: Legacy name — ``CodingPlan`` was promoted to ``repro.core.plan.Plan``.
 CodingPlan = Plan
@@ -77,6 +101,19 @@ def _warn_legacy_key(name: str) -> None:
                    f"legacy scheme key {name!r} is deprecated; use the "
                    f"canonical registry name {canonical!r} "
                    "(repro.core.available_schemes())")
+
+
+def __getattr__(name: str):
+    """One-shot deprecation shim for direct importers of the old
+    per-leaf tree-loop helpers (the flat fused pipeline replaced them
+    in the training hot path)."""
+    if name in ("_encode_tree", "_scale_tree"):
+        _warn_once(f"treeloop:{name}",
+                   f"repro.train.coded.{name} is deprecated; use "
+                   "repro.train.coded.combine_grads(plan, grads, dec_w, "
+                   "pipeline='flat') — the fused flat pipeline")
+        return {"_encode_tree": _tree_encode, "_scale_tree": _tree_scale}[name]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def solve_blocks(solver: str, dist, n_workers: int, total: int, rng=0,
@@ -147,7 +184,8 @@ def _per_shard_grads(cfg, params, shards_tokens, shards_aux=None):
     return jax.lax.map(one, (shards_tokens, shards_aux))
 
 
-def _encode_tree(grads_stacked, rows, level_idx):
+# ------------------------------------------------- tree combine (baseline)
+def _tree_encode(grads_stacked, rows, level_idx):
     """Per-leaf encode: c_j = sum_k rows[level(j), k] * g_j[k]."""
     leaves, treedef = jax.tree.flatten(grads_stacked)
     out = []
@@ -157,7 +195,7 @@ def _encode_tree(grads_stacked, rows, level_idx):
     return treedef.unflatten(out)
 
 
-def _scale_tree(tree, dec_w_rank, level_idx):
+def _tree_scale(tree, dec_w_rank, level_idx):
     """Per-leaf decode weight a[level(j)] for this rank."""
     leaves, treedef = jax.tree.flatten(tree)
     return treedef.unflatten(
@@ -165,9 +203,127 @@ def _scale_tree(tree, dec_w_rank, level_idx):
     )
 
 
+# --------------------------------------------------- flat fused combine
+def _fused_leaf_combine(layout, leaves_nk, b_rows, dec_w, n_workers,
+                        grad_dtype):
+    """All-workers fused combine: per leaf, ONE skinny matmul
+    ``(dec_w ⊙ rows / N) @ G`` over the (N*K, size) shard-gradient
+    stack — encode, decode weight, worker sum, and the 1/N mean fold
+    into a single streaming pass (kernels/gc_fused math).
+
+    leaves_nk: flat-order leaves shaped (N, K, *shape).  Returns the
+    decoded mean gradient leaves in flat order.
+    """
+    inv_n = jnp.ones((1,), jnp.float32) / n_workers
+    out = []
+    for j, shape in enumerate(layout.leaf_shapes):
+        li = layout.leaf_level[j]
+        w = (dec_w[li][:, None] * b_rows[:, li, :]).reshape(1, -1)  # (1, N*K)
+        g = leaves_nk[j].reshape((w.shape[1], -1))                  # (N*K, sz)
+        y = ops.encode_decode(inv_n, w, g)[0].reshape(shape)
+        if grad_dtype is not None:
+            y = y.astype(grad_dtype)
+        out.append(y)
+    return out
+
+
+def _fused_rank_levels(layout, leaves_k, rows_rank, dec_w_rank, denom,
+                       grad_dtype):
+    """One rank's decode-weighted coded contribution, packed into the
+    plan's per-level flat buffers (the collective's data structure).
+
+    leaves_k: flat-order leaves shaped (K, *shape) — this rank's
+    per-shard grads.  Per leaf, the fused matmul streams the (K, size)
+    stack once; the results are laid out at the layout's static offsets
+    (lane-aligned, N-divisible zero tail), ready for one psum /
+    psum_scatter per level.  bf16 ``grad_dtype`` is applied to the
+    packed buffer, halving the collective bytes.
+    """
+    bufs = []
+    for li in range(layout.n_levels):
+        a = (dec_w_rank[li] / denom)[None]   # (1,) decode weight, mean folded
+        row = rows_rank[li][None, :]         # (1, K) coding row
+        parts = []
+        for j in layout.level_leaves[li]:
+            g = leaves_k[j].reshape((row.shape[1], -1))  # (K, size)
+            parts.append(ops.encode_decode(a, row, g)[0])
+        pad = layout.level_sizes[li] - layout.level_used[li]
+        if pad:
+            parts.append(jnp.zeros((pad,), parts[0].dtype))
+        buf = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        if grad_dtype is not None:
+            buf = buf.astype(grad_dtype)
+        bufs.append(buf)
+    return bufs
+
+
+def combine_grads(plan: Plan, grads_stacked, dec_w, *, pipeline: str = "flat",
+                  grad_dtype=None):
+    """Decode-weighted mean combine of already-computed per-shard grads.
+
+    grads_stacked: pytree with leaves (N, K, *shape) — worker-major
+    stack of the (s_max+1) per-shard gradients.  dec_w: (n_used, N).
+    Returns the decoded mean gradient pytree (== the uncoded mean
+    gradient for any straggler realization dec_w encodes).
+
+    This is the combine stage alone — the bench/test surface for the
+    ``flat`` (fused single-pass) vs ``tree`` (per-leaf loop) pipelines;
+    the training grad fns interleave it with the per-shard backward.
+    """
+    leaves, treedef = jax.tree.flatten(grads_stacked)
+    n_workers = plan.n_workers
+    b_rows = jnp.asarray(plan.b_rows, jnp.float32)
+    dec_w = jnp.asarray(dec_w, jnp.float32)
+    if pipeline == "flat":
+        layout = _require_layout(plan)
+        out = _fused_leaf_combine(layout, leaves, b_rows, dec_w, n_workers,
+                                  grad_dtype)
+        return treedef.unflatten(out)
+    if pipeline != "tree":
+        raise ValueError(f"unknown pipeline {pipeline!r}; "
+                         "expected 'flat' or 'tree'")
+    level_idx = plan.level_index()
+
+    def worker(n):
+        per_worker = treedef.unflatten([l[n] for l in leaves])
+        c = _tree_encode(per_worker, b_rows[n], level_idx)
+        c = _tree_scale(c, dec_w[:, n], level_idx)
+        if grad_dtype is not None:  # mirror the spmd reduce: cast, then sum
+            c = jax.tree.map(lambda l: l.astype(grad_dtype), c)
+        return c
+
+    contribs = jax.lax.map(worker, jnp.arange(n_workers))
+    summed = jax.tree.map(lambda l: l.sum(0), contribs)
+    return jax.tree.map(lambda l: l / n_workers, summed)
+
+
+def _require_layout(plan: Plan):
+    if plan.flat_layout is None:
+        raise ValueError(
+            "pipeline='flat' needs plan.flat_layout — build the plan from "
+            "a parameter pytree (Plan.build(params, env, ...)); plans built "
+            "from bare cost vectors carry no leaf shapes (use "
+            "pipeline='tree')")
+    return plan.flat_layout
+
+
+def _resolve_pipeline(pipeline: str, plan: Plan) -> str:
+    if pipeline == "auto":
+        return "flat" if plan.flat_layout is not None else "tree"
+    if pipeline == "flat":
+        _require_layout(plan)
+        return "flat"
+    if pipeline == "tree":
+        return "tree"
+    raise ValueError(f"unknown pipeline {pipeline!r}; "
+                     "expected 'auto', 'flat', or 'tree'")
+
+
 def _scatter_dims(param_shapes, param_axes, n_workers: int):
     """Per-leaf dimension for psum_scatter: prefer the fsdp 'embed' axis,
-    else the first dim divisible by N; None -> plain psum for that leaf."""
+    else the first dim divisible by N; None -> plain psum for that leaf.
+    (tree pipeline only — the flat pipeline scatters the N-divisible
+    level buffers, no per-leaf divisibility hunt.)"""
     shapes = jax.tree.leaves(param_shapes)
     if param_axes is not None:
         axes = jax.tree.leaves(param_axes,
@@ -195,7 +351,7 @@ def _scatter_dims(param_shapes, param_axes, n_workers: int):
 def make_coded_grad_fn(cfg, plan: CodingPlan, *, mesh=None, data_axis: str = "data",
                        mode: str = "sim", reduce_mode: str = "psum",
                        grad_dtype=None, param_shapes=None,
-                       param_axes=None) -> Callable:
+                       param_axes=None, pipeline: str = "auto") -> Callable:
     """Returns grad_fn(params, worker_batches, dec_w, worker_aux=None)
     -> decoded mean grads.
 
@@ -205,26 +361,53 @@ def make_coded_grad_fn(cfg, plan: CodingPlan, *, mesh=None, data_axis: str = "da
     straggler realization.  worker_aux: optional (N, K, rows, ...)
     modality embeddings for VLM/audio archs.
 
+    pipeline: 'flat' (fused single-pass combine through the plan's
+    ``FlatLayout`` — the hot path), 'tree' (legacy per-leaf loop), or
+    'auto' (flat when the plan carries a layout, i.e. it was built from
+    a parameter pytree).
+
     Beyond-paper options (spmd mode):
       reduce_mode='psum_scatter' — the decode-weighted reduction emits
         grads SHARDED over the data axis (reduce-scatter instead of
-        all-reduce: (N-1)/N less collective traffic; exact).  Needs
-        param_shapes (+ optionally param_axes for fsdp alignment).
-      grad_dtype=jnp.bfloat16 — cast coded blocks before the reduction
-        (halves collective bytes; small stochastic rounding error).
+        all-reduce: (N-1)/N less collective traffic; exact).  On the
+        flat pipeline the N-divisible level buffers make this
+        unconditionally available (no param_shapes needed); the tree
+        pipeline still needs param_shapes (+ optionally param_axes for
+        fsdp alignment) to hunt per-leaf divisible dims.
+      grad_dtype=jnp.bfloat16 — cast the coded contribution before the
+        reduction (halves collective bytes; small stochastic rounding
+        error).  Flat pipeline: one cast of the packed level buffer.
     """
     level_idx = plan.level_index()
     b_rows = jnp.asarray(plan.b_rows, jnp.float32)  # (N, n_used, K)
     n_workers = plan.n_workers
+    pipeline = _resolve_pipeline(pipeline, plan)
+    layout = plan.flat_layout if pipeline == "flat" else None
 
     if mode == "sim":
+        if pipeline == "flat":
+
+            def grad_fn(params, worker_batches, dec_w, worker_aux=None):
+                def worker(n):
+                    aux_n = None if worker_aux is None else worker_aux[n]
+                    return _per_shard_grads(cfg, params, worker_batches[n],
+                                            aux_n)
+
+                g_all = jax.lax.map(worker, jnp.arange(n_workers))
+                leaves, treedef = jax.tree.flatten(g_all)  # (N, K, *shape)
+                out = _fused_leaf_combine(layout, leaves, b_rows,
+                                          jnp.asarray(dec_w, jnp.float32),
+                                          n_workers, grad_dtype)
+                return treedef.unflatten(out)
+
+            return grad_fn
 
         def grad_fn(params, worker_batches, dec_w, worker_aux=None):
             def worker(n):
                 aux_n = None if worker_aux is None else worker_aux[n]
                 g = _per_shard_grads(cfg, params, worker_batches[n], aux_n)
-                c = _encode_tree(g, b_rows[n], level_idx)
-                return _scale_tree(c, dec_w[:, n], level_idx)
+                c = _tree_encode(g, b_rows[n], level_idx)
+                return _tree_scale(c, dec_w[:, n], level_idx)
 
             contribs = jax.lax.map(worker, jnp.arange(n_workers))
             summed = jax.tree.map(lambda l: l.sum(0), contribs)
@@ -252,6 +435,14 @@ def make_coded_grad_fn(cfg, plan: CodingPlan, *, mesh=None, data_axis: str = "da
     for a in extra_axes:
         extra_size *= mesh.shape[a]
     inner_rules = strip_rules(make_rules(cfg), manual_axes)
+    denom = n_workers * extra_size
+
+    if pipeline == "flat":
+        return _make_flat_spmd_grad_fn(
+            cfg, layout, b_rows, n_workers, mesh=mesh, data_axis=data_axis,
+            extra_axes=extra_axes, manual_axes=manual_axes,
+            inner_rules=inner_rules, denom=denom, reduce_mode=reduce_mode,
+            grad_dtype=grad_dtype)
 
     scatter = None
     out_specs = P()
@@ -302,10 +493,9 @@ def make_coded_grad_fn(cfg, plan: CodingPlan, *, mesh=None, data_axis: str = "da
             rank = jax.lax.axis_index(data_axis)
             aux0 = None if my_aux is None else my_aux[0]
             g = _per_shard_grads(cfg, params, my_batches[0], aux0)
-            c = _encode_tree(g, my_rows[0], level_idx)
-            contrib = _scale_tree(c, dec_w[:, rank], level_idx)
+            c = _tree_encode(g, my_rows[0], level_idx)
+            contrib = _tree_scale(c, dec_w[:, rank], level_idx)
             decoded = _reduce(contrib)
-            denom = n_workers * extra_size
             return jax.tree.map(lambda l: l / denom, decoded)
 
     def grad_fn(params, worker_batches, dec_w, worker_aux=None):
@@ -328,6 +518,71 @@ def make_coded_grad_fn(cfg, plan: CodingPlan, *, mesh=None, data_axis: str = "da
             check_vma=False,
         )
         return smapped(params, worker_batches, dec_w, b_rows, worker_aux)
+
+    return grad_fn
+
+
+def _make_flat_spmd_grad_fn(cfg, layout, b_rows, n_workers, *, mesh,
+                            data_axis, extra_axes, manual_axes, inner_rules,
+                            denom, reduce_mode, grad_dtype) -> Callable:
+    """The flat fused spmd path: each rank streams its per-shard grads
+    through the fused encode⊙decode matmul into the plan's packed
+    per-level buffers, the reduction is ONE collective per level over
+    the flat contiguous buffer, and the optimizer tree is unflattened
+    once, outside the manual region."""
+    from repro.dist.sharding import use_mesh
+
+    if reduce_mode not in ("psum", "psum_scatter"):
+        raise ValueError(f"unknown reduce_mode {reduce_mode!r}")
+    scatter = reduce_mode == "psum_scatter"
+    # level buffers come out replicated (psum) or sharded over the data
+    # axis (psum_scatter: layout sizes are N-divisible by construction)
+    buf_specs = [P(data_axis) if scatter else P()
+                 for _ in range(layout.n_levels)]
+    batch_spec = P(data_axis, None, extra_axes if extra_axes else None)
+
+    def manual_fn(params, my_batches, dec_w, my_rows, my_aux=None):
+        with use_mesh(mesh, inner_rules, manual=True):
+            rank = jax.lax.axis_index(data_axis)
+            aux0 = None if my_aux is None else my_aux[0]
+            g = _per_shard_grads(cfg, params, my_batches[0], aux0)
+            leaves, _ = jax.tree.flatten(g)  # (K, *shape) each
+            bufs = _fused_rank_levels(layout, leaves, my_rows[0],
+                                      dec_w[:, rank], denom, grad_dtype)
+            if extra_axes:  # sum the pod halves of each shard first
+                bufs = list(jax.lax.psum(tuple(bufs), extra_axes))
+            if scatter:
+                return [jax.lax.psum_scatter(b, data_axis,
+                                             scatter_dimension=0, tiled=True)
+                        for b in bufs]
+            return list(jax.lax.psum(tuple(bufs), data_axis))
+
+    def grad_fn(params, worker_batches, dec_w, worker_aux=None):
+        treedef = jax.tree.structure(params)
+        dec_w = jnp.asarray(dec_w, jnp.float32)
+        if worker_aux is None:
+            smapped = jax.shard_map(
+                lambda p, wb, dw, rows: manual_fn(p, wb, dw, rows),
+                mesh=mesh,
+                in_specs=(P(), batch_spec, P(), P(data_axis)),
+                out_specs=buf_specs,
+                axis_names=manual_axes,
+                check_vma=False,
+            )
+            bufs = smapped(params, worker_batches, dec_w, b_rows)
+        else:
+            smapped = jax.shard_map(
+                manual_fn,
+                mesh=mesh,
+                in_specs=(P(), batch_spec, P(), P(data_axis), batch_spec),
+                out_specs=buf_specs,
+                axis_names=manual_axes,
+                check_vma=False,
+            )
+            bufs = smapped(params, worker_batches, dec_w, b_rows, worker_aux)
+        # one unflatten into the optimizer (GSPMD re-shards sliced leaves
+        # of scattered buffers as consumers demand)
+        return treedef.unflatten(layout.unpack(bufs))
 
     return grad_fn
 

@@ -66,17 +66,20 @@ def make_train_step(cfg, cfg_t: TrainConfig) -> Callable:
 def make_coded_train_step(cfg, cfg_t: TrainConfig, plan: Plan, *,
                           mesh=None, mode: str = "sim", reduce_mode: str = "psum",
                           grad_dtype=None, param_shapes=None,
-                          param_axes=None) -> Callable:
+                          param_axes=None, pipeline: str = "auto") -> Callable:
     """Coded step: (state, worker_batches, dec_w) -> (state, metrics).
 
     worker_batches: (N, K, rows, S+1); dec_w: (n_used, N) from
     ``plan.simulator(...).step()`` — zeros drop the realized stragglers, Tandon
     decode weights rescale the survivors, psum makes it exact.
-    reduce_mode/grad_dtype: see make_coded_grad_fn (beyond-paper opts).
+    reduce_mode/grad_dtype/pipeline: see make_coded_grad_fn ('auto'
+    takes the fused flat pipeline whenever the plan carries a
+    ``FlatLayout``, i.e. it was built from a parameter pytree).
     """
     grad_fn = make_coded_grad_fn(cfg, plan, mesh=mesh, mode=mode,
                                  reduce_mode=reduce_mode, grad_dtype=grad_dtype,
-                                 param_shapes=param_shapes, param_axes=param_axes)
+                                 param_shapes=param_shapes, param_axes=param_axes,
+                                 pipeline=pipeline)
 
     def step(state: TrainState, worker_batches, dec_w, worker_aux=None):
         grads = grad_fn(state.params, worker_batches, dec_w, worker_aux)
@@ -102,7 +105,7 @@ class Trainer:
     def __init__(self, cfg, cfg_t: TrainConfig, env, *, n_workers: int = None,
                  scheme: str = None, global_batch: int = 32, seed: int = 0,
                  mesh=None, mode: str = "sim", data_kind: str = "zipf",
-                 solver: str = None):
+                 solver: str = None, pipeline: str = "auto"):
         if scheme is None:
             scheme = solver if solver is not None else "xf"  # `solver` is the legacy kw
         if n_workers is None:
@@ -125,7 +128,8 @@ class Trainer:
             vocab=cfg.vocab, seq_len=min(cfg.max_seq, 512),
             global_batch=global_batch, seed=seed, kind=data_kind))
         self.step_fn = jax.jit(make_coded_train_step(cfg, cfg_t, self.plan,
-                                                     mesh=mesh, mode=mode))
+                                                     mesh=mesh, mode=mode,
+                                                     pipeline=pipeline))
         self.history: list[dict] = []
 
     def run(self, n_steps: int, log_every: int = 10, log_fn=print):

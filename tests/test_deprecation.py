@@ -59,6 +59,28 @@ def test_tau_weighted_warns_with_replacement(coded):
         coded.tau_weighted(plan, np.ones(4))
 
 
+def test_tree_loop_helpers_warn_once_with_replacement(coded):
+    """Direct importers of the old per-leaf tree-loop helpers get a
+    one-shot warning pointing at the flat-pipeline entry point."""
+    with pytest.warns(DeprecationWarning, match="combine_grads"):
+        enc = coded._encode_tree
+    with pytest.warns(DeprecationWarning, match="pipeline='flat'"):
+        scl = coded._scale_tree
+    # one-shot per name; and the shims still do the old math
+    _no_warning(lambda: coded._encode_tree)
+    _no_warning(lambda: coded._scale_tree)
+    import jax.numpy as jnp
+    import numpy as np_
+    g = {"w": jnp.arange(6.0).reshape(3, 2)}
+    rows = jnp.asarray([[1.0, 2.0, 3.0]])
+    c = enc(g, rows, np_.array([0]))
+    np_.testing.assert_allclose(np_.asarray(c["w"]),
+                                np_.asarray(jnp.tensordot(rows[0], g["w"],
+                                                          axes=(0, 0))))
+    s = scl(c, jnp.asarray([2.0]), np_.array([0]))
+    np_.testing.assert_allclose(np_.asarray(s["w"]), 2.0 * np_.asarray(c["w"]))
+
+
 def test_legend_string_key_warns_with_canonical_name(coded):
     coded.solve_blocks("xf", DIST, 4, 100)  # consume the entry-point warning
     with pytest.warns(DeprecationWarning, match="'tandon-alpha'"):

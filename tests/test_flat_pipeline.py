@@ -1,0 +1,240 @@
+"""The flat fused encode/decode pipeline (ISSUE 4): FlatLayout
+round-trips inside Plan.to_dict, pack/unpack is a bijection on ragged
+leaf shapes, and the flat pipeline's gradients match the tree pipeline
+and the uncoded reference for EVERY straggler count 0..s_max — sim and
+spmd modes, fp32 (tight) and bf16 grad_dtype (tolerance)."""
+import itertools
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import FlatLayout, Plan, ShiftedExponential
+from repro.core.flat import LANE
+from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
+from repro.train.coded import combine_grads, make_coded_grad_fn, uncoded_grad_fn
+from repro.train.state import init_train_state
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+
+# deliberately awkward leaf shapes: a 1-element scalar leaf, a
+# non-128-multiple vector, a ragged matrix, a lane-aligned one
+RAGGED_SHAPES = [(), (5,), (3, 7), (128,), (130,), (2, 2, 3)]
+RAGGED_LEVELS = [0, 1, 0, 1, 0, 0]
+
+
+def _max_err(a, b):
+    return max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(jnp.max(jnp.abs(
+            x.astype(jnp.float32) - y.astype(jnp.float32)))), a, b)))
+
+
+# --------------------------------------------------------------- FlatLayout
+def test_layout_padding_is_lane_aligned_and_n_divisible():
+    for n in (3, 4, 7):
+        layout = FlatLayout.build(RAGGED_SHAPES, RAGGED_LEVELS, n)
+        q = int(np.lcm(LANE, n))
+        for used, size in zip(layout.level_used, layout.level_sizes):
+            assert size % q == 0
+            assert used <= size < used + q
+    # payload bookkeeping covers every element exactly once
+    layout = FlatLayout.build(RAGGED_SHAPES, RAGGED_LEVELS, 4)
+    assert layout.total_elems == sum(int(np.prod(s)) for s in RAGGED_SHAPES)
+    seen = {j: (li, off, sz) for j, li, off, sz in layout.leaf_slices()}
+    assert set(seen) == set(range(len(RAGGED_SHAPES)))
+
+
+@pytest.mark.parametrize("batch", [(), (3,), (2, 4)])
+def test_pack_unpack_bijection_on_ragged_leaves(batch):
+    layout = FlatLayout.build(RAGGED_SHAPES, RAGGED_LEVELS, 4)
+    rng = np.random.default_rng(7)
+    leaves = [jnp.asarray(rng.standard_normal(batch + s), jnp.float32)
+              for s in RAGGED_SHAPES]
+    bufs = layout.pack(leaves)
+    for li, buf in enumerate(bufs):
+        assert buf.shape == batch + (layout.level_sizes[li],)
+        # the padding tail is exactly zero
+        used = layout.level_used[li]
+        assert np.all(np.asarray(buf[..., used:]) == 0.0)
+    back = layout.unpack(bufs)
+    for a, b in zip(leaves, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_layout_rejects_gapped_levels():
+    """Every level index 0..max must own at least one leaf — an empty
+    level would defer the failure deep into pack()/the combine."""
+    with pytest.raises(ValueError, match="empty level"):
+        FlatLayout.build([(4,)], [1], 4)
+    with pytest.raises(ValueError, match="empty level"):
+        FlatLayout.build([(4,), (2, 2)], [0, 2], 4)
+
+
+def test_layout_rejects_mismatched_leaves():
+    layout = FlatLayout.build(RAGGED_SHAPES, RAGGED_LEVELS, 4)
+    leaves = [jnp.zeros(s) for s in RAGGED_SHAPES]
+    with pytest.raises(ValueError):
+        layout.pack(leaves[:-1])
+    with pytest.raises(ValueError):
+        # leaf 1's layout shape is (5,): a (9, 9) array cannot carry it
+        layout.pack(leaves[:1] + [jnp.zeros((9, 9))] + leaves[2:])
+
+
+def test_layout_roundtrip_inside_plan_dict():
+    cfg = get_config("gc-lm-110m").reduced(n_layers=2, d_model=128)
+    state, _ = init_train_state(cfg, jax.random.PRNGKey(0))
+    plan = Plan.build(state.params, DIST, 4, scheme="xf")
+    assert plan.flat_layout is not None
+    blob = json.loads(json.dumps(plan.to_dict()))  # through real JSON
+    plan2 = Plan.from_dict(blob)
+    assert plan2.flat_layout == plan.flat_layout
+    # re-serializing is a fixed point, layout included
+    assert plan2.to_dict() == plan.to_dict()
+    # cost-vector plans carry no layout and say so on pipeline='flat'
+    plan_c = Plan.build(np.array([5.0, 3.0, 1.0]), DIST, 4, scheme="xf")
+    assert plan_c.flat_layout is None
+    assert Plan.from_dict(plan_c.to_dict()).flat_layout is None
+    with pytest.raises(ValueError, match="flat_layout"):
+        make_coded_grad_fn(cfg, plan_c, mode="sim", pipeline="flat")
+
+
+# ------------------------------------------------------- sim-mode parity
+@pytest.fixture(scope="module")
+def sim_setup():
+    cfg = get_config("gc-lm-110m").reduced(n_layers=2, d_model=128)
+    state, _ = init_train_state(cfg, jax.random.PRNGKey(0))
+    n = 4
+    plan = Plan.build(state.params, DIST, n, scheme="xf")
+    data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=48, global_batch=8))
+    wb = jnp.asarray(coded_worker_batches(data, 0, n, plan.s_max))
+    shards = jnp.asarray(np.stack([data.shard(0, i, n) for i in range(n)]))
+    g_ref = jax.jit(uncoded_grad_fn(cfg, n))(state.params, shards)
+    return cfg, state, plan, wb, g_ref, n
+
+
+def test_flat_equals_tree_and_uncoded_every_straggler_count_sim(sim_setup):
+    cfg, state, plan, wb, g_ref, n = sim_setup
+    flat_fn = jax.jit(make_coded_grad_fn(cfg, plan, mode="sim", pipeline="flat"))
+    tree_fn = jax.jit(make_coded_grad_fn(cfg, plan, mode="sim", pipeline="tree"))
+    for u in range(plan.s_max + 1):
+        times = np.ones(n)
+        times[:u] = 1e6  # u realized stragglers
+        dec_w = jnp.asarray(plan.decode_weights(times), jnp.float32)
+        gf = flat_fn(state.params, wb, dec_w)
+        gt = tree_fn(state.params, wb, dec_w)
+        assert _max_err(gf, gt) < 1e-5, u       # flat == tree (fp32)
+        assert _max_err(gf, g_ref) < 1e-4, u    # flat == uncoded
+
+def test_flat_bf16_grad_dtype_parity_sim(sim_setup):
+    cfg, state, plan, wb, g_ref, n = sim_setup
+    fn = jax.jit(make_coded_grad_fn(cfg, plan, mode="sim", pipeline="flat",
+                                    grad_dtype=jnp.bfloat16))
+    for u in (0, plan.s_max):
+        times = np.ones(n)
+        times[:u] = 1e6
+        dec_w = jnp.asarray(plan.decode_weights(times), jnp.float32)
+        g = fn(state.params, wb, dec_w)
+        assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(g))
+        # bf16 storage of the decoded values: ~8-bit mantissa tolerance
+        assert _max_err(g, g_ref) < 5e-2, u
+
+
+def test_auto_pipeline_picks_flat_with_layout(sim_setup):
+    cfg, state, plan, wb, g_ref, n = sim_setup
+    auto_fn = jax.jit(make_coded_grad_fn(cfg, plan, mode="sim"))
+    flat_fn = jax.jit(make_coded_grad_fn(cfg, plan, mode="sim", pipeline="flat"))
+    dec_w = jnp.asarray(plan.full_decode_weights(), jnp.float32)
+    assert _max_err(auto_fn(state.params, wb, dec_w),
+                    flat_fn(state.params, wb, dec_w)) == 0.0
+    with pytest.raises(ValueError, match="pipeline"):
+        make_coded_grad_fn(cfg, plan, mode="sim", pipeline="nope")
+
+
+def test_combine_grads_parity_all_straggler_counts(sim_setup):
+    cfg, state, plan, wb, g_ref, n = sim_setup
+    rng = np.random.default_rng(3)
+    k = plan.k_shards
+    grads = jax.tree.map(
+        lambda l: jnp.asarray(rng.standard_normal((n, k) + l.shape),
+                              jnp.float32), state.params)
+    for u in range(plan.s_max + 1):
+        times = np.ones(n)
+        times[n - u:] = 1e6
+        dec_w = plan.decode_weights(times)
+        cf = combine_grads(plan, grads, dec_w, pipeline="flat")
+        ct = combine_grads(plan, grads, dec_w, pipeline="tree")
+        assert _max_err(cf, ct) < 1e-5, u
+
+
+# ------------------------------------------------------ spmd-mode parity
+def _run_spmd(code: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_flat_spmd_parity_every_straggler_count_and_reduce_mode():
+    """flat == tree == uncoded on the mesh, for every straggler count,
+    for psum AND psum_scatter (which the flat pipeline provides without
+    param_shapes — the level buffers are N-divisible), plus bf16."""
+    res = _run_spmd(textwrap.dedent("""
+        import json, jax, numpy as np, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.core import Plan, ShiftedExponential
+        from repro.dist.sharding import use_mesh, make_rules
+        from repro.train.state import init_train_state
+        from repro.train.coded import make_coded_grad_fn, uncoded_grad_fn
+        from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = get_config("gc-lm-110m").reduced(n_layers=2, d_model=128)
+        state, _ = init_train_state(cfg, jax.random.PRNGKey(0))
+        n = 4
+        plan = Plan.build(state.params, ShiftedExponential(mu=1e-3, t0=50.0),
+                          n, scheme="xf")
+        data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=48, global_batch=8))
+        wb = jnp.asarray(coded_worker_batches(data, 0, n, plan.s_max))
+        def maxerr(a, b):
+            return max(jax.tree.leaves(jax.tree.map(
+                lambda x, y: float(jnp.max(jnp.abs(
+                    x.astype(jnp.float32) - y.astype(jnp.float32)))), a, b)))
+        errs = {"fp32": 0.0, "scatter": 0.0, "bf16": 0.0}
+        with use_mesh(mesh, make_rules(cfg)):
+            shards = jnp.asarray(np.stack([data.shard(0, i, n) for i in range(n)]))
+            g_ref = jax.jit(uncoded_grad_fn(cfg, n))(state.params, shards)
+            flat = jax.jit(make_coded_grad_fn(cfg, plan, mesh=mesh, mode="spmd",
+                                              pipeline="flat"))
+            scat = jax.jit(make_coded_grad_fn(cfg, plan, mesh=mesh, mode="spmd",
+                                              pipeline="flat",
+                                              reduce_mode="psum_scatter"))
+            bf16 = jax.jit(make_coded_grad_fn(cfg, plan, mesh=mesh, mode="spmd",
+                                              pipeline="flat",
+                                              grad_dtype=jnp.bfloat16))
+            for u in range(plan.s_max + 1):
+                times = np.ones(n); times[:u] = 1e6
+                dec_w = jnp.asarray(plan.decode_weights(times), jnp.float32)
+                errs["fp32"] = max(errs["fp32"],
+                                   maxerr(flat(state.params, wb, dec_w), g_ref))
+                errs["scatter"] = max(errs["scatter"],
+                                      maxerr(scat(state.params, wb, dec_w), g_ref))
+                errs["bf16"] = max(errs["bf16"],
+                                   maxerr(bf16(state.params, wb, dec_w), g_ref))
+        errs["devices"] = len(jax.devices())
+        print(json.dumps(errs))
+    """))
+    assert res["devices"] == 8
+    assert res["fp32"] < 1e-4
+    assert res["scatter"] < 1e-4
+    assert res["bf16"] < 5e-2

@@ -1,9 +1,11 @@
-"""Kernel parity sweep (ISSUE 2 satellite): ``encode_pallas`` /
-``decode_pallas`` in interpret mode vs the pure-jnp oracle across
-dtypes (fp32/bf16), ragged D not a multiple of tile_d, and
-tile_d in {128, 512} — exercising the zero-padding edge of
-gc_encode.py / gc_decode.py (D is padded up to a tile multiple and the
-result trimmed back)."""
+"""Kernel parity sweep (ISSUE 2 satellite; ISSUE 4 in-kernel tail
+masking): ``encode_pallas`` / ``decode_pallas`` / the fused
+``encode_decode_pallas`` in interpret mode vs the pure-jnp oracle
+across dtypes (fp32/bf16), ragged D not a multiple of tile_d, and
+tile_d in {128, 512}.  Since ISSUE 4 the kernels never ``jnp.pad`` the
+input — the ragged tail tile is masked inside the kernel (out-of-bounds
+lanes read NaN in interpret mode, so any mask leak shows up loudly) and
+the output is allocated at the true width."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -12,6 +14,7 @@ from repro.core import decode_weights, make_code
 from repro.kernels import ref
 from repro.kernels.gc_decode import decode_pallas
 from repro.kernels.gc_encode import encode_pallas
+from repro.kernels.gc_fused import encode_decode_pallas
 
 TILES = [128, 512]
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -55,6 +58,39 @@ def test_decode_parity_ragged(tile_d, dtype):
         np.testing.assert_allclose(np.asarray(out, np.float32),
                                    np.asarray(want, np.float32),
                                    err_msg=f"d={d}", **_tol(dtype))
+
+
+@pytest.mark.parametrize("tile_d", TILES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_parity_ragged(tile_d, dtype):
+    """encode_decode_pallas == (a ⊙ B) @ G oracle on ragged widths —
+    the fused kernel the flat training pipeline dispatches on TPU."""
+    rng = np.random.default_rng(2000 + tile_d)
+    for d in RAGGED_D:
+        g = jnp.asarray(rng.standard_normal((5, d)), dtype)
+        b = jnp.asarray(rng.standard_normal((3, 5)), dtype)
+        a = jnp.asarray(rng.standard_normal(3), dtype)
+        out = encode_decode_pallas(a, b, g, tile_d=tile_d, interpret=True)
+        want = ref.encode_decode_ref(a, b, g)
+        assert out.shape == want.shape == (3, d)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   err_msg=f"d={d}", **_tol(dtype))
+
+
+def test_fused_equals_encode_then_scale():
+    """The fold is exact up to fp reassociation: (a ⊙ B) @ G vs
+    a[:, None] * (B @ G)."""
+    rng = np.random.default_rng(5)
+    g = jnp.asarray(rng.standard_normal((4, 700)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((2, 4)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal(2), jnp.float32)
+    fused = encode_decode_pallas(a, b, g, tile_d=128, interpret=True)
+    two_pass = np.asarray(a)[:, None] * np.asarray(
+        encode_pallas(b, g, tile_d=128, interpret=True))
+    np.testing.assert_allclose(np.asarray(fused), two_pass,
+                               rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("tile_d", TILES)
