@@ -33,13 +33,13 @@ def main(argv=None) -> None:
                     help="dump all section rows + statuses as JSON")
     args = ap.parse_args(argv)
 
-    from . import coded_step, fig3_partitions, fig4a_runtime_vs_n
+    from . import adaptive_env, coded_step, fig3_partitions, fig4a_runtime_vs_n
     from . import fig4b_runtime_vs_mu, heterogeneous_env, kernel_bench
     from . import roofline, sim_cluster
 
     known = {"fig3_partitions", "fig4a_runtime_vs_n", "fig4b_runtime_vs_mu",
              "kernel_bench", "coded_step", "roofline", "sim_cluster",
-             "heterogeneous_env"}
+             "heterogeneous_env", "adaptive_env"}
     rows = []
     sections: dict = {}
     only = {s.strip() for s in args.only.split(",") if s.strip()}
@@ -70,6 +70,7 @@ def main(argv=None) -> None:
     section("roofline", roofline.main)                       # §Roofline table
     section("sim_cluster", sim_cluster.main, smoke=smoke)    # event/MC simulator
     section("heterogeneous_env", heterogeneous_env.main, smoke=smoke)  # Env payoff
+    section("adaptive_env", adaptive_env.main, smoke=smoke)  # re-planning payoff
 
     print("\nname,metric,value,status")
     for r in rows:

@@ -1,0 +1,25 @@
+"""Adaptive re-planning: close the measure -> estimate -> re-solve ->
+re-bind loop during coded training.
+
+The paper solves the partition against a *known* straggler
+distribution; this subsystem keeps the plan honest on clusters whose
+straggling drifts.  ``RuntimeMonitor`` folds per-step per-worker
+completion times into a sliding-window online ``Env`` estimate (the
+``Trace`` -> per-worker ``EmpiricalStraggler`` path) with a drift
+detector; ``AdaptiveController`` decides *when* re-planning pays,
+re-solves (warm-starting ``spsg`` from the current x), and hands back a
+fresh ``Plan`` for the trainer to hot-swap behind a step boundary.
+
+    monitor = RuntimeMonitor(n_workers=8)
+    ctrl = AdaptiveController(AdaptConfig(), plan, params)
+    new_plan = ctrl.observe(times_row)   # (N,) per-worker completions
+    if new_plan is not None:
+        trainer.swap_plan(new_plan)      # opt/RNG/step count untouched
+
+Design notes: docs/ADAPTIVE.md.
+"""
+from .controller import AdaptConfig, AdaptiveController
+from .monitor import DriftReport, RuntimeMonitor
+
+__all__ = ["AdaptConfig", "AdaptiveController", "DriftReport",
+           "RuntimeMonitor"]

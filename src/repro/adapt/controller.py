@@ -1,0 +1,244 @@
+"""The re-plan decision loop: drift -> re-solve -> hand back a Plan.
+
+``AdaptiveController`` owns a ``RuntimeMonitor`` and the re-planning
+policy.  Each round the trainer feeds it the realized per-worker
+completion times; when the monitor's drift detector fires (and the
+check cadence / predicted-gain gate agree), the controller
+
+  1. cross-fits the newest half of the window: its even rounds become
+     the solver's ``Env`` estimate (per-worker ``EmpiricalStraggler``
+     via the ``Trace``/``Env.from_trace`` path), its odd rounds are
+     held out to price the swap,
+  2. re-solves the partition against that estimate — iterative schemes
+     (``spsg``) warm-started from the current plan's x via the
+     ``warm_start=`` thread through ``solve_scheme``/``Plan.build``,
+  3. prices both partitions on the held-out rounds (paired vectorized
+     eq. (5)) and only swaps when the out-of-sample relative gain
+     clears ``min_gain`` AND a one-sided paired t-test — the "when
+     does re-planning pay" gate: a drift that does not move the
+     optimum (e.g. a uniform cluster-wide slowdown) re-fires the
+     detector but never churns the plan, and a partition that merely
+     overfits estimation noise shows no held-out gain,
+  4. rebuilds ``Plan`` (+ its ``FlatLayout``) against the live
+     parameter leaves and returns it; the caller hot-swaps it behind a
+     step boundary (``Trainer.swap_plan`` — optimizer state, RNG
+     stream, step count untouched).
+
+The controller is trainer-agnostic: benchmarks drive it against the
+eq.(2) scenario simulator (``benchmarks/adaptive_env.py``), the trainer
+against live training rounds, ``launch/train.py --adapt`` against the
+production loop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.plan import Plan
+from repro.core.runtime import CostModel, DEFAULT_COST, tau_hat_batch
+
+from .monitor import DriftReport, RuntimeMonitor
+
+__all__ = ["AdaptConfig", "AdaptiveController", "SwapEvent"]
+
+
+@dataclass(frozen=True)
+class AdaptConfig:
+    """Knobs of the adaptive re-planning loop (see docs/ADAPTIVE.md).
+
+    The defaults are deliberately conservative: a stationary cluster
+    should essentially never swap (Bonferroni-corrected drift test +
+    the ``min_gain`` gate), while a step-change is caught within about
+    one window of rounds.
+    """
+
+    #: sliding-window length (rounds) of the runtime monitor
+    window: int = 128
+    #: observations required before estimates / drift checks activate
+    min_rounds: int = 48
+    #: run the drift check every this many observed rounds
+    check_every: int = 8
+    #: per-check KS significance (Bonferroni-corrected across workers)
+    alpha: float = 0.002
+    #: relative per-worker mean shift that also fires the detector
+    mean_shift: float = 0.5
+    #: out-of-sample predicted relative E[tau] improvement (priced on
+    #: the held-out odd rounds of the window) required to actually swap
+    min_gain: float = 0.02
+    #: re-plan scheme (None -> the current plan's own scheme)
+    scheme: Optional[str] = None
+    #: redundancy-level cap for re-solves (Plan does not record the cap
+    #: it was built under, so a capped deployment must restate it here
+    #: — the SPMD work/tolerance co-design bound survives re-planning)
+    s_cap: Optional[int] = None
+    #: warm-start iterative schemes from the current plan's x
+    warm_start: bool = True
+    #: MC budget of the estimated Env's order statistics
+    mc_samples: int = 50_000
+    #: rng seed for re-solves (each re-plan advances it by one)
+    rng: int = 0
+
+
+@dataclass(frozen=True)
+class SwapEvent:
+    """One accepted re-plan: provenance for logs/benchmarks."""
+
+    round_idx: int            # monitor.rounds_seen at swap time
+    drift: DriftReport
+    x_old: np.ndarray
+    x_new: np.ndarray
+    predicted_gain: float     # 1 - E[tau_new]/E[tau_old] under the estimate
+
+
+def _abstract_leaves(params_or_costs):
+    """Plan.build inputs with array payloads stripped: pytree leaves
+    carrying shape+dtype become zero-allocation ``ShapeDtypeStruct``s
+    (the documented dry-run path); bare cost vectors and scalar-cost
+    leaves pass through unchanged (no jax import for solver-level
+    use)."""
+    if getattr(params_or_costs, "ndim", None) == 1:
+        return np.asarray(params_or_costs, np.float64)
+    import jax  # deferred: cost-vector callers stay numpy-only
+
+    def one(leaf):
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        if shape is None or dtype is None:
+            return leaf
+        return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+    return jax.tree.map(one, params_or_costs)
+
+
+class AdaptiveController:
+    """Drift-gated re-planner.  Feed it completion times; it hands back
+    a fresh ``Plan`` when (and only when) re-planning pays."""
+
+    def __init__(self, cfg: AdaptConfig, plan: Plan, params_or_costs, *,
+                 cost: CostModel = DEFAULT_COST):
+        self.cfg = cfg
+        self.plan = plan
+        #: what re-built plans bind to — leaf shapes (or the cost vector
+        #: for solver-level scenarios).  Array payloads are stripped to
+        #: ShapeDtypeStructs up front: Plan.build only reads shapes, and
+        #: the controller must not pin the initial model parameters in
+        #: device memory for the whole run.
+        self.params_or_costs = _abstract_leaves(params_or_costs)
+        self.cost = cost
+        self.monitor = RuntimeMonitor(
+            plan.n_workers, window=cfg.window, min_rounds=cfg.min_rounds,
+            alpha=cfg.alpha, mean_shift=cfg.mean_shift,
+            mc_samples=cfg.mc_samples)
+        self.swaps: list[SwapEvent] = []
+        self.checks = 0
+        self._replan_count = 0
+        self._cooldown_until = 0
+
+    # ------------------------------------------------------------- the loop
+    def observe(self, times) -> Optional[Plan]:
+        """Ingest one round's (N,) per-worker completion times; returns
+        the new ``Plan`` when this round triggered an accepted re-plan,
+        else ``None``.  The monitor window is cleared on an accepted
+        swap (the refill time, >= ``min_rounds``, is the natural
+        cooldown); a refused re-plan keeps the window and just backs
+        off ``min_rounds`` before the next attempt."""
+        self.monitor.observe(times)
+        if not self.monitor.ready:
+            return None
+        if self.monitor.rounds_seen < self._cooldown_until:
+            return None
+        if self.monitor.rounds_seen % self.cfg.check_every:
+            return None
+        self.checks += 1
+        report = self.monitor.drift()
+        if not report.fired and self.plan.env is not None:
+            # in-window stationary, but possibly far from the model the
+            # plan was solved for: the cumulative (slow-drift) arm.
+            report = self.monitor.shift_from(self.plan.env.means())
+        if not report.fired:
+            return None
+        return self._replan(report)
+
+    def _replan(self, report: DriftReport) -> Optional[Plan]:
+        cfg = self.cfg
+        # Cross-fitted re-solve: the newest half of the window is the
+        # current regime; its EVEN rounds feed the solver's Env estimate
+        # and its ODD rounds price the swap decision.  A partition that
+        # merely overfits estimation noise shows no gain on the held-out
+        # rounds, so the gate stays honest at small windows (where a
+        # same-sample "predicted gain" is systematically optimistic).
+        from repro.sim.trace import Trace  # deferred: sim imports core
+
+        recent = self.monitor.window_times()
+        recent = recent[recent.shape[0] // 2:]
+        from repro.core.env import Env
+
+        env_fit = Env.from_trace(Trace.from_times(recent[0::2]),
+                                 per_worker=True, mc_samples=cfg.mc_samples)
+        price_times = recent[1::2]
+        scheme = cfg.scheme or self.plan.scheme
+        warm = (np.asarray(self.plan.x, np.float64)
+                if cfg.warm_start else None)
+        # distinct seed per re-solve: the estimate changed, the solve
+        # stream should too (still deterministic given the time stream)
+        self._replan_count += 1
+        new_plan = Plan.build(
+            self.params_or_costs, env_fit, scheme=scheme,
+            rng=cfg.rng + self._replan_count, cost=self.cost,
+            total=int(self.plan.total_units), warm_start=warm,
+            s_cap=cfg.s_cap,
+            prefer_fractional=self.plan.codes.prefer_fractional)
+        tau_cur, tau_new = self._price_rows(new_plan, price_times)
+        gain = 1.0 - float(tau_new.mean()) / float(tau_cur.mean())
+        if gain < cfg.min_gain or not _paired_significant(tau_cur - tau_new):
+            # drift without a (yet-provable) better partition: keep the
+            # plan AND the window — mid-transition rows keep sliding
+            # out, so the next attempt prices on cleaner data — but
+            # back off for min_rounds so a persistent borderline drift
+            # (e.g. a uniform slowdown) costs one re-solve per cooldown
+            # instead of one per check.
+            self._cooldown_until = self.monitor.rounds_seen + cfg.min_rounds
+            return None
+        self.swaps.append(SwapEvent(
+            round_idx=self.monitor.rounds_seen, drift=report,
+            x_old=np.asarray(self.plan.x).copy(),
+            x_new=np.asarray(new_plan.x).copy(), predicted_gain=gain))
+        self.plan = new_plan
+        self.monitor.reset()
+        return new_plan
+
+    # ------------------------------------------------------------- pricing
+    def _price_rows(self, candidate: Plan, price_times):
+        """Per-round eq. (5) runtimes of (current, candidate) on the
+        same held-out (rounds, N) times — the one pricing pass both
+        gate arms derive from (paired comparison: draw noise cancels,
+        only real partition differences survive)."""
+        draws = np.asarray(price_times, np.float64)
+        cur = tau_hat_batch(np.asarray(self.plan.x, np.float64), draws,
+                            self.cost)
+        new = tau_hat_batch(np.asarray(candidate.x, np.float64), draws,
+                            self.cost)
+        return cur, new
+
+    def predicted_gain(self, candidate: Plan, price_times) -> float:
+        """1 - E[tau(candidate)]/E[tau(current)] on held-out rounds."""
+        cur, new = self._price_rows(candidate, price_times)
+        return 1.0 - float(new.mean()) / float(cur.mean())
+
+
+def _paired_significant(d: np.ndarray) -> bool:
+    """One-sided paired t-test on the per-round improvements d: the
+    mean must exceed the 95% Student-t quantile times its standard
+    error.  At a handful of held-out rounds (tiny windows) the quantile
+    is large, so a noisy configuration degrades to never-swap instead
+    of thrashing on sampling artifacts."""
+    from scipy.stats import t as student_t
+
+    if d.shape[0] < 2:
+        return False
+    se = float(d.std(ddof=1)) / np.sqrt(d.shape[0])
+    if se == 0.0:  # every held-out round improved identically
+        return bool(d.mean() > 0.0)
+    return bool(d.mean() > student_t.ppf(0.95, d.shape[0] - 1) * se)

@@ -43,6 +43,10 @@ from repro.core.distributions import (  # noqa: F401
 )
 
 _LAZY = {
+    # adaptive re-planning (numpy-only; lazy to keep the facade slim)
+    "AdaptConfig": ("repro.adapt", "AdaptConfig"),
+    "AdaptiveController": ("repro.adapt", "AdaptiveController"),
+    "RuntimeMonitor": ("repro.adapt", "RuntimeMonitor"),
     # trainer stack (imports jax models)
     "Trainer": ("repro.train.trainer", "Trainer"),
     "TrainConfig": ("repro.train.trainer", "TrainConfig"),

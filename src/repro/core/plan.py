@@ -109,7 +109,7 @@ class Plan:
     def build(cls, params_or_costs, env, n_workers: Optional[int] = None, *,
               scheme: str = "xf", rng: int = 0, cost: CostModel = DEFAULT_COST,
               prefer_fractional: bool = False, s_cap=None,
-              total: int = UNIT_RESOLUTION) -> "Plan":
+              total: int = UNIT_RESOLUTION, warm_start=None) -> "Plan":
         """Optimize the partition and bind it to this model's leaves.
 
         ``env`` is an ``Env`` (``n_workers`` then optional, validated if
@@ -120,12 +120,15 @@ class Plan:
         ``prefer_fractional=False``: the trainer always uses Tandon's
         cyclic code so every level shares the one cyclic shard
         allocation I_n.  ``s_cap`` bounds the top redundancy level
-        (SPMD work/tolerance co-design).
+        (SPMD work/tolerance co-design).  ``warm_start`` seeds
+        iterative schemes (spsg) from a previous block vector — the
+        adaptive re-planning hot path (``repro.adapt``); closed forms
+        ignore it.
         """
         env = Env.coerce(env, n_workers)
         n_workers = env.n_workers
         x = solve_scheme(scheme, env, n_workers, total, cost=cost, rng=rng,
-                         s_cap=s_cap)
+                         s_cap=s_cap, warm_start=warm_start)
         costs = leaf_costs_of(params_or_costs)
         levels = assign_levels_to_layers(costs, x)
         used = np.unique(levels)
@@ -168,6 +171,21 @@ class Plan:
     def solver(self) -> str:
         """Back-compat alias for the legacy CodingPlan field name."""
         return self.scheme
+
+    def partition_key(self) -> tuple:
+        """Hashable structural identity of the coded computation: two
+        plans with equal keys produce bit-identical coded steps (same
+        partition, same leaf levels, same code bank seed), so a compiled
+        step may be reused across a hot swap (``Trainer.swap_plan``) —
+        swapping back to a previously-seen partition is free."""
+        return (
+            int(self.n_workers),
+            tuple(int(v) for v in np.asarray(self.x)),
+            tuple(int(s) for s in self.leaf_levels),
+            tuple(int(s) for s in self.used_levels),
+            int(self.codes.rng_seed),
+            bool(self.codes.prefer_fractional),
+        )
 
     def level_index(self) -> np.ndarray:
         """Per-leaf index into used_levels (static, for jit closures)."""

@@ -125,7 +125,7 @@ def available_schemes() -> list[str]:
 
 def solve_scheme(name: str, env, n_workers: int, total: int, *,
                  cost: CostModel = DEFAULT_COST, rng=0, s_cap=None,
-                 integer: bool = True) -> np.ndarray:
+                 integer: bool = True, warm_start=None) -> np.ndarray:
     """Solve the block partition with the named scheme.
 
     ``env`` is an ``Env``, a bare ``StragglerDistribution`` (coerced to
@@ -134,15 +134,35 @@ def solve_scheme(name: str, env, n_workers: int, total: int, *,
     replacement for the old ``train.coded.solve_blocks`` if/elif
     ladder.  ``integer=True`` largest-remainder-rounds the solution so
     ``sum(x) == total`` exactly.
+
+    ``warm_start`` is a previous block vector to seed iterative schemes
+    from (the adaptive re-planning path: re-solve close to the current
+    plan's x).  It is forwarded only to schemes whose solve function
+    declares a ``warm_start`` parameter (``spsg`` does); closed forms
+    and baselines ignore it — their solutions are seed-free.
     """
     scheme = get_scheme(name)
     # solver view: static degradations folded in, transient faults
     # dropped — sampling-based and closed-form schemes then optimize
     # against the same effective population.
     env = Env.coerce(env, n_workers).solver_view()
-    x = scheme.solve(env, n_workers, total, cost=cost, rng=rng, s_cap=s_cap)
+    kw = {}
+    if warm_start is not None and _accepts_warm_start(scheme):
+        kw["warm_start"] = np.asarray(warm_start, np.float64)
+    x = scheme.solve(env, n_workers, total, cost=cost, rng=rng, s_cap=s_cap,
+                     **kw)
     x = np.asarray(x, np.float64)
     return round_x(x, total) if integer else x
+
+
+def _accepts_warm_start(scheme: Scheme) -> bool:
+    """True when the scheme's solve function declares ``warm_start``."""
+    import inspect
+
+    try:
+        return "warm_start" in inspect.signature(scheme.solve).parameters
+    except (TypeError, ValueError):  # builtins/C callables: assume not
+        return False
 
 
 def scheme_bank(env, n_workers: int, total: int, rng=0,
@@ -177,11 +197,14 @@ def _solve_xf(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0, s_cap=None):
 @register_scheme("spsg", display="x_dagger (SPSG)", kind="proposed",
                  aliases=("x_dagger",),
                  description="stochastic projected subgradient on Problem 3")
-def _solve_spsg(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0, s_cap=None):
+def _solve_spsg(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0, s_cap=None,
+                warm_start=None):
     # s_cap is honored by the closed forms; the subgradient iteration has
-    # no level cap (matches the legacy solve_blocks behavior).
+    # no level cap (matches the legacy solve_blocks behavior).  A warm
+    # start (the adaptive re-planning path) seeds the iteration from the
+    # current plan's x; cold solves are unchanged bit-for-bit.
     return spsg(dist, n_workers, total, n_iters=2000, batch=128, rng=rng,
-                cost=cost).x
+                cost=cost, warm_start=warm_start).x
 
 
 @register_scheme("uniform", display="uncoded", kind="uncoded",

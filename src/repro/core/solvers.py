@@ -145,6 +145,7 @@ def spsg(
     eval_every: int = 0,
     eval_samples: int = 20_000,
     model: str = "paper",
+    warm_start: np.ndarray | None = None,
 ) -> SPSGResult:
     """Stochastic projected subgradient method on Problem 3 [13].
 
@@ -157,10 +158,20 @@ def spsg(
     model='realized' swaps in the NN/SPMD realized cost (slot-sequential
     full-gradient passes + backward-emission streaming; runtime.py) —
     the beyond-paper, realization-aware optimizer of EXPERIMENTS §Perf.
+
+    ``warm_start`` seeds the iteration from a previous solution (the
+    adaptive re-planning hot path: the drifted optimum is close to the
+    current plan's x, so SPSG restarts inside the right face of the
+    simplex instead of at the uniform center).  It is projected onto
+    {x >= 0, sum = total} first, so any block vector — a different
+    total, a rounded integer solution — is a valid seed.  Takes
+    precedence over ``x0`` (the legacy spelling of the same knob).
     """
     subgrad = subgradient_tau_hat if model == "paper" else subgradient_tau_hat_realized
     evalfn = tau_hat_batch if model == "paper" else tau_hat_realized_batch
     rng_np = np.random.default_rng(rng)
+    if warm_start is not None:
+        x0 = warm_start
     x = (
         np.full(n_workers, total / n_workers, dtype=np.float64)
         if x0 is None

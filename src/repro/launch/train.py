@@ -56,6 +56,12 @@ def main():
     ap.add_argument("--env", default="",
                     help="JSON file with an Env.to_dict() worker-population "
                          "model (overrides --mu/--workers defaults)")
+    ap.add_argument("--adapt", action="store_true",
+                    help="adaptive re-planning: monitor realized per-worker "
+                         "completion times, re-solve + hot-swap the plan on "
+                         "drift (docs/ADAPTIVE.md)")
+    ap.add_argument("--adapt-window", type=int, default=128,
+                    help="sliding-window rounds for the runtime monitor")
     ap.add_argument("--uncoded", action="store_true")
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
@@ -93,22 +99,48 @@ def main():
             plan = Plan.build(state.params, env, scheme=args.scheme)
             sim = plan.simulator(env)
             mode = "spmd" if args.data_par == args.workers else "sim"
-            step = jax.jit(make_coded_train_step(
-                cfg, cfg_t, plan, mesh=mesh if mode == "spmd" else None,
-                mode=mode))
-            print(f"plan x={plan.x.tolist()} s_max={plan.s_max} mode={mode}")
+            step_mesh = mesh if mode == "spmd" else None
+            step_cache = {}
+
+            def step_for(p):
+                key = p.partition_key()
+                if key not in step_cache:
+                    step_cache[key] = jax.jit(make_coded_train_step(
+                        cfg, cfg_t, p, mesh=step_mesh, mode=mode))
+                return step_cache[key]
+
+            step = step_for(plan)
+            controller = None
+            if args.adapt:
+                from repro.adapt import AdaptConfig, AdaptiveController
+
+                controller = AdaptiveController(
+                    AdaptConfig(window=args.adapt_window), plan, state.params)
+            print(f"plan x={plan.x.tolist()} s_max={plan.s_max} mode={mode} "
+                  f"adapt={bool(controller)}")
             for i in range(args.steps):
                 wb = jnp.asarray(coded_worker_batches(data, i, args.workers,
                                                       plan.s_max))
                 dec_w, rec = sim.step()
                 t0 = time.perf_counter()
                 state, metrics = step(state, wb, dec_w)
+                if controller is not None:
+                    new_plan = controller.observe(rec["times"])
+                    if new_plan is not None:
+                        plan, sim.plan = new_plan, new_plan
+                        step = step_for(new_plan)
+                        print(f"step {i:4d} plan swap -> x={plan.x.tolist()} "
+                              f"(predicted gain "
+                              f"{controller.swaps[-1].predicted_gain:.1%})")
                 if i % 10 == 0 or i == args.steps - 1:
                     print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
                           f"tau_c {rec['tau_coded']:.3g} "
                           f"tau_u {rec['tau_uncoded']:.3g} "
                           f"({time.perf_counter()-t0:.2f}s)")
             print("ledger:", json.dumps(sim.summary()))
+            if controller is not None:
+                print(f"adaptive: {len(controller.swaps)} plan swap(s), "
+                      f"{controller.checks} drift check(s)")
     if args.ckpt:
         extra = {} if args.uncoded else {"plan": plan.to_dict()}
         print("saved:", save_checkpoint(args.ckpt, int(state.step), state,

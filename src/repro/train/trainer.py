@@ -100,12 +100,18 @@ class Trainer:
     against: an ``Env`` (``n_workers`` then optional — the env knows its
     size) or a bare ``StragglerDistribution`` (coerced to
     ``Env.iid(dist, n_workers)``, the pre-Env behavior unchanged).
+
+    ``adapt`` is an optional ``repro.adapt.AdaptConfig``: the trainer
+    then feeds every round's realized per-worker completion times into
+    an ``AdaptiveController`` and hot-swaps the plan (``swap_plan``)
+    when drift makes re-planning pay — optimizer state, RNG stream, and
+    step count untouched; see docs/ADAPTIVE.md.
     """
 
     def __init__(self, cfg, cfg_t: TrainConfig, env, *, n_workers: int = None,
                  scheme: str = None, global_batch: int = 32, seed: int = 0,
                  mesh=None, mode: str = "sim", data_kind: str = "zipf",
-                 solver: str = None, pipeline: str = "auto"):
+                 solver: str = None, pipeline: str = "auto", adapt=None):
         if scheme is None:
             scheme = solver if solver is not None else "xf"  # `solver` is the legacy kw
         if n_workers is None:
@@ -119,6 +125,7 @@ class Trainer:
         self.cfg, self.cfg_t = cfg, cfg_t
         self.env = self.dist = env  # `dist` is the legacy attribute name
         self.n_workers = n_workers
+        self.mesh, self.mode, self.pipeline = mesh, mode, pipeline
         key = jax.random.PRNGKey(seed)
         self.state, self.axes = init_train_state(cfg, key)
         self.plan = Plan.build(self.state.params, env,
@@ -127,10 +134,52 @@ class Trainer:
         self.data = SyntheticTokens(DataConfig(
             vocab=cfg.vocab, seq_len=min(cfg.max_seq, 512),
             global_batch=global_batch, seed=seed, kind=data_kind))
-        self.step_fn = jax.jit(make_coded_train_step(cfg, cfg_t, self.plan,
-                                                     mesh=mesh, mode=mode,
-                                                     pipeline=pipeline))
+        #: compiled coded steps keyed by (partition, pipeline) — a swap
+        #: back to a previously-seen partition reuses the compiled step.
+        self._step_cache: dict = {}
+        self.step_fn = self._step_fn_for(self.plan)
+        self.controller = None
+        if adapt is not None:
+            from repro.adapt import AdaptiveController
+
+            self.controller = AdaptiveController(adapt, self.plan,
+                                                 self.state.params)
         self.history: list[dict] = []
+
+    # ------------------------------------------------------------- hot swap
+    def _step_fn_for(self, plan: Plan):
+        key = (plan.partition_key(), self.pipeline)
+        fn = self._step_cache.get(key)
+        if fn is None:
+            fn = jax.jit(make_coded_train_step(
+                self.cfg, self.cfg_t, plan, mesh=self.mesh, mode=self.mode,
+                pipeline=self.pipeline))
+            self._step_cache[key] = fn
+        return fn
+
+    def swap_plan(self, plan: Plan) -> None:
+        """Hot-swap the coding plan at a step boundary (the swap epoch).
+
+        Non-invasive by construction: optimizer state, data stream, RNG
+        stream, and step count are untouched — only the plan the next
+        step codes against changes.  The straggler simulator keeps its
+        env/rng/ledger and just prices future rounds with the new plan;
+        the compiled coded step comes from a per-(partition, pipeline)
+        cache, so swapping back to a previous plan is free (tested
+        bit-identical in tests/test_adaptive.py).
+        """
+        if plan.n_workers != self.n_workers:
+            raise ValueError(f"plan has {plan.n_workers} workers, trainer "
+                             f"runs {self.n_workers}")
+        self.plan = plan
+        self.sim.plan = plan
+        if self.controller is not None and self.controller.plan is not plan:
+            # manual swap (not controller-initiated): re-baseline the
+            # re-planner too, or its pricing and slow-drift reference
+            # would keep comparing against the plan no longer running.
+            self.controller.plan = plan
+            self.controller.monitor.reset()
+        self.step_fn = self._step_fn_for(plan)
 
     def run(self, n_steps: int, log_every: int = 10, log_fn=print):
         for i in range(n_steps):
@@ -142,6 +191,15 @@ class Trainer:
             metrics = {k: float(v) for k, v in metrics.items()}
             metrics.update(step=int(self.state.step), wall_s=time.perf_counter() - t0,
                            tau_coded=rec["tau_coded"], tau_uncoded=rec["tau_uncoded"])
+            if self.controller is not None:
+                new_plan = self.controller.observe(rec["times"])
+                if new_plan is not None:
+                    self.swap_plan(new_plan)
+                    metrics["plan_swap"] = 1
+                    if log_every:
+                        log_fn(f"step {metrics['step']:5d}  plan swap -> "
+                               f"x={new_plan.x.tolist()} (predicted gain "
+                               f"{self.controller.swaps[-1].predicted_gain:.1%})")
             self.history.append(metrics)
             if log_every and (i % log_every == 0 or i == n_steps - 1):
                 log_fn(f"step {metrics['step']:5d}  loss {metrics['loss']:.4f}  "

@@ -1,0 +1,438 @@
+"""Adaptive re-planning (ISSUE 5): online estimator consistency, drift
+detection bounds, and — the load-bearing guarantee — that a mid-run
+Plan hot-swap is provably non-invasive: swapping away and back is
+bit-identical to never swapping, a swap to plan B equals a fresh run
+that started on B at that step, and optimizer/RNG state hashes are
+unchanged across a no-op swap.  Sim-mode here; the spmd twin (psum and
+psum_scatter) runs in the subprocess test marked ``spmd``.
+"""
+import hashlib
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.adapt import AdaptConfig, AdaptiveController, RuntimeMonitor
+from repro.adapt.monitor import ks_2sample, ks_threshold
+from repro.core import Env, Plan, ShiftedExponential, solve_scheme, spsg
+from repro.core.runtime import tau_hat_batch
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+N = 8
+
+
+# ----------------------------------------------------------- monitor basics
+def test_monitor_validates_observations():
+    mon = RuntimeMonitor(4)
+    with pytest.raises(ValueError, match="per-worker"):
+        mon.observe(np.ones(3))
+    with pytest.raises(ValueError, match="finite and positive"):
+        mon.observe(np.array([1.0, -1.0, 2.0, 3.0]))
+    with pytest.raises(ValueError, match="finite and positive"):
+        mon.observe(np.array([1.0, np.inf, 2.0, 3.0]))
+    mon.observe(np.ones(4))
+    assert len(mon) == 1 and mon.rounds_seen == 1
+    mon.reset()
+    assert len(mon) == 0 and mon.rounds_seen == 1  # rounds_seen is global
+    # wall-clock ingestion (the spmd-mode path): end - start per rank
+    mon.observe_wallclock(10.0, np.array([11.0, 12.0, 11.5, 13.0]))
+    np.testing.assert_array_equal(mon.window_times()[-1],
+                                  [1.0, 2.0, 1.5, 3.0])
+
+
+def test_ks_statistic_matches_brute_force():
+    rng = np.random.default_rng(0)
+    a, b = rng.standard_normal(37), rng.standard_normal(53) + 0.5
+    grid = np.concatenate([a, b])
+    brute = max(abs((a <= t).mean() - (b <= t).mean()) for t in grid)
+    assert ks_2sample(a, b) == pytest.approx(brute, abs=1e-12)
+    # threshold shrinks with more data, grows with smaller alpha
+    assert ks_threshold(64, 64, 0.01) < ks_threshold(16, 16, 0.01)
+    assert ks_threshold(64, 64, 0.001) > ks_threshold(64, 64, 0.01)
+
+
+# ----------------------------------------------------- estimator consistency
+def test_online_env_estimate_converges_to_closed_forms():
+    """Stationary seeded ShiftedExponential stream -> the estimated
+    Env's order statistics match the paper's closed forms (eq. (11) /
+    Lemma 2) within MC+bootstrap tolerance."""
+    mon = RuntimeMonitor(N, window=4000, min_rounds=100, mc_samples=60_000)
+    mon.observe_many(DIST.sample(np.random.default_rng(7), (4000, N)))
+    env_hat = mon.estimated_env()
+    assert isinstance(env_hat, Env) and env_hat.n_workers == N
+    t_err = np.abs(env_hat.expected_order_stats(N, rng=1)
+                   / DIST.expected_order_stats(N) - 1.0).max()
+    tp_err = np.abs(env_hat.inv_expected_inv_order_stats(N, rng=1)
+                    / DIST.inv_expected_inv_order_stats(N) - 1.0).max()
+    assert t_err < 0.05, t_err
+    assert tp_err < 0.05, tp_err
+
+
+def test_drift_detector_quiet_on_stationary_and_fires_within_window():
+    window = 64
+    mon = RuntimeMonitor(N, window=window, min_rounds=window // 2)
+    rng = np.random.default_rng(3)
+    fired_stationary = False
+    for r in range(400):
+        mon.observe(DIST.sample(rng, (N,)))
+        if r % 4 == 0 and mon.drift():
+            fired_stationary = True
+    assert not fired_stationary, "drift fired on a stationary stream"
+    # step change: two workers 4x slower -> must fire within `window`
+    fired_after = None
+    for r in range(window + 1):
+        t = DIST.sample(rng, (N,))
+        t[:2] *= 4.0
+        mon.observe(t)
+        if mon.drift():
+            fired_after = r + 1
+            break
+    assert fired_after is not None and fired_after <= window, fired_after
+    assert mon.drift().worker in (0, 1)
+
+
+def test_cumulative_shift_from_reference_means():
+    """The slow-drift arm: in-window stationary data that sits far from
+    the reference (planning-time) means still fires ``shift_from``."""
+    mon = RuntimeMonitor(N, window=64, min_rounds=32)
+    rng = np.random.default_rng(5)
+    t = DIST.sample(rng, (64, N))
+    t[:, -1] *= 2.5  # worker 7 runs hot the whole window
+    mon.observe_many(t)
+    assert not mon.drift().fired  # both halves identically distributed
+    base = np.full(N, DIST.mean())
+    rep = mon.shift_from(base)
+    assert rep.fired and rep.worker == N - 1
+    # and quiet when the reference matches the stream
+    base_hot = base.copy()
+    base_hot[-1] *= 2.5
+    assert not mon.shift_from(base_hot).fired
+
+
+# --------------------------------------------------------------- controller
+def test_controller_replans_on_step_change_and_improves():
+    costs = np.ones(48)
+    env0 = Env.iid(DIST, N)
+    plan = Plan.build(costs, env0, N, scheme="xt")
+    ctrl = AdaptiveController(
+        AdaptConfig(window=64, min_rounds=32, check_every=4), plan, costs)
+    rng = np.random.default_rng(11)
+    new_plan = None
+    for r in range(200):
+        t = env0.sample(rng, (N,))
+        t[:3] *= 3.0  # shifted regime from the first observed round
+        got = ctrl.observe(t)
+        if got is not None:
+            new_plan = got
+            break
+    assert new_plan is not None, "controller never re-planned"
+    assert ctrl.plan is new_plan and len(ctrl.swaps) == 1
+    assert int(new_plan.x.sum()) == int(plan.total_units)
+    assert new_plan.scheme == plan.scheme
+    # the re-planned x is genuinely better under the true shifted regime
+    eval_draws = env0.sample(np.random.default_rng(99), (4000, N))
+    eval_draws[:, :3] *= 3.0
+    tau_old = tau_hat_batch(np.asarray(plan.x, float), eval_draws).mean()
+    tau_new = tau_hat_batch(np.asarray(new_plan.x, float), eval_draws).mean()
+    assert tau_new < tau_old
+    # swap event provenance is recorded
+    ev = ctrl.swaps[0]
+    assert ev.predicted_gain >= ctrl.cfg.min_gain
+    np.testing.assert_array_equal(ev.x_old, plan.x)
+    np.testing.assert_array_equal(ev.x_new, new_plan.x)
+
+
+def test_controller_gain_gate_blocks_unprofitable_replan():
+    """A uniform cluster-wide slowdown moves every mean (drift fires)
+    but leaves the optimal *partition* unchanged — the predicted-gain
+    gate must refuse the swap."""
+    costs = np.ones(48)
+    env0 = Env.iid(DIST, N)
+    plan = Plan.build(costs, env0, N, scheme="xt")
+    ctrl = AdaptiveController(
+        AdaptConfig(window=64, min_rounds=32, check_every=4), plan, costs)
+    rng = np.random.default_rng(13)
+    for _ in range(300):
+        assert ctrl.observe(2.0 * env0.sample(rng, (N,))) is None
+    assert ctrl.swaps == [] and ctrl.checks > 0
+
+
+# --------------------------------------------------------------- warm start
+def test_spsg_warm_start_seeds_and_projects():
+    x_opt = solve_scheme("xt", DIST, N, 1000, integer=False)
+    res = spsg(Env.iid(DIST, N), N, 1000.0, n_iters=50, batch=16, rng=0,
+               warm_start=x_opt)
+    assert res.x.shape == (N,)
+    assert res.x.sum() == pytest.approx(1000.0, abs=1e-6)
+    # infeasible seeds are projected, not rejected
+    res2 = spsg(Env.iid(DIST, N), N, 1000.0, n_iters=5, batch=8, rng=0,
+                warm_start=np.full(N, 999.0))
+    assert res2.x.sum() == pytest.approx(1000.0, abs=1e-6)
+    # warm_start takes precedence over the legacy x0 spelling
+    a = spsg(Env.iid(DIST, N), N, 1000.0, n_iters=5, batch=8, rng=0,
+             x0=np.full(N, 1.0), warm_start=x_opt)
+    b = spsg(Env.iid(DIST, N), N, 1000.0, n_iters=5, batch=8, rng=0,
+             warm_start=x_opt)
+    np.testing.assert_array_equal(a.x, b.x)
+
+
+def test_solve_scheme_threads_warm_start_only_where_declared():
+    x_seed = solve_scheme("xt", DIST, N, 1000)
+    # spsg declares warm_start: a converged seed with few iterations
+    # stays near the seed, while the cold solve starts uniform
+    warm = solve_scheme("spsg", DIST, N, 1000, warm_start=x_seed)
+    assert int(warm.sum()) == 1000
+    # closed forms ignore the seed entirely — identical either way
+    np.testing.assert_array_equal(
+        solve_scheme("xt", DIST, N, 1000, warm_start=np.ones(N)),
+        solve_scheme("xt", DIST, N, 1000))
+    # and a cold spsg solve is unchanged by the new plumbing
+    np.testing.assert_array_equal(
+        solve_scheme("spsg", DIST, N, 1000),
+        solve_scheme("spsg", DIST, N, 1000, warm_start=None))
+
+
+def test_plan_build_warm_start_and_partition_key():
+    costs = np.ones(16)
+    p1 = Plan.build(costs, DIST, N, scheme="xt")
+    p2 = Plan.build(costs, DIST, N, scheme="xt",
+                    warm_start=np.ones(N))  # ignored by the closed form
+    assert p1.partition_key() == p2.partition_key()
+    assert isinstance(hash(p1.partition_key()), int)
+    p3 = Plan.build(costs, DIST, N, scheme="xf")
+    assert p3.partition_key() != p1.partition_key()
+
+
+# ------------------------------------------------- hot-swap bit-identity (sim)
+def _tree_hash(tree) -> str:
+    import jax
+
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(tree):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def _rng_hash(rng: np.random.Generator) -> str:
+    return json.dumps(rng.bit_generator.state, sort_keys=True)
+
+
+@pytest.fixture(scope="module")
+def tiny_trainer_setup():
+    from repro.configs import get_config
+
+    cfg = get_config("gc-lm-110m").reduced(n_layers=1, d_model=64)
+    env = Env.iid(DIST, 4)
+    return cfg, env
+
+
+def _make_trainer(cfg, env, scheme):
+    from repro.train.trainer import TrainConfig, Trainer
+
+    return Trainer(cfg, TrainConfig(total_steps=32), env, scheme=scheme,
+                   global_batch=8, seed=0)
+
+
+def test_noop_swap_is_bit_identical_to_never_swapping(tiny_trainer_setup):
+    """Swap A -> B -> A between steps: state/RNG hashes unchanged at the
+    swap epoch, and the continued run is bit-identical to a run that
+    never swapped (the compiled step comes back from the cache)."""
+    cfg, env = tiny_trainer_setup
+    tr = _make_trainer(cfg, env, "xf")
+    ref = _make_trainer(cfg, env, "xf")
+    plan_a = tr.plan
+    plan_b = Plan.build(tr.state.params, env, scheme="xt")
+    assert plan_b.partition_key() != plan_a.partition_key()
+
+    tr.run(2, log_every=0)
+    state_h, rng_h = _tree_hash(tr.state), _rng_hash(tr.sim.rng)
+    fn_a = tr.step_fn
+    tr.swap_plan(plan_b)
+    assert tr.plan is plan_b and tr.sim.plan is plan_b
+    tr.swap_plan(plan_a)
+    # no-op swap: optimizer/RNG state hashes unchanged, step fn reused
+    assert _tree_hash(tr.state) == state_h
+    assert _rng_hash(tr.sim.rng) == rng_h
+    assert tr.step_fn is fn_a
+    assert len(tr._step_cache) == 2
+
+    tr.run(2, log_every=0)
+    ref.run(4, log_every=0)
+    assert _tree_hash(tr.state) == _tree_hash(ref.state)
+    assert _rng_hash(tr.sim.rng) == _rng_hash(ref.sim.rng)
+    assert [r["tau_coded"] for r in tr.history] == \
+        [r["tau_coded"] for r in ref.history]
+
+
+def test_swap_to_b_equals_fresh_run_started_on_b(tiny_trainer_setup):
+    """A run that swaps to plan B at step k continues exactly as a run
+    that was *constructed* on B and fast-forwarded to the same state +
+    straggler-RNG position: the swap epoch carries no hidden state."""
+    cfg, env = tiny_trainer_setup
+    tr = _make_trainer(cfg, env, "xf")
+    tr.run(2, log_every=0)
+    fresh = _make_trainer(cfg, env, "xt")  # fresh.plan == plan B
+    plan_b = fresh.plan
+    # fast-forward the fresh run to the swap epoch: same train state,
+    # same straggler-RNG position, same ledger length
+    fresh.state = tr.state
+    fresh.sim.rng.bit_generator.state = tr.sim.rng.bit_generator.state
+    fresh.sim.ledger = list(tr.sim.ledger)
+
+    tr.swap_plan(plan_b)
+    tr.run(3, log_every=0)
+    fresh.run(3, log_every=0)
+    assert _tree_hash(tr.state) == _tree_hash(fresh.state)
+    assert _rng_hash(tr.sim.rng) == _rng_hash(fresh.sim.rng)
+    assert [r["tau_coded"] for r in tr.history[2:]] == \
+        [r["tau_coded"] for r in fresh.history]
+
+
+def test_swap_grads_bit_identical_every_straggler_count(tiny_trainer_setup):
+    """Grad-fn level, sim mode: for EVERY straggler count 0..s_max the
+    decoded gradients after swapping away and back (fresh compile) are
+    bitwise equal to the originals."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
+    from repro.train.coded import make_coded_grad_fn
+    from repro.train.state import init_train_state
+
+    cfg, env = tiny_trainer_setup
+    state, _ = init_train_state(cfg, jax.random.PRNGKey(0))
+    n = 4
+    plan_a = Plan.build(state.params, env, n, scheme="xf")
+    plan_b = Plan.build(state.params, env, n, scheme="xt")
+    data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                      global_batch=8))
+    wb_a = jnp.asarray(coded_worker_batches(data, 0, n, plan_a.s_max))
+    wb_b = jnp.asarray(coded_worker_batches(data, 0, n, plan_b.s_max))
+
+    fn_a1 = jax.jit(make_coded_grad_fn(cfg, plan_a, mode="sim"))
+    before = []
+    for u in range(plan_a.s_max + 1):
+        times = np.ones(n)
+        times[:u] = 1e6
+        dec_w = jnp.asarray(plan_a.decode_weights(times), jnp.float32)
+        before.append(fn_a1(state.params, wb_a, dec_w))
+    # "swap": run plan B once, then rebuild plan A's fn from scratch
+    fn_b = jax.jit(make_coded_grad_fn(cfg, plan_b, mode="sim"))
+    fn_b(state.params, wb_b,
+         jnp.asarray(plan_b.full_decode_weights(), jnp.float32))
+    fn_a2 = jax.jit(make_coded_grad_fn(cfg, plan_a, mode="sim"))
+    for u in range(plan_a.s_max + 1):
+        times = np.ones(n)
+        times[:u] = 1e6
+        dec_w = jnp.asarray(plan_a.decode_weights(times), jnp.float32)
+        after = fn_a2(state.params, wb_a, dec_w)
+        for x, y in zip(jax.tree.leaves(before[u]), jax.tree.leaves(after)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_trainer_adaptive_replans_on_model_plans(tiny_trainer_setup):
+    """Trainer(adapt=...) end to end at the controller level: the stored
+    re-plan inputs are abstract (no pinned device arrays), a drifted
+    stream produces a plan built against the live leaf shapes (with a
+    FlatLayout), and swap_plan installs it."""
+    import jax
+
+    from repro.adapt import AdaptConfig
+    from repro.train.trainer import TrainConfig, Trainer
+
+    cfg, env = tiny_trainer_setup
+    tr = Trainer(cfg, TrainConfig(), env, scheme="xt", global_batch=8,
+                 seed=0, adapt=AdaptConfig(window=48, min_rounds=24,
+                                           check_every=4))
+    assert all(isinstance(l, jax.ShapeDtypeStruct)
+               for l in jax.tree.leaves(tr.controller.params_or_costs))
+    rng = np.random.default_rng(0)
+    new_plan = None
+    for _ in range(200):
+        t = DIST.sample(rng, (4,))
+        t[2:] *= 5.0  # half the fleet 5x slower than the planned-for env
+        new_plan = tr.controller.observe(t)
+        if new_plan is not None:
+            break
+    assert new_plan is not None, "controller never re-planned"
+    assert new_plan.flat_layout is not None  # bound to the live leaves
+    assert new_plan.partition_key() != tr.plan.partition_key()
+    fn_before = tr.step_fn
+    tr.swap_plan(new_plan)
+    assert tr.plan is new_plan and tr.sim.plan is new_plan
+    assert tr.step_fn is not fn_before
+    # a MANUAL swap (not controller-initiated) re-baselines the
+    # controller too: plan synced, window cleared
+    plan_c = Plan.build(tr.state.params, env, scheme="xf")
+    tr.controller.monitor.observe(np.ones(4))
+    tr.swap_plan(plan_c)
+    assert tr.controller.plan is plan_c
+    assert len(tr.controller.monitor) == 0
+
+
+# ------------------------------------------------- hot-swap bit-identity (spmd)
+@pytest.mark.spmd
+def test_swap_grads_bit_identical_spmd_psum_and_scatter():
+    """The spmd twin of the test above, on an 8-device mesh: plan-A
+    decoded grads are bitwise unchanged after a swap away and back, for
+    every straggler count, for psum AND psum_scatter."""
+    code = textwrap.dedent("""
+        import json, jax, numpy as np, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.core import Env, Plan, ShiftedExponential
+        from repro.dist.sharding import use_mesh, make_rules
+        from repro.train.state import init_train_state
+        from repro.train.coded import make_coded_grad_fn
+        from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = get_config("gc-lm-110m").reduced(n_layers=1, d_model=64)
+        state, _ = init_train_state(cfg, jax.random.PRNGKey(0))
+        n = 4
+        env = Env.iid(ShiftedExponential(mu=1e-3, t0=50.0), n)
+        plan_a = Plan.build(state.params, env, n, scheme="xf")
+        plan_b = Plan.build(state.params, env, n, scheme="xt")
+        data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                          global_batch=8))
+        wb_a = jnp.asarray(coded_worker_batches(data, 0, n, plan_a.s_max))
+        wb_b = jnp.asarray(coded_worker_batches(data, 0, n, plan_b.s_max))
+        out = {"devices": len(jax.devices()), "max_diff": 0.0}
+        with use_mesh(mesh, make_rules(cfg)):
+            for rm in ("psum", "psum_scatter"):
+                mk = lambda p: jax.jit(make_coded_grad_fn(
+                    cfg, p, mesh=mesh, mode="spmd", reduce_mode=rm))
+                fn_a1 = mk(plan_a)
+                before = []
+                for u in range(plan_a.s_max + 1):
+                    times = np.ones(n); times[:u] = 1e6
+                    dw = jnp.asarray(plan_a.decode_weights(times), jnp.float32)
+                    before.append(jax.tree.map(np.asarray,
+                                               fn_a1(state.params, wb_a, dw)))
+                fn_b = mk(plan_b)
+                fn_b(state.params, wb_b,
+                     jnp.asarray(plan_b.full_decode_weights(), jnp.float32))
+                fn_a2 = mk(plan_a)
+                for u in range(plan_a.s_max + 1):
+                    times = np.ones(n); times[:u] = 1e6
+                    dw = jnp.asarray(plan_a.decode_weights(times), jnp.float32)
+                    after = fn_a2(state.params, wb_a, dw)
+                    for x, y in zip(jax.tree.leaves(before[u]),
+                                    jax.tree.leaves(after)):
+                        d = float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+                        out["max_diff"] = max(out["max_diff"], d)
+        print(json.dumps(out))
+    """)
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["devices"] == 8
+    assert res["max_diff"] == 0.0

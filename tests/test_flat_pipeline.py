@@ -185,6 +185,7 @@ def _run_spmd(code: str) -> dict:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.spmd
 def test_flat_spmd_parity_every_straggler_count_and_reduce_mode():
     """flat == tree == uncoded on the mesh, for every straggler count,
     for psum AND psum_scatter (which the flat pipeline provides without

@@ -8,9 +8,14 @@ import textwrap
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models.model import init_model, train_loss
+
+# the mesh-parity half runs on 8 fake devices in a subprocess; the whole
+# file rode the old --fast ignore list, so both tests keep that lane
+pytestmark = pytest.mark.spmd
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

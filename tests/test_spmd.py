@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.spmd
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
