@@ -35,11 +35,11 @@ def main(argv=None) -> None:
 
     from . import adaptive_env, coded_step, fig3_partitions, fig4a_runtime_vs_n
     from . import fig4b_runtime_vs_mu, heterogeneous_env, kernel_bench
-    from . import roofline, sim_cluster
+    from . import roofline, serve_load, sim_cluster
 
     known = {"fig3_partitions", "fig4a_runtime_vs_n", "fig4b_runtime_vs_mu",
              "kernel_bench", "coded_step", "roofline", "sim_cluster",
-             "heterogeneous_env", "adaptive_env"}
+             "heterogeneous_env", "adaptive_env", "serve_load"}
     rows = []
     sections: dict = {}
     only = {s.strip() for s in args.only.split(",") if s.strip()}
@@ -71,6 +71,7 @@ def main(argv=None) -> None:
     section("sim_cluster", sim_cluster.main, smoke=smoke)    # event/MC simulator
     section("heterogeneous_env", heterogeneous_env.main, smoke=smoke)  # Env payoff
     section("adaptive_env", adaptive_env.main, smoke=smoke)  # re-planning payoff
+    section("serve_load", serve_load.main, smoke=smoke)      # coded decode p99 gate
 
     print("\nname,metric,value,status")
     for r in rows:

@@ -1,0 +1,213 @@
+"""Serving-under-load bench: coded decode tier vs the uncoded baseline.
+
+Two layers, one seeded experiment:
+
+1. **Tier exactness** — a long seeded step-latency stream drawn from the
+   solved ``CodedDecode`` tier (R replicas, complete at the (R-s)-th
+   delivery) against the R=1 uncoded baseline on the same ``Env``.
+   Asserts the coded p99 *wins* by at least ``MIN_P99_WIN`` and that the
+   measured p99 agrees with the Env order-statistics closed form
+   (``order_stat_quantile``) within tolerance — the serving analogue of
+   the paper's eq. (5)/(11) cross-checks.
+
+2. **Engine under load** — the actual ``ServeEngine`` (continuous
+   batching over the shared KV slab, real model decode) serving an
+   identical Poisson request stream once per tier: same arrivals, same
+   prompts, same sampling keys.  Reports wall-clock tokens/sec plus
+   simulated p50/p99 request latency and queue delay.  The arrival rate
+   is set between the two tiers' service capacities, so the uncoded
+   baseline saturates (queueing delay compounds its per-step tail)
+   while the coded tier keeps up — the tail-latency payoff the
+   subsystem exists for.
+
+Emits machine-readable ``BENCH_serve.json`` (full runs; smoke keeps the
+committed artifact untouched, the runner's ``--json`` captures smoke
+rows).
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+import numpy as np
+
+JSON_DEFAULT = "BENCH_serve.json"
+
+#: committed gate: coded p99 step latency must beat uncoded by this factor
+MIN_P99_WIN = 1.5
+#: measured-vs-closed-form p99 agreement (MC noise at the sample sizes below)
+P99_TOL_FULL = 0.05
+P99_TOL_SMOKE = 0.10
+
+N_WORKERS = 8
+BUDGET = 4
+MU, T0 = 1e-3, 50.0
+
+
+def _tier_stats(tier, n_draws: int, seed: int) -> dict:
+    lat = tier.step_latencies(n_draws, seed=seed)
+    return {
+        "plan": tier.plan.to_dict(),
+        "measured_mean": float(lat.mean()),
+        "measured_p50": float(np.quantile(lat, 0.50)),
+        "measured_p99": float(np.quantile(lat, 0.99)),
+        "predicted_mean": tier.predicted_mean(),
+        "predicted_p99": tier.predicted_quantile(0.99),
+    }
+
+
+def _serve_stream(cfg, params, tier, arrivals, prompts, keys, max_new: int,
+                  slots: int) -> dict:
+    import jax
+
+    from repro.serve import ServeConfig, ServeEngine
+
+    eng = ServeEngine(
+        cfg, params,
+        ServeConfig(n_slots=slots, max_len=prompts.shape[1] + max_new),
+        coded=tier)
+    reqs = [eng.submit(prompts[i], max_new=max_new,
+                       key=jax.random.PRNGKey(int(keys[i])),
+                       arrival=float(arrivals[i]))
+            for i in range(len(arrivals))]
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    assert all(r.done and len(r.tokens) == max_new for r in reqs), \
+        "engine dropped tokens"
+    lats = np.asarray([r.latency for r in reqs])
+    delays = np.asarray([r.queue_delay for r in reqs])
+    steps = np.asarray(eng.step_latencies)
+    toks = len(reqs) * max_new
+    return {
+        "requests": len(reqs),
+        "tokens": toks,
+        "wall_seconds": wall,
+        "tokens_per_sec_wall": toks / max(wall, 1e-9),
+        "decode_steps": int(steps.size),
+        "simulated_span": float(eng.now),
+        "step_p50": float(np.quantile(steps, 0.50)),
+        "step_p99": float(np.quantile(steps, 0.99)),
+        "request_p50": float(np.quantile(lats, 0.50)),
+        "request_p99": float(np.quantile(lats, 0.99)),
+        "mean_queue_delay": float(delays.mean()),
+    }
+
+
+def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
+        json_path: str = JSON_DEFAULT) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.distributions import ShiftedExponential
+    from repro.core.env import Env
+    from repro.models.model import init_model
+    from repro.serve import CodedDecode
+    from repro.sim.arrivals import poisson_arrivals
+
+    env = Env.iid(ShiftedExponential(mu=MU, t0=T0), N_WORKERS)
+    coded = CodedDecode.solve(env, budget=BUDGET, objective="p99", seed=seed)
+    uncoded = CodedDecode.uncoded(env, seed=seed)
+
+    # ---- 1. tier exactness on a long seeded stream (no model in the loop)
+    n_draws = 20_000 if smoke else 200_000
+    stats_c = _tier_stats(coded, n_draws, seed=7)
+    stats_u = _tier_stats(uncoded, n_draws, seed=7)
+    win = stats_u["measured_p99"] / stats_c["measured_p99"]
+    agree = abs(stats_c["measured_p99"] - stats_c["predicted_p99"]) \
+        / stats_c["predicted_p99"]
+    if verbose:
+        p = coded.plan
+        print(f"[serve_load] env: {N_WORKERS}x ShiftedExponential(mu={MU}, "
+              f"t0={T0}), replica budget {BUDGET}")
+        print(f"  solved tier: R={p.r} s={p.s} (complete at {p.need}-th "
+              f"delivery, per-replica work {p.work_factor:.2f})")
+        print(f"  step p99 over {n_draws} draws: coded "
+              f"{stats_c['measured_p99']:.1f} (closed form "
+              f"{stats_c['predicted_p99']:.1f}, off {agree:.2%}) vs uncoded "
+              f"{stats_u['measured_p99']:.1f} -> {win:.2f}x win")
+
+    # ---- 2. the real engine under an identical Poisson load per tier
+    cfg = get_config("gemma-2b").reduced()
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    n_req = 6 if smoke else 24
+    max_new = 6 if smoke else 12
+    prompt_len = 12 if smoke else 24
+    slots = 4
+    # between the tiers' service capacities: uncoded saturates, coded keeps up
+    rate = slots / (max_new * uncoded.predicted_mean()) * 2.0
+    rng = np.random.default_rng(seed)
+    arrivals = poisson_arrivals(n_req, rate, seed=seed + 1)
+    prompts = rng.integers(0, cfg.vocab, size=(n_req, prompt_len))
+    keys = rng.integers(0, 2**31 - 1, size=n_req)
+
+    # fresh tier instances so both engine runs start identical rng streams
+    load_c = _serve_stream(cfg, params, CodedDecode(env, coded.plan,
+                                                    seed=seed),
+                           arrivals, prompts, keys, max_new, slots)
+    load_u = _serve_stream(cfg, params, CodedDecode(env, uncoded.plan,
+                                                    seed=seed),
+                           arrivals, prompts, keys, max_new, slots)
+    if verbose:
+        for name, load in (("coded", load_c), ("uncoded", load_u)):
+            print(f"  engine[{name:7s}] {load['tokens']} tokens, "
+                  f"{load['tokens_per_sec_wall']:.1f} tok/s wall; simulated "
+                  f"request p50={load['request_p50']:.0f} "
+                  f"p99={load['request_p99']:.0f} "
+                  f"queue={load['mean_queue_delay']:.0f}")
+
+    out = {
+        "machine": {"platform": platform.platform(),
+                    "python": platform.python_version(),
+                    "jax": jax.__version__},
+        "env": {"n_workers": N_WORKERS, "mu": MU, "t0": T0,
+                "budget": BUDGET},
+        "n_draws": n_draws,
+        "coded": stats_c,
+        "uncoded": stats_u,
+        "p99_win": win,
+        "p99_closed_form_err": agree,
+        "load": {"rate": rate, "n_requests": n_req, "max_new": max_new,
+                 "prompt_len": prompt_len, "slots": slots,
+                 "coded": load_c, "uncoded": load_u},
+        "smoke": smoke,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        if verbose:
+            print(f"wrote {json_path}")
+
+    tol = P99_TOL_SMOKE if smoke else P99_TOL_FULL
+    assert win >= MIN_P99_WIN, (
+        f"TAIL REGRESSION: coded p99 win {win:.2f}x < {MIN_P99_WIN}x over "
+        f"the uncoded baseline")
+    assert agree <= tol, (
+        f"coded tier p99 {stats_c['measured_p99']:.1f} disagrees with the "
+        f"Env order-statistics closed form {stats_c['predicted_p99']:.1f} "
+        f"by {agree:.2%} (> {tol:.0%})")
+    assert load_c["request_p99"] < load_u["request_p99"], (
+        "under identical load the coded engine must beat the uncoded "
+        "baseline on request p99")
+    return out
+
+
+def main(smoke: bool = False, json_path: str = None) -> dict:
+    """Smoke runs skip the default JSON file so CI never clobbers the
+    committed full-scale ``BENCH_serve.json``."""
+    if json_path is None:
+        json_path = "" if smoke else JSON_DEFAULT
+    out = run(smoke=smoke, json_path=json_path)
+    print("serve_load: OK")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json)

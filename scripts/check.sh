@@ -25,10 +25,11 @@ if git ls-files '*.pyc' | grep -q .; then
 fi
 echo "no tracked .pyc files"
 
-# tier-1 passed-count baseline as of PR 5 (PR 4: 255; PR 3: 237; PR 2:
-# 208; PR 1: 143; seed: 36).  Bump this when a PR adds tests — it is
-# what catches silently lost/uncollected files, not just failures.
-BASELINE=280
+# tier-1 passed-count baseline as of PR 6 (PR 5: 280; PR 4: 255; PR 3:
+# 237; PR 2: 208; PR 1: 143; seed: 36).  Bump this when a PR adds
+# tests — it is what catches silently lost/uncollected files, not just
+# failures.
+BASELINE=318
 # tests carrying @pytest.mark.spmd (registered in pytest.ini): the
 # multi-device subprocess tests the fast lane deselects.
 SPMD_COUNT=7
@@ -61,8 +62,12 @@ echo
 echo "== smoke benchmarks =="
 # includes the coded_step bench-regression guard: the flat fused combine
 # must never fall behind the tree baseline by >1.15x at the smoke shape
-# (assertion inside benchmarks/coded_step.py).  bench_smoke.json is the
-# machine-readable row dump (uploaded as a CI artifact).
+# (assertion inside benchmarks/coded_step.py) — and the serve_load
+# tail-latency guard: the coded decode tier must beat the uncoded R=1
+# baseline on p99 step latency by >=1.5x and agree with the Env
+# order-statistics closed form (assertions inside
+# benchmarks/serve_load.py).  bench_smoke.json is the machine-readable
+# row dump (uploaded as a CI artifact).
 python -m benchmarks.run --smoke --json bench_smoke.json
 
 echo

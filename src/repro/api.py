@@ -56,10 +56,19 @@ _LAZY = {
     "uncoded_grad_fn": ("repro.train.coded", "uncoded_grad_fn"),
     "combine_grads": ("repro.train.coded", "combine_grads"),
     "build_plan": ("repro.train.coded", "build_plan"),
-    # serving
+    # serving (engine pulls in the jax model stack; coded tier is numpy)
     "generate": ("repro.serve.engine", "generate"),
     "make_serve_step": ("repro.serve.engine", "make_serve_step"),
     "restore_plan": ("repro.serve.engine", "restore_plan"),
+    "ServeEngine": ("repro.serve.engine", "ServeEngine"),
+    "ServeConfig": ("repro.serve.engine", "ServeConfig"),
+    "Request": ("repro.serve.request", "Request"),
+    "CodedDecode": ("repro.serve.coded", "CodedDecode"),
+    "ReplicationPlan": ("repro.serve.coded", "ReplicationPlan"),
+    "solve_replication": ("repro.serve.coded", "solve_replication"),
+    # arrival processes (numpy)
+    "poisson_arrivals": ("repro.sim.arrivals", "poisson_arrivals"),
+    "trace_arrivals": ("repro.sim.arrivals", "trace_arrivals"),
     # cluster simulation (numpy event engine; repro.sim.mc pulls in jax)
     "ClusterSim": ("repro.sim", "ClusterSim"),
     "ClusterConfig": ("repro.sim", "ClusterConfig"),

@@ -261,6 +261,23 @@ class Env:
             return self
         return Env(dists=self.effective_dists(), mc_samples=self.mc_samples)
 
+    def subset(self, workers: Sequence[int]) -> "Env":
+        """The sub-population of the selected workers (e.g. the replica
+        group a coded serving step fans out to).  Faults follow their
+        worker into the subset with re-indexed worker ids; faults on
+        excluded workers are dropped."""
+        idx = [int(w) for w in workers]
+        if not idx:
+            raise ValueError("subset needs at least one worker")
+        for w in idx:
+            if not (0 <= w < self.n_workers):
+                raise ValueError(f"worker {w} out of range [0,{self.n_workers})")
+        remap = {w: j for j, w in enumerate(idx)}
+        faults = tuple(dataclasses.replace(f, worker=remap[f.worker])
+                       for f in self.faults if f.worker in remap)
+        return Env(dists=tuple(self.dists[w] for w in idx), faults=faults,
+                   mc_samples=self.mc_samples)
+
     def pooled(self) -> StragglerDistribution:
         """The i.i.d. marginal of this population: what a uniformly
         random worker looks like (the homogeneous approximation a
@@ -352,6 +369,45 @@ class Env:
             return 1.0 / self._order_stats_quad("inv")
         draws = self.sample_sorted(rng, n, self.mc_samples)
         return 1.0 / (1.0 / draws).mean(axis=0)
+
+    def order_stat_quantile(self, k: int, q: float, *, rtol: float = 1e-6,
+                            n_workers: Optional[int] = None) -> float:
+        """The ``q``-quantile of T_(k), the k-th smallest of the
+        (effective) population — the tail-latency primitive of the coded
+        serving tier: a decode step fanned out to the population's R
+        workers and accepted at the (R-s)-th delivery has step latency
+        distributed as T_(R-s), so its p99 is
+        ``order_stat_quantile(R - s, 0.99)``.
+
+        Deterministic for any population with per-worker CDFs: inverts
+        P[T_(k) <= t] (the Poisson-binomial count DP of
+        ``_order_stat_tails``) by bracketed bisection.
+        """
+        n = self._check_n(n_workers)
+        if not (1 <= int(k) <= n):
+            raise ValueError(f"order statistic k={k} out of range [1,{n}]")
+        if not (0.0 < q < 1.0):
+            raise ValueError(f"quantile q={q} must be in (0, 1)")
+        k = int(k)
+        tails = self._order_stat_tails()
+        target = 1.0 - float(q)          # find t with P[T_(k) > t] <= target
+
+        hi = max(d.mean() for d in self.effective_dists())
+        hi = max(hi, 1e-12)
+        for _ in range(200):
+            if tails(hi)[k - 1] <= target:
+                break
+            hi *= 2.0
+        else:
+            raise RuntimeError("order_stat_quantile: bracket expansion failed")
+        lo = 0.0
+        while hi - lo > rtol * max(hi, 1.0):
+            mid = 0.5 * (lo + hi)
+            if tails(mid)[k - 1] <= target:
+                hi = mid
+            else:
+                lo = mid
+        return float(hi)
 
     def _order_stat_tails(self):
         """t -> (N,) tail P[T_(k) > t], k = 1..N, via the Poisson-

@@ -1,21 +1,91 @@
-"""Serving launcher: batched prefill + decode on a (data, model) mesh.
+"""Serving launcher: continuous batching + coded decode on a mesh.
+
+One-shot batch mode (the historical entry point):
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-27b --reduced \
       --batch 4 --prompt-len 64 --new 16 --data-par 1 --model-par 1
+
+Request-stream mode drives the ``ServeEngine`` with a Poisson arrival
+stream and prices every decode step on an ``Env`` straggler model
+through the coded decode tier (R replicas per step, complete at the
+(R-s)-th delivery, (R, s) solved against the env):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --stream 16 \
+      --rate 0.002 --workers 8 --budget 4 --objective p99
+
+The straggler environment mirrors ``launch.train``: ``Env.iid(
+ShiftedExponential(mu), N)`` by default, or ``--env-json`` with an
+``Env.to_dict()`` population file.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
+from repro.core.distributions import ShiftedExponential
+from repro.core.env import Env
 from repro.dist.sharding import make_rules, use_mesh
 from repro.launch.mesh import make_local_mesh
 from repro.models.model import init_model
-from repro.serve.engine import generate
+from repro.serve import CodedDecode, ServeConfig, ServeEngine, generate
+from repro.sim.arrivals import poisson_arrivals
+
+
+def _build_env(args) -> Env:
+    if args.env_json:
+        with open(args.env_json) as f:
+            return Env.from_dict(json.load(f))
+    return Env.iid(ShiftedExponential(mu=args.mu, t0=50.0), args.workers)
+
+
+def _serve_stream(cfg, params, args) -> None:
+    env = _build_env(args)
+    if args.uncoded:
+        coded = CodedDecode.uncoded(env, seed=args.seed)
+    else:
+        coded = CodedDecode.solve(env, budget=args.budget,
+                                  objective=args.objective, seed=args.seed)
+    plan = coded.plan
+    print(f"coded decode tier: R={plan.r} s={plan.s} (complete at "
+          f"{plan.need}-th delivery, per-replica work {plan.work_factor:.2f}) "
+          f"objective={plan.objective}")
+
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(n_slots=args.slots,
+                                  max_len=args.prompt_len + args.new),
+                      coded=coded)
+    arrivals = poisson_arrivals(args.stream, args.rate, seed=args.seed)
+    base = jax.random.PRNGKey(args.seed)
+    pkey = jax.random.fold_in(base, 1)
+    for i, t in enumerate(arrivals):
+        prompt = jax.random.randint(jax.random.fold_in(pkey, i),
+                                    (args.prompt_len,), 0, cfg.vocab)
+        eng.submit(np.asarray(prompt), max_new=args.new,
+                   temperature=args.temperature,
+                   key=jax.random.fold_in(base, i), arrival=float(t))
+    t0 = time.time()
+    done = eng.run()
+    wall = time.time() - t0
+
+    steps = np.asarray(eng.step_latencies)
+    lats = np.asarray([r.latency for r in done])
+    delays = np.asarray([r.queue_delay for r in done])
+    toks = sum(len(r.tokens) for r in done)
+    print(f"served {len(done)} requests / {toks} tokens in {wall:.1f}s wall "
+          f"({toks / max(wall, 1e-9):.1f} tok/s), "
+          f"{eng.now:.0f} simulated time units over {steps.size} decode steps")
+    print(f"step latency   p50={np.quantile(steps, 0.5):.1f} "
+          f"p99={np.quantile(steps, 0.99):.1f} "
+          f"(env closed form p99={coded.predicted_quantile(0.99):.1f})")
+    print(f"request latency p50={np.quantile(lats, 0.5):.1f} "
+          f"p99={np.quantile(lats, 0.99):.1f}; "
+          f"mean queue delay {delays.mean():.1f}")
 
 
 def main():
@@ -28,6 +98,30 @@ def main():
     ap.add_argument("--data-par", type=int, default=1)
     ap.add_argument("--model-par", type=int, default=1)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # ---- request-stream mode
+    ap.add_argument("--stream", type=int, default=0,
+                    help="serve N streamed requests through the "
+                         "continuous-batching engine (0 = one-shot batch)")
+    ap.add_argument("--rate", type=float, default=2e-3,
+                    help="Poisson arrival rate, requests per simulated "
+                         "time unit")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV-slab slots (max concurrent requests)")
+    ap.add_argument("--workers", type=int, default=8,
+                    help="straggler-env population size")
+    ap.add_argument("--mu", type=float, default=1e-3,
+                    help="ShiftedExponential rate for the default env")
+    ap.add_argument("--env-json", default="",
+                    help="JSON file with an Env.to_dict() worker-population "
+                         "description (overrides --workers/--mu)")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="replica budget for the coded decode tier")
+    ap.add_argument("--objective", default="p99",
+                    choices=["p99", "p50", "mean"],
+                    help="what the (R, s) solver minimizes")
+    ap.add_argument("--uncoded", action="store_true",
+                    help="force the R=1 uncoded baseline tier")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -37,6 +131,12 @@ def main():
     key = jax.random.PRNGKey(0)
     with use_mesh(mesh, make_rules(cfg)):
         params, _ = init_model(cfg, key)
+        if args.stream > 0:
+            if cfg.vision is not None or cfg.encoder is not None:
+                raise SystemExit("--stream serves text-only configs (the "
+                                 "engine does not take aux_inputs)")
+            _serve_stream(cfg, params, args)
+            return
         prompt = jax.random.randint(key, (args.batch, args.prompt_len),
                                     0, cfg.vocab)
         aux = None

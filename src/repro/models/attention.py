@@ -245,20 +245,34 @@ def attn_forward(cfg, p, x, spec, *, positions=None, mode="train", cache=None,
         return shard(y, "batch", "seq", "embed"), new_cache
 
     # ---- decode: x is (B, 1, d); cache is {"k","v","pos"}.
+    # ``pos`` is a scalar int32 (whole batch in lockstep — the classic
+    # single-stream path) or a (B,) int32 row vector (the serving slab's
+    # continuous-batching path: every slot decodes at its own depth, so
+    # RoPE positions, ring slots, and validity masks are per-row).
     assert cache is not None
-    pos = cache["pos"]  # scalar int32: number of tokens already cached
-    q, k, v = _project_qkv(cfg, p, x, pos[None, None], rope_base)
+    pos = cache["pos"]
     cap_len = cache["k"].shape[1]
-    slot = jnp.mod(pos, cap_len)
-    k_cache = cache["k"].at[:, slot].set(k[:, 0].astype(cache["k"].dtype))
-    v_cache = cache["v"].at[:, slot].set(v[:, 0].astype(cache["v"].dtype))
     j = jnp.arange(cap_len)
-    valid = (j <= pos) | (pos >= cap_len)
+    if pos.ndim == 0:
+        q, k, v = _project_qkv(cfg, p, x, pos[None, None], rope_base)
+        slot = jnp.mod(pos, cap_len)
+        k_cache = cache["k"].at[:, slot].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[:, slot].set(v[:, 0].astype(cache["v"].dtype))
+        valid = (j <= pos) | (pos >= cap_len)
+        bias = _mask_bias(valid)[None, None, None, None, :]
+    else:
+        q, k, v = _project_qkv(cfg, p, x, pos[:, None], rope_base)
+        slot = jnp.mod(pos, cap_len)
+        rows = jnp.arange(b)
+        k_cache = cache["k"].at[rows, slot].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[rows, slot].set(v[:, 0].astype(cache["v"].dtype))
+        valid = (j[None, :] <= pos[:, None]) | (pos[:, None] >= cap_len)
+        bias = _mask_bias(valid)[:, None, None, None, :]
     kvh, dh = k.shape[2], k.shape[3]
     qg = q.reshape(b, 1, kvh, cfg.n_heads // kvh, dh)
     s_att = jnp.einsum("bqkgd,bckd->bkgqc", qg, k_cache.astype(q.dtype)) / np.sqrt(cfg.head_dim)
     s_att = softcap(s_att, cfg.attn_softcap).astype(jnp.float32)
-    s_att = s_att + _mask_bias(valid)[None, None, None, None, :]
+    s_att = s_att + bias
     w_att = jax.nn.softmax(s_att, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqc,bckd->bqkgd", w_att, v_cache.astype(q.dtype))
     out = out.reshape(b, 1, cfg.n_heads, dh)

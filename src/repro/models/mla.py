@@ -129,22 +129,34 @@ def mla_forward(cfg, p, x, spec, *, positions=None, mode="train", cache=None,
         return shard(y, "batch", "seq", "embed"), new_cache
 
     # ---- decode (absorbed): score against the latent cache directly.
+    # ``pos`` scalar = lockstep batch; (B,) = per-row depths (serving slab).
     assert cache is not None
     pos = cache["pos"]
-    q_nope, q_rope = _queries(cfg, p, x, pos[None, None])
-    c_new, kr_new = _latents(cfg, p, x, pos[None, None])
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else pos[None, None]
+    q_nope, q_rope = _queries(cfg, p, x, positions)
+    c_new, kr_new = _latents(cfg, p, x, positions)
     cap = cache["c_kv"].shape[1]
     slot = jnp.mod(pos, cap)
-    c_cache = cache["c_kv"].at[:, slot].set(c_new[:, 0].astype(cache["c_kv"].dtype))
-    kr_cache = cache["k_r"].at[:, slot].set(kr_new[:, 0].astype(cache["k_r"].dtype))
+    if per_row:
+        rows = jnp.arange(x.shape[0])
+        c_cache = cache["c_kv"].at[rows, slot].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+        kr_cache = cache["k_r"].at[rows, slot].set(kr_new[:, 0].astype(cache["k_r"].dtype))
+    else:
+        c_cache = cache["c_kv"].at[:, slot].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+        kr_cache = cache["k_r"].at[:, slot].set(kr_new[:, 0].astype(cache["k_r"].dtype))
     # absorb W_uk into the query: q_eff (B,H,r) = q_nope @ W_uk^T
     q_eff = jnp.einsum("bqhx,rhx->bqhr", q_nope, p["wk_b"].astype(dt))
     sc = jnp.einsum("bqhr,bcr->bhqc", q_eff, c_cache.astype(dt))
     sc = sc + jnp.einsum("bqhd,bcd->bhqc", q_rope, kr_cache.astype(dt))
     sc = (sc * scale).astype(jnp.float32)
     j = jnp.arange(cap)
-    valid = (j <= pos) | (pos >= cap)
-    sc = sc + jnp.where(valid, 0.0, NEG_INF)[None, None, None]
+    if per_row:
+        valid = (j[None, :] <= pos[:, None]) | (pos[:, None] >= cap)
+        sc = sc + jnp.where(valid, 0.0, NEG_INF)[:, None, None]
+    else:
+        valid = (j <= pos) | (pos >= cap)
+        sc = sc + jnp.where(valid, 0.0, NEG_INF)[None, None, None]
     w = jax.nn.softmax(sc, axis=-1).astype(dt)
     # attend in latent space, then expand once per output token
     lat = jnp.einsum("bhqc,bcr->bqhr", w, c_cache.astype(dt))

@@ -182,10 +182,15 @@ def decode_step(cfg, p, caches, token, pos=None, aux_inputs=None):
 
 
 def init_decode_caches(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16,
-                       filled: Optional[int] = None):
+                       filled: Optional[int] = None, row_pos: bool = False):
     """Decode caches with capacity seq_len, marked as holding ``filled``
     tokens (default seq_len - 1: the dry-run serve_step decodes token
-    seq_len against a full-but-one cache, no wraparound)."""
+    seq_len against a full-but-one cache, no wraparound).
+
+    ``row_pos=True`` makes every ``pos`` leaf a (batch,) int32 row
+    vector instead of a scalar — the serving slab's continuous-batching
+    layout, where each batch slot decodes at its own depth (see
+    ``repro.serve.slab``)."""
     caches = init_stack_caches(cfg, batch, seq_len, dtype)
     fill = seq_len - 1 if filled is None else filled
 
@@ -194,7 +199,14 @@ def init_decode_caches(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16,
             return None
         if isinstance(tree, list):  # pattern segment: one tree per position
             return [set_pos(t) for t in tree]
-        return {k: (jnp.full_like(v, fill) if k == "pos" else v)
+
+        def pos_leaf(v):
+            if not row_pos:
+                return jnp.full_like(v, fill)
+            # scalar -> (batch,); stacked (count,) -> (count, batch)
+            return jnp.full(v.shape + (batch,), fill, v.dtype)
+
+        return {k: (pos_leaf(v) if k == "pos" else v)
                 for k, v in tree.items()}
 
     return [set_pos(c) for c in caches]

@@ -1,0 +1,22 @@
+"""Serving subsystem: continuous batching + coded decode tier.
+
+Request flow: ``ServeEngine.submit`` -> priority/FIFO admission
+(``Scheduler``) into a shared batched KV slab (``slab``) -> lockstep
+decode priced per step by a redundancy-replicated ``CodedDecode`` tier
+whose (R, s) is solved against an ``Env`` straggler model
+(``solve_replication``).  See docs/SERVING.md.
+"""
+from .coded import CodedDecode, ReplicationPlan, solve_replication
+from .engine import (ServeConfig, ServeEngine, clear_jit_cache, generate,
+                     make_serve_step, restore_plan, trace_counts)
+from .request import DONE, QUEUED, RUNNING, Request
+from .scheduler import Scheduler
+from .slab import insert_request, make_slab
+
+__all__ = [
+    "CodedDecode", "ReplicationPlan", "solve_replication",
+    "ServeConfig", "ServeEngine", "clear_jit_cache", "generate",
+    "make_serve_step", "restore_plan", "trace_counts",
+    "Request", "QUEUED", "RUNNING", "DONE",
+    "Scheduler", "insert_request", "make_slab",
+]

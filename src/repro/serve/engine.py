@@ -1,8 +1,28 @@
-"""Batched serving engine: prefill + greedy/temperature decode loop.
+"""Continuous-batching serving engine with a coded decode tier.
 
-``serve_step`` (one token against a seq_len cache) is the unit the
-decode-shape dry-runs lower; ``generate`` drives it end-to-end for the
-examples.  Sampling is deterministic given the key.
+``ServeEngine`` is the subsystem's core: a priority/FIFO admission
+queue (``repro.serve.scheduler``) feeding a shared batched KV-cache
+slab (``repro.serve.slab``), decoded in lockstep one token per engine
+step.  Each admitted request prefills at batch 1, its cache row is
+scattered into the slab at the assigned slot, and every subsequent
+engine step decodes *all* live slots at once — per-row cache positions
+(see ``models/attention.py``) let requests sit at different depths in
+the same batch.  Steps are priced on a simulated clock by an optional
+``CodedDecode`` tier (``repro.serve.coded``): each step is dispatched
+to R replica workers drawn from an ``Env`` and completes at the
+(R-s)-th delivery, so the engine's tail latency is an order statistic
+of the replica population rather than a single worker's tail.
+
+Determinism contract (pinned by tests): a request's token stream is a
+pure function of (prompt, key, params), independent of batch
+composition.  Token 0 is sampled with the request key K_0 from the
+prefill logits; token j with K_j = fold_in(K_{j-1}, j-1) — exactly the
+legacy single-stream ``generate`` schedule, so a request served alone
+reproduces ``generate``'s B=1 output bit-for-bit.
+
+``generate`` survives as a deprecated shim over the engine (one
+request per prompt row, per-row key split), and ``serve_step`` (one
+token against a seq_len cache) remains the decode-shape dry-run unit.
 
 ``restore_plan`` closes the checkpoint/serve loop of the Plan API: a
 trainer that stored ``plan.to_dict()`` in its checkpoint metadata (see
@@ -14,18 +34,25 @@ re-solving the partition.
 from __future__ import annotations
 
 import functools
+import warnings
 from collections import Counter
-from typing import Optional
+from dataclasses import dataclass
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Plan
-from repro.models.model import decode_step, init_decode_caches, prefill
+from repro.models.model import decode_step, prefill
 
-__all__ = ["make_serve_step", "generate", "restore_plan", "trace_counts",
-           "clear_jit_cache"]
+from .coded import CodedDecode
+from .request import DONE, RUNNING, Request
+from .scheduler import Scheduler
+from .slab import insert_request, make_slab
+
+__all__ = ["ServeConfig", "ServeEngine", "make_serve_step", "generate",
+           "restore_plan", "trace_counts", "clear_jit_cache"]
 
 
 def restore_plan(ckpt_dir: str, step: Optional[int] = None) -> Optional[Plan]:
@@ -57,6 +84,53 @@ def _sample(logits, key, temperature: float):
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1)
     return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def _sample_row(logits, key, temperature):
+    """Sample one row (V,) with its own key: greedy at temperature <= 0,
+    categorical above.  ``categorical`` on a (V,) row draws the same
+    gumbel noise as row 0 of a (1, V) call with the same key, so this is
+    bit-identical to ``_sample`` at B=1 — and vmapping it over rows
+    gives every row its own stream, independent of batch composition.
+    """
+    greedy = jnp.argmax(logits, axis=-1)
+    safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
+    drawn = jax.random.categorical(key, logits / safe_t, axis=-1)
+    return jnp.where(temperature > 0.0, drawn, greedy)
+
+
+def _row_key(key, row: int):
+    """Per-row sampling key for batched ``generate``: row 0 keeps the
+    caller's key (B=1 stays bit-identical to the single-stream path),
+    later rows fold in a high offset that cannot collide with the
+    per-step fold_in(key, j-1) schedule for any realistic max_new."""
+    return key if row == 0 else jax.random.fold_in(key, 2 ** 30 + row)
+
+
+def _canonical_key(key):
+    """Accept both raw uint32 (2,) keys and new-style typed keys; the
+    engine stores raw key data so per-slot keys stack into one array."""
+    key = jnp.asarray(key)
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return key
+
+
+# One-shot DeprecationWarning (the ``repro.train.coded`` idiom): each
+# legacy entry point warns once per process, naming its replacement.
+_WARNED: set = set()
+
+
+def _warn_once(key: str, message: str) -> None:
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warnings() -> None:
+    """Forget which one-shot deprecation warnings already fired (tests)."""
+    _WARNED.clear()
 
 
 # --------------------------------------------------------------- jit caching
@@ -105,6 +179,38 @@ def _decode_fn(cfg, ctx_key):
     return jax.jit(fn)
 
 
+@functools.lru_cache(maxsize=64)
+def _insert_fn(cfg, ctx_key):
+    """Jitted slab insertion; ``slot`` is traced so admissions into
+    different slots share one compilation."""
+
+    def fn(slab, pref_caches, slot):
+        _TRACE_COUNTS["insert"] += 1
+        return insert_request(cfg, slab, pref_caches, slot)
+
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=64)
+def _serve_step_fn(cfg, ctx_key):
+    """Fused engine step: decode all slab slots, advance every row's key
+    by its own step index, sample every row with its own key.
+
+    Counts against the shared "decode" trace counter — the engine step
+    *is* the decode entry point, and the no-retrace contract
+    (tests/test_serve_retrace.py) applies to it unchanged.
+    """
+
+    def fn(p, slab, tok, keys, steps, temps):
+        _TRACE_COUNTS["decode"] += 1
+        logits, slab = decode_step(cfg, p, slab, tok, aux_inputs=None)
+        new_keys = jax.vmap(jax.random.fold_in)(keys, steps - 1)
+        nxt = jax.vmap(_sample_row)(logits[:, -1], new_keys, temps)
+        return slab, nxt.astype(jnp.int32), new_keys
+
+    return jax.jit(fn)
+
+
 def trace_counts() -> dict:
     """How many times the serving entry points have been (re)traced."""
     return dict(_TRACE_COUNTS)
@@ -114,25 +220,217 @@ def clear_jit_cache() -> None:
     """Drop the memoized jitted callables and reset the trace counters."""
     _prefill_fn.cache_clear()
     _decode_fn.cache_clear()
+    _insert_fn.cache_clear()
+    _serve_step_fn.cache_clear()
     _TRACE_COUNTS.clear()
 
 
+# ------------------------------------------------------------------ engine
+@dataclass(frozen=True)
+class ServeConfig:
+    """Engine geometry: slab capacity and cache dtype.
+
+    ``n_slots`` bounds concurrent requests (the slab batch); ``max_len``
+    is the per-slot cache capacity — a request needs
+    ``len(prompt) + max_new <= max_len``.
+    """
+
+    n_slots: int = 4
+    max_len: int = 256
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError("need at least one slab slot")
+        if self.max_len < 2:
+            raise ValueError("max_len must be >= 2")
+
+
+class ServeEngine:
+    """Continuous-batching serving loop over a shared KV slab.
+
+    ``submit`` queues requests (priority/FIFO admission, simulated
+    arrival times); ``step`` runs one engine iteration — admit into
+    free slots (per-request prefill + slab insert + first token), then
+    one lockstep decode over every live slot; ``run`` drains the
+    engine.  Evicted slots are recycled immediately.
+
+    The clock is *simulated*: each decode step costs one draw from the
+    ``coded`` tier (a ``repro.serve.coded.CodedDecode``; step latency
+    realizes (s+1)/R * work * T_(R-s:R) on the env's straggler model)
+    or 1.0 logical time unit when ``coded`` is None.  Prefill is not
+    charged (treated as pipelined), so ``step_latencies`` is exactly
+    the coded tier's per-step stream — comparable to
+    ``coded.predicted_quantile`` closed forms.
+    """
+
+    def __init__(self, cfg, params, serve: Optional[ServeConfig] = None, *,
+                 coded: Optional[CodedDecode] = None):
+        self.cfg = cfg
+        self.params = params
+        self.serve = serve or ServeConfig()
+        self.coded = coded
+        self.scheduler = Scheduler(self.serve.n_slots)
+        self.slab = make_slab(cfg, self.serve.n_slots, self.serve.max_len,
+                              dtype=self.serve.dtype)
+        self.now = 0.0
+        self.finished: List[Request] = []
+        self.step_latencies: List[float] = []
+        self._running = {}                      # slot -> Request
+        b = self.serve.n_slots
+        self._row_keys = [jax.random.PRNGKey(0)] * b
+        self._tok = np.zeros(b, np.int32)       # last sampled token per slot
+        self._steps = np.ones(b, np.int32)      # next token index per slot
+        self._temps = np.zeros(b, np.float32)
+
+    # ------------------------------------------------------------ interface
+    def submit(self, prompt, max_new: int = 32, *, temperature: float = 0.0,
+               key=None, priority: int = 0,
+               arrival: Optional[float] = None) -> Request:
+        """Queue one generation request; returns the live ``Request``
+        (its ``tokens``/timestamps fill in as the engine runs)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size + max_new > self.serve.max_len:
+            raise ValueError(
+                f"prompt({prompt.size}) + max_new({max_new}) exceeds slab "
+                f"capacity {self.serve.max_len}")
+        key = jax.random.PRNGKey(0) if key is None else key
+        req = Request(prompt=prompt, max_new=max_new, temperature=temperature,
+                      key=_canonical_key(key), priority=priority,
+                      arrival=self.now if arrival is None else float(arrival))
+        self.scheduler.enqueue(req)
+        return req
+
+    @property
+    def n_running(self) -> int:
+        return len(self._running)
+
+    def step(self) -> bool:
+        """One engine iteration; False once every request is finished."""
+        if not self._running and not len(self.scheduler):
+            return False
+        ctx = _sharding_ctx_key()
+        admitted = self.scheduler.admit(self.now)
+        if not admitted and not self._running:
+            # nothing live and nothing eligible: jump to the next arrival
+            self.now = max(self.now, self.scheduler.next_arrival(self.now))
+            admitted = self.scheduler.admit(self.now)
+        for req, slot in admitted:
+            self._admit(req, slot, ctx)
+        if not self._running:        # every admission completed at token 0
+            return len(self.scheduler) > 0
+        self._decode_step(ctx)
+        return True
+
+    def run(self) -> List[Request]:
+        """Drain the engine; returns every finished request (in
+        completion order)."""
+        while self.step():
+            pass
+        return self.finished
+
+    # ------------------------------------------------------------ internals
+    def _admit(self, req: Request, slot: int, ctx) -> None:
+        logits, caches = _prefill_fn(self.cfg, self.serve.max_len, ctx)(
+            self.params, jnp.asarray(req.prompt)[None, :], None)
+        self.slab = _insert_fn(self.cfg, ctx)(self.slab, caches, slot)
+        tok0 = int(_sample_row(logits[0, -1], req.key,
+                               jnp.float32(req.temperature)))
+        req.state = RUNNING
+        req.slot = slot
+        req.t_admit = req.t_first = self.now
+        req.tokens.append(tok0)
+        self._running[slot] = req
+        self._row_keys[slot] = req.key
+        self._tok[slot] = tok0
+        self._steps[slot] = 1
+        self._temps[slot] = float(req.temperature)
+        if len(req.tokens) >= req.max_new:
+            self._finish(slot)
+
+    def _decode_step(self, ctx) -> None:
+        slab, nxt, new_keys = _serve_step_fn(self.cfg, ctx)(
+            self.params, self.slab, jnp.asarray(self._tok)[:, None],
+            jnp.stack(self._row_keys), jnp.asarray(self._steps),
+            jnp.asarray(self._temps))
+        self.slab = slab
+        lat = self.coded.draw_step() if self.coded is not None else 1.0
+        self.now += lat
+        self.step_latencies.append(lat)
+        nxt_host = np.asarray(nxt)
+        for slot in sorted(self._running):
+            req = self._running[slot]
+            req.tokens.append(int(nxt_host[slot]))
+            req.n_steps += 1
+            self._tok[slot] = nxt_host[slot]
+            self._row_keys[slot] = new_keys[slot]
+            self._steps[slot] += 1
+            if len(req.tokens) >= req.max_new:
+                self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        req = self._running.pop(slot)
+        req.state = DONE
+        req.t_done = self.now
+        req.slot = None
+        self.scheduler.release(slot)
+        self._temps[slot] = 0.0
+        self.finished.append(req)
+
+
+# ---------------------------------------------------------------- generate
 def generate(cfg, params, prompt_tokens, max_new: int = 32, *,
              temperature: float = 0.0, key=None, aux_inputs=None):
-    """prompt_tokens: (B, S) -> (B, S + max_new) greedy/temperature output."""
+    """prompt_tokens: (B, S) -> (B, S + max_new) greedy/temperature output.
+
+    Deprecated shim over ``ServeEngine``: each prompt row becomes one
+    request with its own sampling key (row 0 keeps the caller's key, so
+    B=1 output is bit-identical to the historical single-stream loop;
+    rows r > 0 use fold_in(key, 2**30 + r) so identical rows no longer
+    share one stream).  ``aux_inputs`` is not supported by the engine
+    and falls back to the direct decode loop with the same per-row
+    sampling.
+    """
     if max_new <= 0:
         return prompt_tokens
     key = jax.random.PRNGKey(0) if key is None else key
+    if aux_inputs is not None:
+        return _generate_direct(cfg, params, prompt_tokens, max_new,
+                                temperature, key, aux_inputs)
+    _warn_once("generate",
+               "repro.serve.engine.generate is deprecated; use "
+               "repro.serve.ServeEngine (submit + run) — the continuous-"
+               "batching engine behind this shim")
+    b, s = prompt_tokens.shape
+    eng = ServeEngine(cfg, params, ServeConfig(n_slots=b, max_len=s + max_new))
+    prompts = np.asarray(prompt_tokens)
+    reqs = [eng.submit(prompts[r], max_new=max_new, temperature=temperature,
+                       key=_row_key(key, r)) for r in range(b)]
+    eng.run()
+    return jnp.asarray(np.stack([r.output for r in reqs]), jnp.int32)
+
+
+def _generate_direct(cfg, params, prompt_tokens, max_new, temperature, key,
+                     aux_inputs):
+    """The pre-engine decode loop (kept for ``aux_inputs``), with the
+    per-row key split applied so batched sampling is per-request."""
     b, s = prompt_tokens.shape
     ctx = _sharding_ctx_key()
     logits, caches = _prefill_fn(cfg, s + max_new, ctx)(params, prompt_tokens,
                                                         aux_inputs)
     step = _decode_fn(cfg, ctx)
-    tok = _sample(logits[:, -1], key, temperature)[:, None].astype(jnp.int32)
+    keys = jnp.stack([_canonical_key(_row_key(key, r)) for r in range(b)])
+    temps = jnp.full((b,), temperature, jnp.float32)
+
+    def sample(lg, ks):
+        return jax.vmap(_sample_row)(lg[:, -1], ks,
+                                     temps)[:, None].astype(jnp.int32)
+
+    tok = sample(logits, keys)
     out = [tok]
     for i in range(max_new - 1):
-        key = jax.random.fold_in(key, i)
+        keys = jax.vmap(jax.random.fold_in)(keys, jnp.full((b,), i))
         logits, caches = step(params, caches, tok, aux_inputs)
-        tok = _sample(logits[:, -1], key, temperature)[:, None].astype(jnp.int32)
-        out.append(tok)
+        out.append(sample(logits, keys))
+        tok = out[-1]
     return jnp.concatenate([prompt_tokens] + out, axis=1)

@@ -1,0 +1,72 @@
+"""Shared batched KV-cache slab for continuous batching.
+
+One cache pytree of batch ``n_slots`` holds every live request: slot b
+is row b of every cache leaf, and — because the decode path accepts
+per-row positions (``pos`` leaves of shape (B,), see
+``models/attention.py``) — each slot decodes at its own depth.  A
+prefill runs per admitted request at batch 1 and its cache row is
+scattered into the slab at the assigned slot; eviction is purely
+logical (the scheduler frees the slot; the stale row is overwritten by
+the next insertion, and its validity never leaks because attention
+masks per-row on the slot's own ``pos``).
+
+Leaf layout (from ``init_stack_caches``): a list of per-segment trees —
+plain dicts for single layers, leaves stacked over a leading layer axis
+for scanned runs, a list of stacked trees for pattern segments.  The
+batch axis is axis 0 for plain leaves and axis 1 for stacked ones;
+``pos`` leaves carry one fewer axis on the prefill side (scalar per
+layer) than on the slab side (one entry per slot), which is how
+``_insert_tree`` tells them apart.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import init_decode_caches
+from repro.models.stack import Run, plan_segments
+
+__all__ = ["make_slab", "insert_request"]
+
+
+def make_slab(cfg, n_slots: int, max_len: int, dtype=jnp.bfloat16):
+    """Empty shared cache slab: capacity ``max_len`` per slot, per-row
+    ``pos`` leaves initialized to 0."""
+    return init_decode_caches(cfg, n_slots, max_len, dtype=dtype, filled=0,
+                              row_pos=True)
+
+
+def _insert_tree(slab_tree, pref_tree, slot, stacked: bool):
+    def upd(s_leaf, p_leaf):
+        axis = 1 if stacked else 0
+        if p_leaf.ndim == s_leaf.ndim:
+            row = jax.lax.index_in_dim(p_leaf, 0, axis, keepdims=False)
+        else:  # pos: prefill scalar / (layers,) vs slab (B,) / (layers, B)
+            row = p_leaf
+        row = row.astype(s_leaf.dtype)
+        if axis == 0:
+            return s_leaf.at[slot].set(row)
+        return s_leaf.at[:, slot].set(row)
+
+    return jax.tree.map(upd, slab_tree, pref_tree)
+
+
+def insert_request(cfg, slab, pref_caches, slot):
+    """Scatter a batch-1 prefill's cache rows into slab row ``slot``.
+
+    Pure function of (slab, pref_caches, slot) — jit it with ``slot`` as
+    a traced argument so admissions don't retrace.
+    """
+    segs = plan_segments(cfg.layers)
+    out = []
+    for seg, s_seg, p_seg in zip(segs, slab, pref_caches):
+        if s_seg is None:
+            out.append(None)
+        elif isinstance(seg, Run):
+            out.append(_insert_tree(s_seg, p_seg, slot, stacked=seg.count > 1))
+        else:  # pattern segment: list of stacked trees
+            out.append([
+                None if s_j is None else _insert_tree(s_j, p_j, slot, True)
+                for s_j, p_j in zip(s_seg, p_seg)
+            ])
+    return out

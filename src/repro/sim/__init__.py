@@ -11,6 +11,7 @@ The event engine and trace/fault tooling are pure numpy; the ``mc``
 module (and only it) imports jax lazily, so ``import repro.sim`` stays
 cheap for solver-only users.
 """
+from .arrivals import poisson_arrivals, trace_arrivals
 from .cluster import (
     Block,
     ClusterConfig,
@@ -37,10 +38,12 @@ __all__ = [
     "draw_times",
     "heterogeneous",
     "mc",
+    "poisson_arrivals",
     "schedule_from_plan",
     "schedule_from_x",
     "simulate_plan",
     "simulate_x",
+    "trace_arrivals",
 ]
 
 

@@ -1,0 +1,191 @@
+"""Coded decode tier (ISSUE 6): solver, event-order exactness, closed forms.
+
+The serving tier's step latency L(R, s) = (s+1)/R * c * T_(R-s:R) is
+the paper's block-decode event applied to one inference step.  These
+tests pin the three contracts that make it trustworthy:
+
+* ``step_latency`` realizes *exactly* the event order of a one-block
+  ``ClusterSim`` schedule at level s over R workers (same times, same
+  completion instant);
+* the measured p99 of a long seeded stream agrees with
+  ``Env.order_stat_quantile`` — the Poisson-binomial tail DP — and with
+  the ShiftedExponential analytic quantiles where those exist;
+* the (R, s) solver is exact for its tiny enumeration space.
+"""
+import numpy as np
+import pytest
+
+from repro.core.distributions import ShiftedExponential, UniformStraggler
+from repro.core.env import Env
+from repro.core.runtime import CostModel
+from repro.serve.coded import CodedDecode, ReplicationPlan, solve_replication
+from repro.sim.cluster import Block, ClusterConfig, ClusterSim
+
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+
+
+def _env(n=8):
+    return Env.iid(DIST, n)
+
+
+# ----------------------------------------------------------------- solver
+def test_budget_one_is_the_uncoded_baseline():
+    plan = solve_replication(_env(), budget=1, objective="p99")
+    assert (plan.r, plan.s) == (1, 0)
+    assert plan.work_factor == 1.0 and plan.need == 1
+
+
+def test_solver_beats_uncoded_p99_on_heavy_tail():
+    env = _env()
+    plan = solve_replication(env, budget=4, objective="p99")
+    base = solve_replication(env, budget=1, objective="p99")
+    assert plan.r > 1
+    assert plan.p99_step < base.p99_step / 2, (
+        "replication must cut the exponential tail's p99 substantially")
+
+
+def test_solver_is_exact_over_its_enumeration():
+    env = _env(6)
+    best = solve_replication(env, budget=4, objective="mean")
+    # brute-force the same space independently
+    scores = {}
+    for r in range(1, 5):
+        sub = env.subset(range(r))
+        stats = sub.expected_order_stats()
+        for s in range(r):
+            scores[(r, s)] = (s + 1) / r * float(stats[r - s - 1])
+    assert (best.r, best.s) == min(scores, key=scores.get)
+    assert best.expected_step == pytest.approx(min(scores.values()))
+
+
+def test_solver_validation():
+    env = _env(4)
+    with pytest.raises(ValueError):
+        solve_replication(env, budget=5)
+    with pytest.raises(ValueError):
+        solve_replication(env, budget=0)
+    with pytest.raises(ValueError):
+        solve_replication(env, objective="fastest")
+
+
+def test_plan_roundtrip_and_validation():
+    plan = solve_replication(_env(), budget=3, objective="p99")
+    again = ReplicationPlan.from_dict(plan.to_dict())
+    assert again == plan
+    with pytest.raises(ValueError):
+        ReplicationPlan(r=2, s=2, workers=(0, 1), objective="p99",
+                        expected_step=1.0, p99_step=1.0)
+    with pytest.raises(ValueError):
+        ReplicationPlan(r=2, s=0, workers=(0,), objective="p99",
+                        expected_step=1.0, p99_step=1.0)
+
+
+def test_coded_decode_roundtrip():
+    tier = CodedDecode.solve(_env(), budget=4, work=3.0, seed=5)
+    again = CodedDecode.from_dict(tier.to_dict())
+    assert again.plan == tier.plan and again.work == tier.work
+    np.testing.assert_allclose(again.step_latencies(64, seed=3),
+                               tier.step_latencies(64, seed=3))
+
+
+# ----------------------------------- first-(R-s) exactness vs the event engine
+@pytest.mark.parametrize("r,s", [(1, 0), (2, 0), (4, 0), (4, 2), (4, 3),
+                                 (6, 2), (6, 5)])
+def test_step_latency_matches_cluster_sim_event_order(r, s):
+    """A coded decode step *is* a one-block schedule at level s over R
+    workers: per-worker work (s+1)*c under CostModel scale 1/R, decoded
+    at the (R-s)-th delivery.  The tier's arithmetic must match the
+    discrete-event makespan exactly for the same drawn times."""
+    rng = np.random.default_rng(100 * r + s)
+    c = 2.5
+    plan = ReplicationPlan(r=r, s=s, workers=tuple(range(r)),
+                           objective="p99", expected_step=0.0, p99_step=0.0)
+    tier = CodedDecode(_env(r), plan, work=c)
+    for _ in range(5):
+        times = DIST.sample(rng, (r,))
+        sim = ClusterSim((Block(index=0, level=s, work=(s + 1) * c),),
+                         times[None, :], r,
+                         cost=CostModel(m_samples=1, b_cycles=1.0),
+                         config=ClusterConfig(wave=False))
+        res = sim.run(rounds=1, times=times[None, :])
+        assert tier.step_latency(times) == pytest.approx(
+            float(res.makespan), rel=1e-12)
+
+
+def test_step_latency_validates_shape():
+    tier = CodedDecode.solve(_env(), budget=3)
+    with pytest.raises(ValueError):
+        tier.step_latency(np.ones(tier.plan.r + 1))
+
+
+# ----------------------------------------------- seeded streams + closed forms
+def test_seeded_stream_replays_exactly():
+    env = _env()
+    a = CodedDecode.solve(env, budget=4, seed=9)
+    b = CodedDecode.solve(env, budget=4, seed=9)
+    np.testing.assert_array_equal(a.step_latencies(100), b.step_latencies(100))
+    # the instance stream advances: successive draws differ
+    assert a.draw_step() != a.draw_step()
+
+
+def test_measured_p99_matches_order_stat_closed_form():
+    """The acceptance-criteria agreement check: p99 of a seeded latency
+    stream vs the Env order-statistics prediction."""
+    tier = CodedDecode.solve(_env(), budget=4, objective="p99", seed=0)
+    lat = tier.step_latencies(50_000, seed=13)
+    measured = float(np.quantile(lat, 0.99))
+    predicted = tier.predicted_quantile(0.99)
+    assert abs(measured - predicted) / predicted < 0.05
+    # mean agrees too (much lower MC noise)
+    assert float(lat.mean()) == pytest.approx(tier.predicted_mean(), rel=0.02)
+
+
+def test_order_stat_quantile_analytic_shifted_exponential():
+    """Env.order_stat_quantile vs the ShiftedExponential analytic
+    quantiles: min of N iid is t0 + Exp(N mu); max of N iid inverts
+    F(t)^N = q."""
+    n, q = 4, 0.99
+    env = _env(n)
+    t_min = env.order_stat_quantile(1, q)
+    expect_min = 50.0 - np.log(1 - q) / (n * 1e-3)
+    assert t_min == pytest.approx(expect_min, rel=1e-4)
+    t_max = env.order_stat_quantile(n, q)
+    expect_max = 50.0 - np.log(1.0 - q ** (1.0 / n)) / 1e-3
+    assert t_max == pytest.approx(expect_max, rel=1e-4)
+
+
+def test_env_subset_reindexes_population():
+    dists = [ShiftedExponential(mu=1e-3, t0=float(t0))
+             for t0 in (10.0, 20.0, 30.0, 40.0)]
+    env = Env.heterogeneous(dists)
+    sub = env.subset([2, 0])
+    assert sub.n_workers == 2
+    assert sub.dists == (dists[2], dists[0])
+    with pytest.raises(ValueError):
+        env.subset([])
+    with pytest.raises(ValueError):
+        env.subset([4])
+
+
+def test_uncoded_tier_prices_the_single_worker():
+    tier = CodedDecode.uncoded(_env(), work=2.0)
+    assert (tier.plan.r, tier.plan.s) == (1, 0)
+    assert tier.predicted_mean() == pytest.approx(2.0 * (50.0 + 1e3), rel=1e-6)
+
+
+def test_solver_picks_fastest_workers_in_heterogeneous_env():
+    dists = [ShiftedExponential(mu=1e-3, t0=float(t0))
+             for t0 in (400.0, 10.0, 300.0, 20.0, 500.0, 30.0)]
+    env = Env.heterogeneous(dists)
+    plan = solve_replication(env, budget=3, objective="mean")
+    assert set(plan.workers) <= {1, 3, 5}, (
+        "the replica group must be drawn from the fastest workers")
+
+
+def test_bounded_support_env_prefers_low_redundancy():
+    """With a light-tailed (uniform) population, heavy replication has
+    little to buy at the mean; the solver must not pay (s+1) work
+    multipliers it cannot recoup."""
+    env = Env.iid(UniformStraggler(lo=90.0, hi=110.0), 8)
+    plan = solve_replication(env, budget=4, objective="mean")
+    assert plan.expected_step <= 110.0  # never worse than one worker's worst

@@ -1,0 +1,290 @@
+"""Continuous-batching serving engine (ISSUE 6 tentpole).
+
+Pins the subsystem's contracts:
+
+* scheduler invariants — strict priority classes, FIFO within a class,
+  lowest-free-slot reuse, deferred future arrivals, no starvation on a
+  finite stream;
+* per-request determinism — a request's token stream is a pure function
+  of (prompt, key, params), independent of batch composition, slab
+  slot, and admission order; a lone request reproduces the legacy
+  single-stream ``generate`` loop bit-for-bit (greedy and sampled);
+* the batched-``generate`` sampling fix — rows get distinct per-row key
+  streams (row 0 keeps the caller's key);
+* the simulated clock — engine step latencies are exactly the coded
+  tier's seeded stream.
+"""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.distributions import ShiftedExponential
+from repro.core.env import Env
+from repro.models.model import init_model
+from repro.serve import engine as serve_engine
+from repro.serve.coded import CodedDecode
+from repro.serve.engine import ServeConfig, ServeEngine, _sample, generate
+from repro.serve.request import DONE, QUEUED, Request
+from repro.serve.scheduler import Scheduler
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = get_config("gemma-2b").reduced()
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _req(arrival=0.0, priority=0, max_new=4):
+    return Request(prompt=np.arange(1, 5), max_new=max_new,
+                   priority=priority, arrival=arrival)
+
+
+def _quiet_generate(*args, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return generate(*args, **kw)
+
+
+# -------------------------------------------------------------- scheduler
+def test_scheduler_fifo_within_priority():
+    sched = Scheduler(n_slots=2)
+    reqs = [_req() for _ in range(4)]
+    for r in reqs:
+        sched.enqueue(r)
+    first = sched.admit(now=0.0)
+    assert [r.uid for r, _ in first] == [reqs[0].uid, reqs[1].uid]
+    assert [slot for _, slot in first] == [0, 1]
+    assert len(sched) == 2 and sched.free_slots == 0
+
+
+def test_scheduler_strict_priority_classes():
+    sched = Scheduler(n_slots=1)
+    low, high = _req(priority=5), _req(priority=1)
+    sched.enqueue(low)
+    sched.enqueue(high)
+    (req, slot), = sched.admit(now=0.0)
+    assert req is high
+
+
+def test_scheduler_lowest_free_slot_reused_first():
+    sched = Scheduler(n_slots=3)
+    for _ in range(3):
+        sched.enqueue(_req())
+    admitted = sched.admit(0.0)
+    assert [s for _, s in admitted] == [0, 1, 2]
+    sched.release(1)
+    sched.enqueue(_req())
+    (_, slot), = sched.admit(0.0)
+    assert slot == 1
+    sched.release(0)
+    with pytest.raises(ValueError):
+        sched.release(0)            # double free
+    with pytest.raises(ValueError):
+        sched.release(3)            # out of range
+
+
+def test_scheduler_defers_future_arrivals_without_losing_position():
+    sched = Scheduler(n_slots=2)
+    future = _req(arrival=100.0)
+    now1, now2 = _req(arrival=0.0), _req(arrival=0.0)
+    sched.enqueue(future)
+    sched.enqueue(now1)
+    sched.enqueue(now2)
+    admitted = sched.admit(now=0.0)
+    assert [r.uid for r, _ in admitted] == [now1.uid, now2.uid]
+    assert sched.next_arrival(now=0.0) == 100.0
+    sched.release(0)
+    (req, slot), = sched.admit(now=100.0)
+    assert req is future and slot == 0
+    assert sched.next_arrival(now=100.0) is None and len(sched) == 0
+
+
+def test_scheduler_finite_stream_never_starves():
+    """Every request of a finite stream is admitted once slots recycle,
+    even with a steady stream of higher-priority work already queued."""
+    sched = Scheduler(n_slots=1)
+    low = _req(priority=9)
+    sched.enqueue(low)
+    for _ in range(5):
+        sched.enqueue(_req(priority=0))
+    served = []
+    while len(sched):
+        (req, slot), = sched.admit(0.0)
+        served.append(req.uid)
+        sched.release(slot)
+    assert served[-1] == low.uid and len(served) == 6
+
+
+def test_request_validation():
+    with pytest.raises(ValueError):
+        Request(prompt=np.array([], np.int32), max_new=4)
+    with pytest.raises(ValueError):
+        Request(prompt=np.arange(3), max_new=0)
+    sched = Scheduler(2)
+    req = _req()
+    req.state = DONE
+    with pytest.raises(ValueError):
+        sched.enqueue(req)
+
+
+# ------------------------------------------------------------- determinism
+def _legacy_generate(cfg, params, prompt_tokens, max_new, temperature, key):
+    """The historical pre-engine decode loop (shared key across the
+    batch) — the bit-identity reference for B=1."""
+    from repro.serve.engine import _decode_fn, _prefill_fn, _sharding_ctx_key
+
+    b, s = prompt_tokens.shape
+    ctx = _sharding_ctx_key()
+    logits, caches = _prefill_fn(cfg, s + max_new, ctx)(params, prompt_tokens,
+                                                        None)
+    step = _decode_fn(cfg, ctx)
+    tok = _sample(logits[:, -1], key, temperature)[:, None].astype("int32")
+    out = [tok]
+    for i in range(max_new - 1):
+        key = jax.random.fold_in(key, i)
+        logits, caches = step(params, caches, tok, None)
+        tok = _sample(logits[:, -1], key, temperature)[:, None].astype("int32")
+        out.append(tok)
+    import jax.numpy as jnp
+
+    return jnp.concatenate([prompt_tokens] + out, axis=1)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_b1_stream_bit_identical_to_legacy_loop(tiny_model, temperature):
+    cfg, params = tiny_model
+    key = jax.random.PRNGKey(42)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    ref = np.asarray(_legacy_generate(cfg, params, tokens, 5, temperature, key))
+    new = np.asarray(_quiet_generate(cfg, params, tokens, 5,
+                                     temperature=temperature, key=key))
+    np.testing.assert_array_equal(ref, new)
+
+
+def test_stream_independent_of_batch_composition(tiny_model):
+    """The per-request determinism contract: served alongside arbitrary
+    other requests (admissions, evictions, slot reuse — 4 requests over
+    2 slots), a request's tokens equal its solo B=1 run bit-for-bit."""
+    cfg, params = tiny_model
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=n) for n in (6, 4, 6, 5)]
+    keys = [jax.random.PRNGKey(100 + i) for i in range(4)]
+    news = [5, 3, 4, 5]
+
+    eng = ServeEngine(cfg, params, ServeConfig(n_slots=2, max_len=16))
+    reqs = [eng.submit(p, max_new=n, temperature=0.7, key=k)
+            for p, n, k in zip(prompts, news, keys)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    for p, n, k, r in zip(prompts, news, keys, reqs):
+        solo = np.asarray(_quiet_generate(
+            cfg, params, np.asarray(p)[None, :], n, temperature=0.7, key=k))
+        np.testing.assert_array_equal(r.output, solo[0], err_msg=(
+            "a request's stream must not depend on batch composition"))
+
+
+def test_generate_batch_rows_have_distinct_streams(tiny_model):
+    """The batched-sampling regression (ISSUE 6 satellite): all rows
+    used to share one fold-in key stream; now row r>0 gets its own."""
+    cfg, params = tiny_model
+    key = jax.random.PRNGKey(7)
+    row = jax.random.randint(jax.random.PRNGKey(2), (1, 6), 0, cfg.vocab)
+    both = np.concatenate([row, row], axis=0)
+    out = np.asarray(_quiet_generate(cfg, params, both, 6, temperature=0.9,
+                                     key=key))
+    assert not np.array_equal(out[0], out[1]), (
+        "identical prompts in one batch must sample distinct streams")
+    solo = np.asarray(_quiet_generate(cfg, params, row, 6, temperature=0.9,
+                                      key=key))
+    np.testing.assert_array_equal(out[0], solo[0])  # row 0 keeps the key
+
+
+def test_generate_deprecation_warns_once(tiny_model):
+    cfg, params = tiny_model
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (1, 5), 0, cfg.vocab)
+    serve_engine._reset_deprecation_warnings()
+    with pytest.warns(DeprecationWarning, match="ServeEngine"):
+        generate(cfg, params, tokens, 2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        generate(cfg, params, tokens, 2)    # second call: silent
+
+
+# ------------------------------------------------------- engine mechanics
+def test_slot_recycling_under_load(tiny_model):
+    cfg, params = tiny_model
+    eng = ServeEngine(cfg, params, ServeConfig(n_slots=2, max_len=12))
+    reqs = [eng.submit(np.arange(1, 7), max_new=3,
+                       key=jax.random.PRNGKey(i)) for i in range(5)]
+    done = eng.run()
+    assert len(done) == 5
+    assert all(r.done and len(r.tokens) == 3 for r in reqs)
+    assert all(r.slot is None for r in reqs)
+    assert eng.scheduler.free_slots == 2 and eng.n_running == 0
+    # FIFO completion for identical-shape requests over 2 slots
+    assert [r.uid for r in done] == sorted(r.uid for r in reqs)
+
+
+def test_engine_clock_is_the_coded_tier_stream(tiny_model):
+    """Step latencies recorded by the engine are exactly the tier's
+    seeded rng stream — the property the bench's closed-form p99
+    comparison rests on."""
+    cfg, params = tiny_model
+    env = Env.iid(ShiftedExponential(mu=1e-3, t0=50.0), 6)
+    tier = CodedDecode.solve(env, budget=3, objective="p99", seed=21)
+    eng = ServeEngine(cfg, params, ServeConfig(n_slots=2, max_len=10),
+                      coded=tier)
+    for i in range(3):
+        eng.submit(np.arange(1, 6), max_new=4, key=jax.random.PRNGKey(i))
+    eng.run()
+    replay = CodedDecode(env, tier.plan, seed=21)
+    expect = replay.step_latencies(len(eng.step_latencies))
+    np.testing.assert_allclose(np.asarray(eng.step_latencies), expect)
+    assert eng.now >= float(expect.sum()) - 1e-9
+
+
+def test_arrivals_respected_and_queue_delay_measured(tiny_model):
+    cfg, params = tiny_model
+    eng = ServeEngine(cfg, params, ServeConfig(n_slots=1, max_len=10))
+    early = eng.submit(np.arange(1, 5), max_new=3, arrival=0.0,
+                       key=jax.random.PRNGKey(0))
+    late = eng.submit(np.arange(1, 5), max_new=3, arrival=50.0,
+                      key=jax.random.PRNGKey(1))
+    eng.run()
+    assert early.t_admit == 0.0 and early.queue_delay == 0.0
+    assert late.t_admit >= 50.0 and late.queue_delay >= 0.0
+    assert late.t_done >= late.t_first >= late.t_admit
+
+
+def test_max_new_one_completes_at_admission(tiny_model):
+    cfg, params = tiny_model
+    eng = ServeEngine(cfg, params, ServeConfig(n_slots=1, max_len=8))
+    req = eng.submit(np.arange(1, 5), max_new=1, key=jax.random.PRNGKey(3))
+    eng.run()
+    assert req.done and len(req.tokens) == 1
+    assert req.n_steps == 0 and eng.step_latencies == []
+
+
+def test_submit_validates_slab_capacity(tiny_model):
+    cfg, params = tiny_model
+    eng = ServeEngine(cfg, params, ServeConfig(n_slots=1, max_len=8))
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(np.arange(1, 8), max_new=4)
+    with pytest.raises(ValueError):
+        ServeConfig(n_slots=0, max_len=8)
+
+
+def test_insert_does_not_retrace_across_slots(tiny_model):
+    """Admissions into different slots (and evict/readmit cycles) share
+    one slab-insert compilation — slot is a traced argument."""
+    cfg, params = tiny_model
+    serve_engine.clear_jit_cache()
+    eng = ServeEngine(cfg, params, ServeConfig(n_slots=3, max_len=10))
+    for i in range(6):
+        eng.submit(np.arange(1, 6), max_new=3, key=jax.random.PRNGKey(i))
+    eng.run()
+    assert serve_engine.trace_counts().get("insert") == 1
