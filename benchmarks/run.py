@@ -35,11 +35,11 @@ def main(argv=None) -> None:
 
     from . import adaptive_env, coded_step, fig3_partitions, fig4a_runtime_vs_n
     from . import fig4b_runtime_vs_mu, heterogeneous_env, kernel_bench
-    from . import roofline, serve_load, sim_cluster
+    from . import roofline, serve_load, sim_cluster, wave_step
 
     known = {"fig3_partitions", "fig4a_runtime_vs_n", "fig4b_runtime_vs_mu",
              "kernel_bench", "coded_step", "roofline", "sim_cluster",
-             "heterogeneous_env", "adaptive_env", "serve_load"}
+             "heterogeneous_env", "adaptive_env", "serve_load", "wave_step"}
     rows = []
     sections: dict = {}
     only = {s.strip() for s in args.only.split(",") if s.strip()}
@@ -72,6 +72,7 @@ def main(argv=None) -> None:
     section("heterogeneous_env", heterogeneous_env.main, smoke=smoke)  # Env payoff
     section("adaptive_env", adaptive_env.main, smoke=smoke)  # re-planning payoff
     section("serve_load", serve_load.main, smoke=smoke)      # coded decode p99 gate
+    section("wave_step", wave_step.main, smoke=smoke)        # async-vs-barrier gate
 
     print("\nname,metric,value,status")
     for r in rows:

@@ -1,0 +1,159 @@
+"""Wave-pipelined vs barrier step time — the async loop's headline gate.
+
+Prices the wave schedule (``repro.train.wave`` semantics, executed by
+the event simulator) against the barrier loop on identical straggler
+draws, at gc-lm-110m scale: the plan is solved for a heterogeneous
+fleet (6 current-generation workers + 2 previous-generation at 2.5x),
+and the master pays a serialized per-round decode + optimizer-update
+cost plus broadcast/delivery latency — the terms the barrier serializes
+between every round pair and the wave overlaps with next-round compute
+(docs/ASYNC.md).
+
+Master-side costs are expressed as fractions of the plan's mean
+barrier round (measured on the same draws): ``UPDATE_FRAC`` for the
+update, ``LATENCY_FRAC`` split evenly between broadcast and delivery.
+
+The non-smoke run (200 rounds) ASSERTS wave(staleness=1) completes
+rounds >= MIN_SPEEDUP_FULL x faster than the barrier and writes the
+committed ``BENCH_async.json``; ``--smoke`` (CI) runs 60 rounds and
+gates at SMOKE_MIN (the shorter horizon amortizes the pipeline-fill
+transient less).  A staleness sweep rides along: k=0 must price within
+float noise of the barrier (the bit-equivalence contract, here as
+runtime), and k=2 must never lose to k=1.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+
+import numpy as np
+
+#: full gate: wave k=1 must beat the barrier by at least this factor
+MIN_SPEEDUP_FULL = 1.2
+#: smoke gate (60 rounds: fill transient included)
+SMOKE_MIN = 1.15
+#: master-side serialized update cost, as a fraction of the mean round
+UPDATE_FRAC = 0.25
+#: broadcast + delivery latency budget, as a fraction of the mean round
+LATENCY_FRAC = 0.05
+
+JSON_DEFAULT = "BENCH_async.json"
+
+
+def _fleet(n_fast: int = 6, n_slow: int = 2, slow_factor: float = 2.5):
+    from repro.core import Env
+    from repro.core.distributions import ScaledStraggler, ShiftedExponential
+
+    fast = ShiftedExponential(mu=1e-3, t0=50.0)
+    slow = ScaledStraggler(base=fast, factor=slow_factor)
+    return Env.coerce([fast] * n_fast + [slow] * n_slow, n_fast + n_slow)
+
+
+def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
+        json_path: str = JSON_DEFAULT) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import Plan
+    from repro.sim import ClusterSim, schedule_from_plan_levels
+    from repro.train.state import init_train_state
+
+    cfg = get_config("gc-lm-110m")
+    shape_tree = jax.eval_shape(
+        lambda: init_train_state(cfg, jax.random.PRNGKey(0))[0].params)
+    env = _fleet()
+    n = env.n_workers
+    plan = Plan.build(shape_tree, env, scheme="xt", rng=seed)
+    sched = schedule_from_plan_levels(plan)
+
+    rounds = 60 if smoke else 200
+    rng = np.random.default_rng(seed)
+    times = env.sample(rng, (rounds, n))
+
+    # master-side costs in simulated time: fractions of the mean barrier
+    # round on these exact draws (so the regime is scale-free)
+    mean_round = float(np.mean([plan.tau(row) for row in times]))
+    upd = UPDATE_FRAC * mean_round
+    lat = 0.5 * LATENCY_FRAC * mean_round   # broadcast; same again delivery
+
+    def period(wave: bool, k: int = 1) -> tuple[float, dict]:
+        res = ClusterSim(sched, None, n, wave=wave,
+                         staleness=k if wave else None, update_cost=upd,
+                         broadcast_latency=lat, comm_delay=lat).run(
+                             rounds=rounds, times=times)
+        total = float(res.round_done[-1] + upd)   # include the last update
+        extra = {}
+        if wave:
+            rs = res.wave_trace().realized_staleness()
+            extra = {"staleness_mean": float(rs.mean()),
+                     "staleness_max": int(rs.max())}
+        return total / rounds, extra
+
+    bar, _ = period(wave=False)
+    out = {
+        "bench": "wave_step",
+        "smoke": bool(smoke),
+        "config": cfg.name,
+        "n_workers": n,
+        "fleet": "6x fast + 2x 2.5-slow (ShiftedExponential mu=1e-3 t0=50)",
+        "scheme": plan.scheme,
+        "rounds": rounds,
+        "update_frac": UPDATE_FRAC,
+        "latency_frac": LATENCY_FRAC,
+        "mean_round_compute": mean_round,
+        "barrier_step_time": bar,
+        "host": {"platform": platform.platform(),
+                 "cpu_count": os.cpu_count()},
+    }
+    for k in (0, 1, 2):
+        per, extra = period(wave=True, k=k)
+        out[f"wave_k{k}"] = {"step_time": per,
+                             "speedup_vs_barrier": bar / per, **extra}
+        if verbose:
+            print(f"wave k={k}: {per:12.4g} /round   "
+                  f"{bar / per:5.3f}x barrier   "
+                  f"staleness mean {extra['staleness_mean']:.2f}")
+    out["speedup"] = out["wave_k1"]["speedup_vs_barrier"]
+    if verbose:
+        print(f"barrier : {bar:12.4g} /round")
+        print(f"headline: wave k=1 {out['speedup']:.3f}x barrier "
+              f"({rounds} rounds, U={UPDATE_FRAC}, L+C={LATENCY_FRAC})")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        if verbose:
+            print(f"wrote {json_path}")
+    # staleness-0 wave IS the barrier (runtime face of bit-equivalence)
+    k0 = out["wave_k0"]["speedup_vs_barrier"]
+    assert abs(k0 - 1.0) < 1e-9, f"wave k=0 priced {k0}x barrier"
+    assert out["wave_k0"]["staleness_max"] == 0
+    # more slack never hurts
+    assert (out["wave_k2"]["speedup_vs_barrier"]
+            >= out["wave_k1"]["speedup_vs_barrier"] - 1e-9)
+    gate = SMOKE_MIN if smoke else MIN_SPEEDUP_FULL
+    assert out["speedup"] >= gate, (
+        f"PERF REGRESSION: wave k=1 speedup {out['speedup']:.3f}x < "
+        f"{gate}x over {rounds} rounds at {cfg.name} scale")
+    return out
+
+
+def main(smoke: bool = False, json_path: str = None) -> dict:
+    """Smoke runs skip the default JSON file so CI never clobbers the
+    committed full-scale ``BENCH_async.json`` (the runner's ``--json``
+    captures the smoke rows instead)."""
+    if json_path is None:
+        json_path = "" if smoke else JSON_DEFAULT
+    out = run(smoke=smoke, json_path=json_path)
+    print("wave_step: OK")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json)

@@ -24,15 +24,34 @@ if git ls-files '*.pyc' | grep -q .; then
   exit 1
 fi
 echo "no tracked .pyc files"
+# committed perf rows live in BENCH_*.json only; per-run dumps
+# (bench_smoke.json, scratch bench output) belong in .gitignore, not
+# the tree — a tracked one silently goes stale and reads as current.
+stray="$(git ls-files '*.json' | grep -Ei '(bench|smoke)' | grep -Ev '^BENCH_[A-Za-z0-9_]+\.json$' || true)"
+if [[ -n "$stray" ]]; then
+  echo "check.sh: tracked bench/smoke artifacts outside BENCH_*.json (git rm --cached them):" >&2
+  echo "$stray" >&2
+  exit 1
+fi
+echo "no stray tracked bench artifacts"
+# the committed async headline must stay at or above the gate the
+# benchmark enforces (benchmarks/wave_step.py MIN_SPEEDUP_FULL) — a
+# regenerated BENCH_async.json below it should fail here, not ship.
+python - <<'EOF'
+import json
+speedup = json.load(open("BENCH_async.json"))["speedup"]
+assert speedup >= 1.2, f"BENCH_async.json headline {speedup:.3f}x < 1.2x"
+print(f"BENCH_async.json headline {speedup:.3f}x >= 1.2x")
+EOF
 
-# tier-1 passed-count baseline as of PR 6 (PR 5: 280; PR 4: 255; PR 3:
-# 237; PR 2: 208; PR 1: 143; seed: 36).  Bump this when a PR adds
-# tests — it is what catches silently lost/uncollected files, not just
-# failures.
-BASELINE=318
+# tier-1 passed-count baseline as of PR 7 (PR 6: 318; PR 5: 280; PR 4:
+# 255; PR 3: 237; PR 2: 208; PR 1: 143; seed: 36).  Bump this when a
+# PR adds tests — it is what catches silently lost/uncollected files,
+# not just failures.
+BASELINE=352
 # tests carrying @pytest.mark.spmd (registered in pytest.ini): the
 # multi-device subprocess tests the fast lane deselects.
-SPMD_COUNT=7
+SPMD_COUNT=8
 
 PYTEST_ARGS=(-x -q --durations=10)
 if [[ "${1:-}" == "--fast" ]]; then
@@ -54,20 +73,29 @@ echo "check.sh: $passed passed (baseline $BASELINE)"
 echo
 echo "== seeded property pass (3x examples) =="
 # deeper deterministic search than the tier-1 defaults: the property
-# tests scale their example counts by REPRO_PROPERTY_EXAMPLES
+# tests scale their example counts by REPRO_PROPERTY_EXAMPLES.  The
+# wave selection is the sim-layer differential pair (staleness-0 event
+# identity + trace invariants) — the jit-compiled trainer tests above
+# them don't gain from extra examples and would triple the wall time.
 REPRO_PROPERTY_EXAMPLES=3 python -m pytest -q \
-  tests/test_property_coding.py
+  tests/test_property_coding.py \
+  tests/test_arrivals.py \
+  "tests/test_wave_loop.py::test_wave_staleness0_event_identical_to_barrier" \
+  "tests/test_wave_loop.py::test_wave_trace_invariants"
 
 echo
 echo "== smoke benchmarks =="
 # includes the coded_step bench-regression guard: the flat fused combine
 # must never fall behind the tree baseline by >1.15x at the smoke shape
-# (assertion inside benchmarks/coded_step.py) — and the serve_load
+# (assertion inside benchmarks/coded_step.py) — the serve_load
 # tail-latency guard: the coded decode tier must beat the uncoded R=1
 # baseline on p99 step latency by >=1.5x and agree with the Env
 # order-statistics closed form (assertions inside
-# benchmarks/serve_load.py).  bench_smoke.json is the machine-readable
-# row dump (uploaded as a CI artifact).
+# benchmarks/serve_load.py) — and the wave_step async guard: the
+# wave-pipelined loop at staleness 1 must beat the barrier by >=1.15x
+# at the smoke horizon, with k=0 pricing exactly at the barrier
+# (assertions inside benchmarks/wave_step.py).  bench_smoke.json is
+# the machine-readable row dump (uploaded as a CI artifact).
 python -m benchmarks.run --smoke --json bench_smoke.json
 
 echo

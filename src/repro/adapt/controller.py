@@ -137,14 +137,21 @@ class AdaptiveController:
         self._cooldown_until = 0
 
     # ------------------------------------------------------------- the loop
-    def observe(self, times) -> Optional[Plan]:
+    def observe(self, times, *, replan_ok: bool = True) -> Optional[Plan]:
         """Ingest one round's (N,) per-worker completion times; returns
         the new ``Plan`` when this round triggered an accepted re-plan,
         else ``None``.  The monitor window is cleared on an accepted
         swap (the refill time, >= ``min_rounds``, is the natural
         cooldown); a refused re-plan keeps the window and just backs
-        off ``min_rounds`` before the next attempt."""
+        off ``min_rounds`` before the next attempt.
+
+        ``replan_ok=False`` feeds the monitor but suppresses the
+        re-plan decision — the wave-pipelined loop uses it while
+        draining in-flight rounds behind an already-accepted swap, so
+        the drain's observations count without firing a second swap."""
         self.monitor.observe(times)
+        if not replan_ok:
+            return None
         if not self.monitor.ready:
             return None
         if self.monitor.rounds_seen < self._cooldown_until:

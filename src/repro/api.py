@@ -50,6 +50,8 @@ _LAZY = {
     # trainer stack (imports jax models)
     "Trainer": ("repro.train.trainer", "Trainer"),
     "TrainConfig": ("repro.train.trainer", "TrainConfig"),
+    "WaveConfig": ("repro.train.wave", "WaveConfig"),
+    "WaveRunner": ("repro.train.wave", "WaveRunner"),
     "make_coded_train_step": ("repro.train.trainer", "make_coded_train_step"),
     "make_train_step": ("repro.train.trainer", "make_train_step"),
     "make_coded_grad_fn": ("repro.train.coded", "make_coded_grad_fn"),
@@ -76,7 +78,10 @@ _LAZY = {
     "simulate_plan": ("repro.sim", "simulate_plan"),
     "simulate_x": ("repro.sim", "simulate_x"),
     "schedule_from_plan": ("repro.sim", "schedule_from_plan"),
+    "schedule_from_plan_levels": ("repro.sim", "schedule_from_plan_levels"),
     "schedule_from_x": ("repro.sim", "schedule_from_x"),
+    "WaveTrace": ("repro.sim", "WaveTrace"),
+    "WaveEvent": ("repro.sim", "WaveEvent"),
     # configs
     "get_config": ("repro.configs", "get_config"),
     "list_archs": ("repro.configs", "list_archs"),

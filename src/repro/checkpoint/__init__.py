@@ -1,0 +1,14 @@
+"""Orbax-free checkpointing (flat npz + json meta, atomic rename)."""
+from .ckpt import (
+    latest_step,
+    load_checkpoint,
+    restore_train_state,
+    save_checkpoint,
+)
+
+__all__ = [
+    "latest_step",
+    "load_checkpoint",
+    "restore_train_state",
+    "save_checkpoint",
+]

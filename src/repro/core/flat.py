@@ -145,20 +145,35 @@ class FlatLayout:
             bufs.append(buf)
         return bufs
 
+    def unpack_level(self, li: int, buf) -> dict:
+        """Slice ONE level's leaves out of its packed buffer (padding
+        discarded): ``{flat leaf id: (*batch, *shape) array}``.
+
+        The per-level inverse the wave-pipelined loop needs — a level
+        buffer can be unpacked the moment its collective lands, before
+        the other levels' buffers exist.
+        """
+        import jax.numpy as jnp
+
+        if not 0 <= li < self.n_levels:
+            raise ValueError(f"unpack_level: level {li} out of range "
+                             f"[0, {self.n_levels})")
+        out = {}
+        for j, off in zip(self.level_leaves[li], self.level_offsets[li]):
+            size = int(np.prod(self.leaf_shapes[j], dtype=np.int64))
+            out[j] = jnp.reshape(buf[..., off:off + size],
+                                 buf.shape[:-1] + self.leaf_shapes[j])
+        return out
+
     def unpack(self, bufs) -> list:
         """Inverse of ``pack``: slice each leaf back out of its level
         buffer (padding discarded) and restore ``(*batch, *shape)``."""
-        import jax.numpy as jnp
-
         if len(bufs) != self.n_levels:
             raise ValueError(f"unpack: got {len(bufs)} buffers, layout has "
                              f"{self.n_levels} levels")
         leaves = [None] * self.n_leaves
         for li, buf in enumerate(bufs):
-            for j, off in zip(self.level_leaves[li], self.level_offsets[li]):
-                size = int(np.prod(self.leaf_shapes[j], dtype=np.int64))
-                piece = jnp.reshape(buf[..., off:off + size],
-                                    buf.shape[:-1] + self.leaf_shapes[j])
+            for j, piece in self.unpack_level(li, buf).items():
                 leaves[j] = piece
         return leaves
 

@@ -17,8 +17,11 @@ from .cluster import (
     ClusterConfig,
     ClusterResult,
     ClusterSim,
+    WaveEvent,
+    WaveTrace,
     draw_times,
     schedule_from_plan,
+    schedule_from_plan_levels,
     schedule_from_x,
     simulate_plan,
     simulate_x,
@@ -33,6 +36,8 @@ __all__ = [
     "ClusterSim",
     "DegradedWorker",
     "Trace",
+    "WaveEvent",
+    "WaveTrace",
     "WorkerDeath",
     "apply_faults",
     "draw_times",
@@ -40,6 +45,7 @@ __all__ = [
     "mc",
     "poisson_arrivals",
     "schedule_from_plan",
+    "schedule_from_plan_levels",
     "schedule_from_x",
     "simulate_plan",
     "simulate_x",

@@ -43,6 +43,24 @@ broadcast round r's block-b update — so round r+1's low-redundancy
 head overlaps the slow high-redundancy tail of round r.  ``wave=False``
 inserts a full barrier (round r+1 starts only when every round-r block
 is decoded), which is the analytical eq.(2)-per-round regime.
+
+Two knobs connect the wave engine to a *live* async training loop
+(``repro.train.wave``, docs/ASYNC.md):
+
+* ``update_cost`` — the master's serialized decode + optimizer-update
+  time per round.  The barrier regime pays it between every pair of
+  rounds; waves overlap it with the next round's compute, which is
+  where the realizable step-time win actually lives.
+* ``staleness`` — bounded overlap: round r may only start once the
+  master has *applied* round ``r - 1 - staleness``'s update.  ``0``
+  reproduces the barrier schedule event-for-event (every round computes
+  on fully fresh parameters); ``None`` leaves the wave unbounded.
+
+``ClusterResult.wave_trace()`` exports the realized schedule as a
+normalized, replayable event list (dispatch / decode / update, with
+per-block first-(N-s) deliverer sets and per-round parameter versions)
+— the contract the live wave loop executes and is differentially
+tested against (tests/test_wave_loop.py).
 """
 from __future__ import annotations
 
@@ -60,8 +78,11 @@ __all__ = [
     "ClusterConfig",
     "ClusterResult",
     "ClusterSim",
+    "WaveEvent",
+    "WaveTrace",
     "schedule_from_x",
     "schedule_from_plan",
+    "schedule_from_plan_levels",
     "simulate_plan",
     "simulate_x",
     "draw_times",
@@ -120,6 +141,31 @@ def schedule_from_plan(plan) -> tuple:
     )
 
 
+def schedule_from_plan_levels(plan) -> tuple:
+    """Level-form schedule of a ``Plan``: ONE block per used level.
+
+    Position i corresponds to ``plan.used_levels[i]`` — exactly the row
+    order of ``plan.decode_weights`` — so decode events map 1:1 onto the
+    per-level combines of the live training loop.  The cumulative work
+    of level block i is the leaf-form cumulative work through the last
+    leaf of that level; within a level the last leaf dominates the
+    eq. (2) max-term (same order statistic, largest cumulative work),
+    so barrier round durations still equal ``plan.tau(T)``.
+    """
+    levels = np.asarray(plan.leaf_levels, np.int64)
+    costs = np.asarray(plan.leaf_costs, np.float64)
+    if np.any(np.diff(levels) < 0):
+        raise ValueError("schedule_from_plan_levels: leaf levels must be "
+                         "nondecreasing in flat leaf order (Lemma 1 "
+                         "compute-and-stream order)")
+    cum = np.cumsum((levels + 1.0) * costs) * float(plan.total_units)
+    blocks = []
+    for i, s in enumerate(plan.used_levels):
+        j = int(np.where(levels == int(s))[0][-1])
+        blocks.append(Block(index=i, level=int(s), work=float(cum[j])))
+    return tuple(blocks)
+
+
 def draw_times(dist, rng, rounds: int, n_workers: int) -> np.ndarray:
     """(rounds, N) cycle-time draws.
 
@@ -159,6 +205,14 @@ class ClusterConfig:
 
     #: pipeline rounds per decoded block (True) vs full round barrier.
     wave: bool = True
+    #: wave only: bounded overlap — round r may start only once the
+    #: master has APPLIED round (r - 1 - staleness)'s optimizer update.
+    #: 0 reproduces barrier semantics event-for-event; None = unbounded.
+    staleness: Optional[int] = None
+    #: master-side serialized decode + optimizer-update time per round.
+    #: The barrier pays it between every pair of rounds; waves overlap
+    #: it with the next round's compute (subject to ``staleness``).
+    update_cost: float = 0.0
     #: workers skip blocks the master has already decoded (jump ahead).
     #: Off by default: eq. (5) assumes every worker computes every block.
     cancel_decoded: bool = False
@@ -188,6 +242,97 @@ class _Worker:
         self.cur_start = 0.0     # start time of the in-flight compute
 
 
+# ------------------------------------------------------------- wave traces
+#: deterministic tie-break rank of same-time wave events: decodes of a
+#: round precede its update, which precedes any later round's dispatch.
+_WAVE_KIND_RANK = {"decode": 0, "update": 1, "dispatch": 2}
+
+
+@dataclass(frozen=True)
+class WaveEvent:
+    """One normalized master-side event of a wave schedule.
+
+    ``dispatch`` — the master freezes round ``round``'s parameter
+    snapshot (``version`` = the last round whose update it includes;
+    -1 = the initial parameters) and the first worker starts computing.
+    ``decode``  — level block ``pos`` (index into ``used_levels``)
+    reached its (N - s)-th delivery; ``workers`` is that first-(N - s)
+    deliverer set, sorted (the decode-weight support).
+    ``update``  — the master finished applying round ``round``'s
+    optimizer update (``update_cost`` after the round's last decode).
+    """
+
+    t: float
+    kind: str                  # "dispatch" | "decode" | "update"
+    round: int
+    pos: int = -1              # decode only: level-block position
+    version: int = -1          # dispatch only: params version
+    workers: tuple = ()        # decode only: sorted deliverer set
+
+    def sort_key(self):
+        return (self.t, self.round, _WAVE_KIND_RANK[self.kind], self.pos)
+
+
+@dataclass(frozen=True)
+class WaveTrace:
+    """Replayable wave schedule: time-ordered ``WaveEvent`` tuple.
+
+    A pure function of (schedule, times, config) — the executable
+    contract the live wave loop (``repro.train.wave``) consumes, and
+    what its realized event order is differentially tested against.
+    JSON round-trips bit-identically via ``to_dict``/``from_dict``.
+    """
+
+    n_workers: int
+    n_blocks: int
+    staleness: Optional[int]
+    update_cost: float
+    events: tuple
+
+    def rounds(self) -> int:
+        return 1 + max((e.round for e in self.events), default=-1)
+
+    def realized_staleness(self) -> np.ndarray:
+        """Per-round parameter staleness delta_r = (r - 1) - version_r
+        (0 on every round == barrier-fresh parameters)."""
+        disp = sorted((e for e in self.events if e.kind == "dispatch"),
+                      key=lambda e: e.round)
+        return np.asarray([(e.round - 1) - e.version for e in disp], np.int64)
+
+    def to_dict(self) -> dict:
+        return {
+            "version": 1,
+            "n_workers": int(self.n_workers),
+            "n_blocks": int(self.n_blocks),
+            "staleness": (None if self.staleness is None
+                          else int(self.staleness)),
+            "update_cost": float(self.update_cost),
+            "events": [
+                {"t": float(e.t), "kind": e.kind, "round": int(e.round),
+                 "pos": int(e.pos), "version": int(e.version),
+                 "workers": [int(w) for w in e.workers]}
+                for e in self.events
+            ],
+        }
+
+    @classmethod
+    def from_dict(cls, blob: dict) -> "WaveTrace":
+        return cls(
+            n_workers=int(blob["n_workers"]),
+            n_blocks=int(blob["n_blocks"]),
+            staleness=(None if blob["staleness"] is None
+                       else int(blob["staleness"])),
+            update_cost=float(blob["update_cost"]),
+            events=tuple(
+                WaveEvent(t=float(e["t"]), kind=str(e["kind"]),
+                          round=int(e["round"]), pos=int(e["pos"]),
+                          version=int(e["version"]),
+                          workers=tuple(int(w) for w in e["workers"]))
+                for e in blob["events"]
+            ),
+        )
+
+
 # ----------------------------------------------------------------- results
 @dataclass
 class ClusterResult:
@@ -203,6 +348,12 @@ class ClusterResult:
     worker_busy: np.ndarray    # (N,) per-worker total compute time
     config: ClusterConfig
     events: Optional[list] = field(default=None, repr=False)
+    #: (R,) first compute-start instant of each round (the dispatch time:
+    #: the master's round-r parameter snapshot is frozen here).
+    round_start: Optional[np.ndarray] = field(default=None, repr=False)
+    #: per (round, block): the first-(N - s) deliverer workers, in
+    #: delivery order — the realized decode-weight support.
+    deliver_sets: Optional[list] = field(default=None, repr=False)
 
     def round_durations(self) -> np.ndarray:
         """Per-round wall time against the previous round's completion.
@@ -219,6 +370,41 @@ class ClusterResult:
         from .trace import Trace
 
         return Trace.from_times(self.times, meta=meta)
+
+    def wave_trace(self) -> WaveTrace:
+        """Normalize this run into a replayable ``WaveTrace``.
+
+        Per round: one ``dispatch`` (first compute start; ``version`` =
+        number of master updates applied by then, minus one), one
+        ``decode`` per block (with its first-(N - s) deliverer set,
+        sorted), one ``update`` (``update_cost`` after the last decode).
+        Same-time ties order as decode < update < dispatch within/across
+        rounds (causally consistent, deterministic).
+        """
+        if self.stalled:
+            raise ValueError(f"stalled run has no complete wave trace "
+                             f"(undecoded blocks: {self.undecoded[:4]}...)")
+        rounds, n_blocks = self.decode_times.shape
+        upd = self.round_done + self.config.update_cost  # monotone in r
+        events = []
+        for r in range(rounds):
+            version = int(np.searchsorted(upd, self.round_start[r],
+                                          side="right")) - 1
+            events.append(WaveEvent(t=float(self.round_start[r]),
+                                    kind="dispatch", round=r,
+                                    version=version))
+            for pos in range(n_blocks):
+                events.append(WaveEvent(
+                    t=float(self.decode_times[r, pos]), kind="decode",
+                    round=r, pos=pos,
+                    workers=tuple(sorted(self.deliver_sets[r][pos]))))
+            events.append(WaveEvent(t=float(upd[r]), kind="update", round=r))
+        events.sort(key=WaveEvent.sort_key)
+        return WaveTrace(
+            n_workers=int(self.worker_busy.shape[0]), n_blocks=int(n_blocks),
+            staleness=self.config.staleness,
+            update_cost=float(self.config.update_cost),
+            events=tuple(events))
 
     def summary(self) -> dict:
         dur = self.round_durations()
@@ -275,6 +461,11 @@ class ClusterSim:
         self.seed = int(seed)
         self.faults = tuple(faults)
         self.config = config if config is not None else ClusterConfig(**config_kw)
+        if self.config.staleness is not None and self.config.staleness < 0:
+            raise ValueError("staleness must be >= 0 (or None = unbounded)")
+        if self.config.update_cost < 0 or self.config.broadcast_latency < 0 \
+                or self.config.comm_delay < 0:
+            raise ValueError("latencies/update_cost must be >= 0")
 
     # ------------------------------------------------------------- running
     def run(self, rounds: int = 1, times: Optional[np.ndarray] = None
@@ -306,6 +497,8 @@ class ClusterSim:
         decoded_at = np.full((rounds, n_blocks), np.inf)
         blocks_left = np.full(rounds, n_blocks, np.int64)
         round_done = np.full(rounds, np.inf)
+        round_start = np.full(rounds, np.inf)
+        deliver_sets = [[[] for _ in range(n_blocks)] for _ in range(rounds)]
         waiters: dict = {}        # dep key -> [worker, ...]
         events = [] if cfg.record_events else None
 
@@ -320,9 +513,23 @@ class ClusterSim:
                 return None, 0.0
             if cfg.wave:
                 t_dep = decoded_at[r - 1, pos]
-                return (("blk", r - 1, pos), t_dep + cfg.broadcast_latency)
+                if not np.isfinite(t_dep):
+                    return (("blk", r - 1, pos), np.inf)
+                ready = t_dep + cfg.broadcast_latency
+                if cfg.staleness is not None:
+                    rg = r - 1 - cfg.staleness
+                    if rg >= 0:
+                        # bounded overlap: the master must have APPLIED
+                        # round rg's update before round r may start
+                        t_gate = round_done[rg]
+                        if not np.isfinite(t_gate):
+                            return (("rnd", rg), np.inf)
+                        ready = max(ready, t_gate + cfg.update_cost
+                                    + cfg.broadcast_latency)
+                return (("blk", r - 1, pos), ready)
             t_dep = round_done[r - 1]
-            return (("rnd", r - 1), t_dep + cfg.broadcast_latency)
+            return (("rnd", r - 1),
+                    t_dep + cfg.update_cost + cfg.broadcast_latency)
 
         def try_start(w: _Worker):
             """Advance ``w`` to its next runnable block (or park/stop it)."""
@@ -352,6 +559,11 @@ class ClusterSim:
                 w.free_at = finish
                 w.running = True
                 w.cur_start = start
+                round_start[r] = min(round_start[r], start)
+                if events is not None:  # appended at schedule time, so the
+                    # raw log is causal-order, not time-order (starts may
+                    # carry future timestamps); wave_trace() re-sorts.
+                    events.append((start, "start", w.idx, r, pos))
                 push(finish, "finish", w.idx, r, pos, w.epoch)
                 return
 
@@ -410,6 +622,8 @@ class ClusterSim:
                     events.append((t, "deliver", widx, r, pos))
                 delivered[r, pos] += 1
                 need = n - self.schedule[pos].level
+                if delivered[r, pos] <= need:
+                    deliver_sets[r][pos].append(widx)
                 if delivered[r, pos] == need:
                     decoded_at[r, pos] = t
                     if events is not None:
@@ -431,6 +645,7 @@ class ClusterSim:
             stalled=bool(undecoded), undecoded=undecoded,
             worker_busy=np.asarray([w.busy for w in workers]),
             config=cfg, events=events,
+            round_start=round_start, deliver_sets=deliver_sets,
         )
 
 

@@ -66,7 +66,7 @@ from repro.models.model import train_loss
 
 __all__ = ["CodingPlan", "build_plan", "solve_blocks", "StragglerSim",
            "make_coded_grad_fn", "uncoded_grad_fn", "combine_grads",
-           "tau_weighted", "UNIT_RESOLUTION"]
+           "combine_level", "tau_weighted", "UNIT_RESOLUTION"]
 
 #: Legacy name — ``CodingPlan`` was promoted to ``repro.core.plan.Plan``.
 CodingPlan = Plan
@@ -204,27 +204,69 @@ def _tree_scale(tree, dec_w_rank, level_idx):
 
 
 # --------------------------------------------------- flat fused combine
-def _fused_leaf_combine(layout, leaves_nk, b_rows, dec_w, n_workers,
+def _fused_level_leaves(layout, leaves_nk, b_rows, dec_w_row, li, n_workers,
                         grad_dtype):
-    """All-workers fused combine: per leaf, ONE skinny matmul
-    ``(dec_w ⊙ rows / N) @ G`` over the (N*K, size) shard-gradient
-    stack — encode, decode weight, worker sum, and the 1/N mean fold
-    into a single streaming pass (kernels/gc_fused math).
+    """Fused combine of ONE redundancy level's leaves: per leaf, the
+    skinny ``(dec_w ⊙ rows / N) @ G`` matmul over the (N*K, size)
+    shard-gradient stack — encode, decode weight, worker sum, and the
+    1/N mean in a single streaming pass.
 
-    leaves_nk: flat-order leaves shaped (N, K, *shape).  Returns the
-    decoded mean gradient leaves in flat order.
+    This is the independently-triggerable unit of the wave-pipelined
+    loop (``repro.train.wave``): level ``li`` combines the instant its
+    block decodes, without waiting for higher-redundancy levels.
+    ``dec_w_row`` is that level's (N,) decode-weight row.  Returns
+    ``{leaf_id: decoded mean grad}`` for the level's leaves.
     """
     inv_n = jnp.ones((1,), jnp.float32) / n_workers
-    out = []
-    for j, shape in enumerate(layout.leaf_shapes):
-        li = layout.leaf_level[j]
-        w = (dec_w[li][:, None] * b_rows[:, li, :]).reshape(1, -1)  # (1, N*K)
+    w = (dec_w_row[:, None] * b_rows[:, li, :]).reshape(1, -1)      # (1, N*K)
+    out = {}
+    for j in layout.level_leaves[li]:
+        shape = layout.leaf_shapes[j]
         g = leaves_nk[j].reshape((w.shape[1], -1))                  # (N*K, sz)
         y = ops.encode_decode(inv_n, w, g)[0].reshape(shape)
         if grad_dtype is not None:
             y = y.astype(grad_dtype)
-        out.append(y)
+        out[j] = y
     return out
+
+
+def _fused_leaf_combine(layout, leaves_nk, b_rows, dec_w, n_workers,
+                        grad_dtype):
+    """All-workers fused combine across every level (one
+    ``_fused_level_leaves`` per level — identical per-leaf math).
+
+    leaves_nk: flat-order leaves shaped (N, K, *shape).  Returns the
+    decoded mean gradient leaves in flat order.
+    """
+    out = [None] * layout.n_leaves
+    for li in range(layout.n_levels):
+        for j, y in _fused_level_leaves(layout, leaves_nk, b_rows, dec_w[li],
+                                        li, n_workers, grad_dtype).items():
+            out[j] = y
+    return out
+
+
+def combine_level(plan: Plan, grads_stacked, level_idx: int, dec_w_row, *,
+                  grad_dtype=None) -> dict:
+    """Decode ONE redundancy level of already-computed per-shard grads.
+
+    The per-level combine stage of the wave-pipelined loop: callable the
+    instant level ``level_idx`` (an index into ``plan.used_levels``)
+    reaches its (N - s)-th delivery, before higher levels land.
+    ``grads_stacked``: pytree with leaves (N, K, *shape); ``dec_w_row``:
+    that level's (N,) decode-weight row.  Returns ``{flat leaf id:
+    decoded mean gradient}`` covering exactly the level's leaves; the
+    union over all levels equals ``combine_grads(..., pipeline='flat')``.
+    """
+    leaves, _ = jax.tree.flatten(grads_stacked)
+    layout = _require_layout(plan)
+    if not 0 <= level_idx < layout.n_levels:
+        raise ValueError(f"level_idx {level_idx} out of range "
+                         f"[0, {layout.n_levels})")
+    return _fused_level_leaves(
+        layout, leaves, jnp.asarray(plan.b_rows, jnp.float32),
+        jnp.asarray(dec_w_row, jnp.float32), level_idx, plan.n_workers,
+        grad_dtype)
 
 
 def _fused_rank_levels(layout, leaves_k, rows_rank, dec_w_rank, denom,

@@ -106,12 +106,19 @@ class Trainer:
     an ``AdaptiveController`` and hot-swaps the plan (``swap_plan``)
     when drift makes re-planning pay — optimizer state, RNG stream, and
     step count untouched; see docs/ADAPTIVE.md.
+
+    ``wave`` is an optional ``repro.train.wave.WaveConfig``: ``run``
+    then executes rounds on the wave-pipelined (async) schedule instead
+    of the barrier loop — staleness 0 is bit-identical to the barrier,
+    staleness k overlaps up to k rounds; see docs/ASYNC.md.  Composes
+    with ``adapt`` (swaps quiesce in-flight waves first).
     """
 
     def __init__(self, cfg, cfg_t: TrainConfig, env, *, n_workers: int = None,
                  scheme: str = None, global_batch: int = 32, seed: int = 0,
                  mesh=None, mode: str = "sim", data_kind: str = "zipf",
-                 solver: str = None, pipeline: str = "auto", adapt=None):
+                 solver: str = None, pipeline: str = "auto", adapt=None,
+                 wave=None):
         if scheme is None:
             scheme = solver if solver is not None else "xf"  # `solver` is the legacy kw
         if n_workers is None:
@@ -145,6 +152,11 @@ class Trainer:
             self.controller = AdaptiveController(adapt, self.plan,
                                                  self.state.params)
         self.history: list[dict] = []
+        self.wave = None
+        if wave is not None:
+            from .wave import WaveRunner
+
+            self.wave = WaveRunner(self, wave)
 
     # ------------------------------------------------------------- hot swap
     def _step_fn_for(self, plan: Plan):
@@ -182,6 +194,8 @@ class Trainer:
         self.step_fn = self._step_fn_for(plan)
 
     def run(self, n_steps: int, log_every: int = 10, log_fn=print):
+        if self.wave is not None:
+            return self.wave.run(n_steps, log_every, log_fn)
         for i in range(n_steps):
             wb = coded_worker_batches(self.data, int(self.state.step),
                                       self.n_workers, self.plan.s_max)

@@ -1,0 +1,123 @@
+"""Arrival-process contracts for the serving loop.
+
+``poisson_arrivals`` and ``trace_arrivals`` feed every serving
+benchmark's open-loop load model; the policy comparisons there are only
+apples-to-apples if the streams are deterministic under a seed, sorted,
+and hit their advertised rates.  Pure numpy — no jax.
+"""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sim.arrivals import poisson_arrivals, trace_arrivals
+
+_EX = int(os.environ.get("REPRO_PROPERTY_EXAMPLES", "10"))
+
+
+# -------------------------------------------------------------- poisson
+def test_poisson_seeded_determinism():
+    a = poisson_arrivals(200, 0.5, seed=7)
+    b = poisson_arrivals(200, 0.5, seed=7)
+    assert np.array_equal(a, b)
+    c = poisson_arrivals(200, 0.5, seed=8)
+    assert not np.array_equal(a, c)
+
+
+def test_poisson_rng_continuation():
+    """Passing an rng continues one stream: two halves drawn from the
+    same generator concatenate to the single-call stream."""
+    whole = poisson_arrivals(100, 2.0, seed=3)
+    rng = np.random.default_rng(3)
+    first = poisson_arrivals(50, 2.0, rng=rng)
+    second = poisson_arrivals(50, 2.0, rng=rng, start=float(first[-1]))
+    assert np.array_equal(whole[:50], first)
+    np.testing.assert_allclose(whole[50:], second, rtol=1e-12)
+
+
+@settings(max_examples=2 * _EX, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.1, 1.0, 10.0]),
+       st.sampled_from([0.0, 5.0]))
+def test_poisson_monotone_and_positive_gaps(seed, rate, start):
+    t = poisson_arrivals(64, rate, seed=seed, start=start)
+    assert t.shape == (64,)
+    assert t[0] >= start
+    assert np.all(np.diff(t) >= 0.0)
+
+
+def test_poisson_rate_matches_empirical_mean():
+    """Mean gap over a long stream ~ 1/rate (law of large numbers; the
+    tolerance is ~4 sigma for n=20000 exponential gaps)."""
+    for rate in (0.25, 2.0, 40.0):
+        t = poisson_arrivals(20_000, rate, seed=11)
+        gaps = np.diff(np.concatenate([[0.0], t]))
+        assert abs(gaps.mean() * rate - 1.0) < 4.0 / np.sqrt(20_000)
+
+
+def test_poisson_validation():
+    with pytest.raises(ValueError, match="rate"):
+        poisson_arrivals(10, 0.0)
+    with pytest.raises(ValueError, match="n must"):
+        poisson_arrivals(-1, 1.0)
+    assert poisson_arrivals(0, 1.0).shape == (0,)
+
+
+# ---------------------------------------------------------------- trace
+def test_trace_roundtrip_identity():
+    """Replaying a recorded stream with no options is the stream itself
+    (re-anchored at its own origin)."""
+    t = poisson_arrivals(50, 1.5, seed=2, start=100.0)
+    out = trace_arrivals(t)
+    np.testing.assert_allclose(out, t - t[0], rtol=0, atol=0)
+    # and re-offsetting restores the original exactly
+    np.testing.assert_allclose(trace_arrivals(t, start=float(t[0])), t,
+                               rtol=1e-12)
+
+
+def test_trace_truncates_and_cycles():
+    base = [0.0, 1.0, 3.0]
+    assert trace_arrivals(base, n=2).tolist() == [0.0, 1.0]
+    cycled = trace_arrivals(base, n=7)
+    assert cycled.shape == (7,)
+    assert np.all(np.diff(cycled) >= 0.0)
+    # each repetition is the same burst shape shifted past the last span
+    span = 3.0 + 1.5   # trace span + mean gap
+    np.testing.assert_allclose(cycled[3:6], np.asarray(base) + span)
+
+
+def test_trace_rate_rescale_hits_target():
+    t = poisson_arrivals(400, 3.0, seed=5)
+    for target in (0.5, 3.0, 12.0):
+        out = trace_arrivals(t, rate=target)
+        realized = (out.size - 1) / float(out[-1] - out[0])
+        assert realized == pytest.approx(target, rel=1e-9)
+
+
+@settings(max_examples=2 * _EX, deadline=None)
+@given(st.data())
+def test_trace_properties(data):
+    """Sorted in, sorted out; n honored; burst shape preserved under
+    rescale (gap ratios invariant)."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    t = np.sort(rng.uniform(0.0, 100.0, size=int(rng.integers(2, 40))))
+    n = data.draw(st.integers(1, 80))
+    out = trace_arrivals(t, n=n)
+    assert out.shape == (n,)
+    assert np.all(np.diff(out) >= 0.0)
+    rescaled = trace_arrivals(t, rate=2.0)
+    if t[-1] > t[0]:
+        g0, g1 = np.diff(t - t[0]), np.diff(rescaled)
+        mask = g0 > 0
+        if mask.any():
+            ratios = g1[mask] / g0[mask]
+            np.testing.assert_allclose(ratios, ratios[0], rtol=1e-9)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError, match="sorted"):
+        trace_arrivals([0.0, 2.0, 1.0])
+    with pytest.raises(ValueError, match="empty"):
+        trace_arrivals([])
+    with pytest.raises(ValueError, match="rate"):
+        trace_arrivals([0.0, 1.0], rate=-1.0)

@@ -1,0 +1,140 @@
+"""Checkpoint round-trip: bit-identity, exotic dtypes, atomicity.
+
+The checkpoint layer is the wave loop's crash boundary (docs/ASYNC.md:
+a quiesced step boundary is the only durable point), so its contract is
+tested directly: save/load must be bit-exact for every dtype the train
+state carries — including the uint-view path for ml_dtypes exotics
+(bf16, fp8) that numpy's npz cannot store natively — ``latest_step``
+must order numerically, and a crashed partial write (the ``.tmp``
+staging dir) must never be picked up as the latest checkpoint.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.checkpoint import (
+    latest_step,
+    load_checkpoint,
+    restore_train_state,
+    save_checkpoint,
+)
+
+
+def _tree(seed=0):
+    """A TrainState-shaped pytree mixing native and exotic dtypes."""
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+            "emb": jnp.asarray(rng.standard_normal((16, 4)), jnp.bfloat16),
+        },
+        "opt": {
+            "mu": jnp.asarray(rng.standard_normal((4, 8)), jnp.bfloat16),
+            "nu": jnp.asarray(rng.standard_normal((4, 8)), jnp.float32),
+            "count": jnp.asarray(7, jnp.int32),
+        },
+        "step": jnp.asarray(42, jnp.int32),
+    }
+
+
+def _assert_trees_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        assert xa.dtype == ya.dtype, (xa.dtype, ya.dtype)
+        # exotic dtypes compare through the uint view (no NaN!=NaN traps)
+        if xa.dtype.kind not in "biufc":
+            xa = xa.view({1: np.uint8, 2: np.uint16}[xa.dtype.itemsize])
+            ya = ya.view(xa.dtype)
+        assert np.array_equal(xa, ya)
+
+
+def test_save_load_roundtrip_bitwise(tmp_path):
+    tree = _tree()
+    path = save_checkpoint(str(tmp_path), 42, tree, extra={"note": "x"})
+    assert os.path.basename(path) == "step_00000042"
+    restored = restore_train_state(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree),
+        str(tmp_path))
+    _assert_trees_bitwise(tree, restored)
+
+
+def test_exotic_dtype_stored_as_uint_view(tmp_path):
+    """bf16 leaves survive npz via the same-width uint view and come
+    back as bf16, bit for bit — including NaN/inf payloads."""
+    special = jnp.asarray([np.nan, np.inf, -np.inf, 0.0, -0.0, 1.5],
+                          jnp.bfloat16)
+    tree = {"x": special}
+    save_checkpoint(str(tmp_path), 0, tree)
+    arrays, meta = load_checkpoint(str(tmp_path), 0)
+    assert meta["dtypes"]["x"] == "bfloat16"
+    assert str(arrays["x"].dtype) == "bfloat16"
+    assert np.array_equal(arrays["x"].view(np.uint16),
+                          np.asarray(special).view(np.uint16))
+    # and the raw npz on disk holds the uint view (npz-safe storage)
+    with np.load(os.path.join(str(tmp_path), "step_00000000",
+                              "arrays.npz")) as z:
+        assert z["x"].dtype == np.uint16
+
+
+def test_latest_step_orders_numerically(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in (3, 100, 20):
+        save_checkpoint(str(tmp_path), s, tree)
+    assert latest_step(str(tmp_path)) == 100
+    arrays, meta = load_checkpoint(str(tmp_path))   # step=None -> latest
+    assert meta["step"] == 100
+    assert latest_step(str(tmp_path / "nope")) is None
+    with pytest.raises(FileNotFoundError):
+        load_checkpoint(str(tmp_path / "nope"))
+
+
+def test_crashed_partial_write_not_latest(tmp_path):
+    """A .tmp staging dir left by a crash is invisible to latest_step
+    and is swept (not merged into) by the next save of that step."""
+    tree = {"x": jnp.arange(4.0)}
+    save_checkpoint(str(tmp_path), 5, tree)
+    crash = tmp_path / "step_00000009.tmp"
+    crash.mkdir()
+    (crash / "arrays.npz").write_bytes(b"partial garbage")
+    assert latest_step(str(tmp_path)) == 5
+    arrays, meta = load_checkpoint(str(tmp_path))
+    assert meta["step"] == 5
+    # finishing step 9 replaces the stale staging dir atomically
+    save_checkpoint(str(tmp_path), 9, {"x": jnp.arange(4.0) + 1})
+    assert latest_step(str(tmp_path)) == 9
+    assert not crash.exists()
+    arrays, _ = load_checkpoint(str(tmp_path), 9)
+    assert np.array_equal(arrays["x"], np.arange(4.0) + 1)
+
+
+def test_resave_overwrites_step(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.zeros((3,))})
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.ones((3,))})
+    arrays, _ = load_checkpoint(str(tmp_path), 1)
+    assert np.array_equal(arrays["x"], np.ones(3))
+
+
+def test_restore_validates_shape_and_missing(tmp_path):
+    save_checkpoint(str(tmp_path), 0, {"x": jnp.zeros((3,))})
+    with pytest.raises(ValueError, match="shape"):
+        restore_train_state({"x": jnp.zeros((4,))}, str(tmp_path))
+    with pytest.raises(KeyError, match="missing leaf"):
+        restore_train_state({"y": jnp.zeros((3,))}, str(tmp_path))
+
+
+def test_meta_json_is_readable(tmp_path):
+    save_checkpoint(str(tmp_path), 12, {"x": jnp.zeros((2,), jnp.bfloat16)},
+                    extra={"arch": "gc-lm-110m"})
+    with open(os.path.join(str(tmp_path), "step_00000012",
+                           "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["step"] == 12 and meta["n_leaves"] == 1
+    assert meta["extra"]["arch"] == "gc-lm-110m"
+    assert meta["dtypes"]["x"] == "bfloat16"

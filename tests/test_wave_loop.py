@@ -1,0 +1,423 @@
+"""Wave-pipelined training loop: proven bit-equivalent to the simulator.
+
+Three layers of the contract (docs/ASYNC.md):
+
+  * schedule layer — the level-form schedule the wave loop runs is
+    runtime-equivalent to the plan's eq. (2) leaf layout, and the wave
+    engine at ``staleness=0`` is event-identical to the barrier engine;
+  * trace layer — hypothesis properties of ``WaveTrace`` over random
+    envs, fault injections, and every straggler count: staleness bound,
+    deliverer-set sizes, decode-weight exactness, JSON round-trip;
+  * trainer layer — the live ``WaveRunner``: staleness 0 bit-identical
+    to the synchronous ``Trainer`` (params/opt/rng hashes, sim and
+    spmd), staleness k executes exactly the simulator's event order,
+    and an adaptive plan swap quiesces in-flight waves first.
+"""
+import hashlib
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import types
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DegradedWorker, Env, Plan
+from repro.core.distributions import (
+    LogNormalStraggler,
+    ShiftedExponential,
+    UniformStraggler,
+)
+from repro.sim import (
+    ClusterSim,
+    WaveTrace,
+    schedule_from_plan,
+    schedule_from_plan_levels,
+)
+
+_EX = int(os.environ.get("REPRO_PROPERTY_EXAMPLES", "10"))
+DIST = ShiftedExponential(mu=1e-3, t0=50.0)
+N = 6
+COSTS = np.asarray([3.0, 1.0, 2.0, 5.0, 1.0, 2.0, 4.0])
+
+
+def _plan(scheme="xt", n=N, env=DIST):
+    return Plan.build(COSTS, env, n, scheme=scheme)
+
+
+def _rand_env(rng) -> Env:
+    """A random worker population, possibly heterogeneous + faulted."""
+    kind = int(rng.integers(0, 3))
+    if kind == 0:
+        env = Env.iid(DIST, N)
+    elif kind == 1:
+        env = Env.iid(LogNormalStraggler(mu_log=3.0, sigma_log=0.6,
+                                         shift=20.0), N)
+    else:
+        dists = [ShiftedExponential(mu=1e-3 * float(rng.uniform(0.5, 3.0)),
+                                    t0=50.0) for _ in range(N)]
+        env = Env.coerce(dists, N)
+    if rng.integers(0, 2):
+        env = env.with_faults(
+            DegradedWorker(int(rng.integers(0, N)),
+                           float(rng.uniform(1.5, 6.0)),
+                           from_round=int(rng.integers(0, 10))))
+    return env
+
+
+# ---------------------------------------------------------- schedule layer
+def test_level_schedule_matches_leaf_tau():
+    plan = _plan("xt")
+    sched = schedule_from_plan_levels(plan)
+    assert len(sched) == len(plan.used_levels)
+    rng = np.random.default_rng(0)
+    t = DIST.sample(rng, (20, N))
+    res = ClusterSim(sched, DIST, N, wave=False).run(rounds=20, times=t)
+    durs = res.round_durations()
+    want = np.asarray([plan.tau(row) for row in t])
+    np.testing.assert_allclose(durs, want, rtol=1e-9)
+
+
+def test_level_schedule_rejects_nonmonotone_levels():
+    fake = types.SimpleNamespace(
+        leaf_levels=np.asarray([2, 1, 0]), leaf_costs=np.asarray([1.0, 1, 1]),
+        used_levels=np.asarray([0, 1, 2]), total_units=10)
+    with pytest.raises(ValueError, match="nondecreasing"):
+        schedule_from_plan_levels(fake)
+
+
+@settings(max_examples=2 * _EX, deadline=None)
+@given(st.data())
+def test_wave_staleness0_event_identical_to_barrier(data):
+    """The staleness-0 gate collapses the wave engine onto the barrier
+    engine: decode times AND round completion times match exactly,
+    under random envs, faults, and master-side costs."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    env = _rand_env(rng)
+    plan = _plan(data.draw(st.sampled_from(["xt", "xf"])), env=env)
+    sched = schedule_from_plan_levels(plan)
+    upd = data.draw(st.sampled_from([0.0, 7.0]))
+    lat = data.draw(st.sampled_from([0.0, 3.0]))
+    kw = dict(update_cost=upd, broadcast_latency=lat)
+    seed = int(rng.integers(0, 2**31))
+    bar = ClusterSim(sched, env, N, seed=seed, wave=False, **kw).run(rounds=12)
+    wav = ClusterSim(sched, env, N, seed=seed, wave=True, staleness=0,
+                     **kw).run(rounds=12)
+    assert np.array_equal(bar.decode_times, wav.decode_times)
+    assert np.array_equal(bar.round_done, wav.round_done)
+    tr = wav.wave_trace()
+    assert np.array_equal(tr.realized_staleness(),
+                          np.zeros(tr.rounds(), np.int64))
+
+
+# ------------------------------------------------------------- trace layer
+@settings(max_examples=2 * _EX, deadline=None)
+@given(st.data())
+def test_wave_trace_invariants(data):
+    """Staleness bound, version window, deliverer-set sizes, update
+    placement, and JSON round-trip — over random envs and k."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 10_000)))
+    env = _rand_env(rng)
+    plan = _plan("xt", env=env)
+    k = data.draw(st.integers(0, 3))
+    upd = data.draw(st.sampled_from([0.0, 5.0]))
+    res = ClusterSim(schedule_from_plan_levels(plan), env, N,
+                     seed=int(rng.integers(0, 2**31)), wave=True,
+                     staleness=k, update_cost=upd).run(rounds=10)
+    tr = res.wave_trace()
+    assert tr.rounds() == 10 and tr.staleness == k
+    assert tr.realized_staleness().max() <= k
+    n_used = len(plan.used_levels)
+    by_kind = {"dispatch": [], "decode": [], "update": []}
+    for ev in tr.events:
+        by_kind[ev.kind].append(ev)
+    assert len(by_kind["dispatch"]) == len(by_kind["update"]) == 10
+    assert len(by_kind["decode"]) == 10 * n_used
+    for ev in by_kind["dispatch"]:
+        assert ev.round - 1 - k <= ev.version <= ev.round - 1
+    for ev in by_kind["decode"]:
+        s = int(plan.used_levels[ev.pos])
+        assert len(ev.workers) == N - s
+        assert list(ev.workers) == sorted(ev.workers)
+    for ev in by_kind["update"]:
+        assert ev.t == pytest.approx(res.round_done[ev.round] + upd)
+    # events arrive sorted by the deterministic tie-break key
+    keys = [ev.sort_key() for ev in tr.events]
+    assert keys == sorted(keys)
+    # JSON round-trip is exact
+    assert WaveTrace.from_dict(json.loads(json.dumps(tr.to_dict()))) == tr
+
+
+@pytest.mark.parametrize("n_slow", range(0, 4))
+def test_decode_sets_exact_per_straggler_count(n_slow):
+    """At staleness 0, for every straggler count the realized deliverer
+    sets reproduce ``plan.decode_weights`` exactly — the trace's decode
+    rows ARE the barrier's decode rows, bit for bit."""
+    plan = _plan("xt")
+    assert plan.s_max >= 3   # the parametrization covers 0..s_max
+    rng = np.random.default_rng(7 + n_slow)
+    t = 50.0 + rng.uniform(0.0, 5.0, size=(6, N))
+    slow = rng.permuted(np.arange(N))[:n_slow]
+    t[:, slow] += 1e4 * (1.0 + np.arange(n_slow))
+    res = ClusterSim(schedule_from_plan_levels(plan), None, N,
+                     wave=True, staleness=0).run(rounds=6, times=t)
+    tr = res.wave_trace()
+    for r in range(6):
+        want = plan.decode_weights(t[r])
+        got = np.zeros_like(want)
+        for ev in tr.events:
+            if ev.kind == "decode" and ev.round == r:
+                s = int(plan.used_levels[ev.pos])
+                assert set(slow).isdisjoint(ev.workers) or n_slow > s
+                got[ev.pos] = plan.codes.decode(
+                    s, np.asarray(ev.workers, np.int64))
+        assert np.array_equal(got, want)
+
+
+def test_wave_overlaps_serialized_update():
+    """The wave's realizable win: with a serialized master-side
+    update cost, staleness >= 1 finishes the same rounds strictly
+    earlier than the barrier."""
+    plan = _plan("xt")
+    sched = schedule_from_plan_levels(plan)
+    rng = np.random.default_rng(3)
+    t = DIST.sample(rng, (30, N))
+    upd = 0.3 * plan.tau(t[0])
+    bar = ClusterSim(sched, None, N, wave=False, update_cost=upd).run(
+        rounds=30, times=t)
+    wav = ClusterSim(sched, None, N, wave=True, staleness=1,
+                     update_cost=upd).run(rounds=30, times=t)
+    assert wav.round_done[-1] < bar.round_done[-1]
+
+
+# ----------------------------------------------------------- trainer layer
+jax = pytest.importorskip("jax")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    from repro.configs import get_config
+    from repro.train.trainer import TrainConfig
+
+    cfg = get_config("gc-lm-110m").reduced(n_layers=1, d_model=64)
+    cfg_t = TrainConfig(total_steps=16, warmup=2)
+    return cfg, cfg_t, Env.iid(DIST, 4)
+
+
+def _tree_hash(tree) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(tree):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def _rng_hash(rng: np.random.Generator) -> str:
+    return json.dumps(rng.bit_generator.state, sort_keys=True)
+
+
+def _trainer(tiny, **kw):
+    from repro.train.trainer import Trainer
+
+    cfg, cfg_t, env = tiny
+    return Trainer(cfg, cfg_t, env, global_batch=4, seed=0, **kw)
+
+
+def test_wave_staleness0_bit_identical_to_barrier(tiny):
+    from repro.train.wave import WaveConfig
+
+    bar = _trainer(tiny)
+    sb, _ = bar.run(6, log_every=0)
+    wav = _trainer(tiny, wave=WaveConfig(staleness=0, update_cost=3.0,
+                                         broadcast_latency=1.0))
+    sw, _ = wav.run(6, log_every=0)
+    assert _tree_hash((sb.params, sb.opt)) == _tree_hash((sw.params, sw.opt))
+    assert int(sb.step) == int(sw.step) == 6
+    assert _rng_hash(bar.sim.rng) == _rng_hash(wav.sim.rng)
+    assert len(bar.sim.ledger) == len(wav.sim.ledger) == 6
+    for rb, rw in zip(bar.sim.ledger, wav.sim.ledger):
+        assert np.array_equal(rb["times"], rw["times"])
+        assert rb["tau_coded"] == rw["tau_coded"]
+        assert rb["tau_uncoded"] == rw["tau_uncoded"]
+    assert [m["loss"] for m in bar.history] == \
+        [m["loss"] for m in wav.history]
+
+
+def test_wave_staleness1_executes_simulator_order(tiny):
+    from repro.train.wave import WaveConfig
+
+    wav = _trainer(tiny, wave=WaveConfig(staleness=1, update_cost=3.0,
+                                         broadcast_latency=1.0))
+    sw, _ = wav.run(6, log_every=0)
+    assert int(sw.step) == 6 and len(wav.history) == 6
+    [trace], [log] = wav.wave.traces, wav.wave.executed
+    # the realized event order IS the simulator's trace, event for event
+    assert log == list(trace.events)
+    rs = trace.realized_staleness()
+    assert rs.max() <= 1
+    # the per-step staleness metric mirrors the trace
+    assert [m["staleness"] for m in wav.history] == \
+        [int(v) for v in rs]
+    assert all(np.isfinite(m["loss"]) for m in wav.history)
+
+
+def test_wave_staleness1_faulted_env(tiny):
+    """Fault injection (mid-run degradation) flows through the wave
+    loop's pre-drawn time stream identically to the barrier ledger."""
+    from repro.train.wave import WaveConfig
+
+    cfg, cfg_t, _ = tiny
+    env = Env.iid(DIST, 4).with_faults(DegradedWorker(1, 5.0, from_round=3))
+    bar = _trainer((cfg, cfg_t, env))
+    bar.run(6, log_every=0)
+    wav = _trainer((cfg, cfg_t, env),
+                   wave=WaveConfig(staleness=1, update_cost=2.0))
+    wav.run(6, log_every=0)
+    tb = np.stack([r["times"] for r in bar.sim.ledger])
+    tw = np.stack([r["times"] for r in wav.sim.ledger])
+    assert np.array_equal(tb, tw)   # same draws, same degradation fold-in
+    # the fold-in is indexed by absolute round, not segment-relative
+    assert env.degradation_factors(2)[1] == 1.0
+    assert env.degradation_factors(3)[1] == 5.0
+
+
+def test_wave_quiesce_on_adaptive_swap(tiny):
+    """An accepted re-plan quiesces in-flight waves: dispatched rounds
+    drain under the old plan, the swap binds at the boundary, the
+    ledger/history stay contiguous, staleness stays bounded."""
+    from repro.adapt import AdaptConfig
+    from repro.train.wave import WaveConfig
+
+    cfg, cfg_t, _ = tiny
+    env = Env.iid(DIST, 4).with_faults(
+        DegradedWorker(0, 8.0, from_round=16),
+        DegradedWorker(1, 8.0, from_round=16))
+    ad = AdaptConfig(window=16, min_rounds=8, check_every=4, min_gain=0.0)
+    wav = _trainer((cfg, cfg_t, env), adapt=ad,
+                   wave=WaveConfig(staleness=2, update_cost=3.0))
+    s, _ = wav.run(48, log_every=0)
+    assert int(s.step) == 48
+    assert len(wav.history) == len(wav.sim.ledger) == 48
+    assert len(wav.controller.swaps) >= 1
+    assert wav.wave.swap_rounds, "swap never bound at a quiesce boundary"
+    assert len(wav.wave.traces) == len(wav.wave.executed) >= 2
+    for trace in wav.wave.traces:
+        assert trace.realized_staleness().max() <= 2
+    # drained segment: executed events are a prefix-closed subset of the
+    # trace (no event of an undispatched round ran)
+    first_log = wav.wave.executed[0]
+    executed_rounds = {e.round for e in first_log}
+    assert executed_rounds == set(range(wav.wave.swap_rounds[0]))
+    # post-swap segment re-traced under the new plan
+    assert wav.plan is wav.controller.plan
+    assert sum(t.rounds() for t in wav.wave.traces) >= 48
+
+
+def test_combine_level_union_matches_full_combine(tiny):
+    """Per-level combine (the wave's decode-event unit) unions to the
+    all-levels fused combine bitwise."""
+    import jax.numpy as jnp
+
+    from repro.train.coded import combine_grads, combine_level
+    from repro.train.state import init_train_state
+
+    cfg, _, env = tiny
+    state, _ = init_train_state(cfg, jax.random.PRNGKey(0))
+    plan = Plan.build(state.params, env, scheme="xt")
+    rng = np.random.default_rng(0)
+    k = plan.s_max + 1
+    grads = jax.tree.map(
+        lambda l: jnp.asarray(rng.standard_normal((plan.n_workers, k)
+                                                  + l.shape), jnp.float32),
+        state.params)
+    dec_w = plan.decode_weights(DIST.sample(rng, (plan.n_workers,)))
+    full = combine_grads(plan, grads, dec_w, pipeline="flat")
+    full_leaves = jax.tree.leaves(full)
+    got = {}
+    for li in range(len(plan.used_levels)):
+        got.update(combine_level(plan, grads, li, dec_w[li]))
+    assert sorted(got) == list(range(len(full_leaves)))
+    for j, leaf in enumerate(full_leaves):
+        assert np.array_equal(np.asarray(got[j]), np.asarray(leaf))
+
+
+def test_wave_rejects_death_faults(tiny):
+    from repro.core import WorkerDeath
+    from repro.train.wave import WaveConfig
+
+    cfg, cfg_t, _ = tiny
+    env = Env.iid(DIST, 4).with_faults(WorkerDeath(0, at_round=3))
+    with pytest.raises(ValueError, match="WorkerDeath"):
+        _trainer((cfg, cfg_t, env), wave=WaveConfig(staleness=1))
+
+
+def test_wave_config_validation():
+    from repro.train.wave import WaveConfig
+
+    with pytest.raises(ValueError, match="staleness"):
+        WaveConfig(staleness=-1)
+    with pytest.raises(ValueError, match=">= 0"):
+        WaveConfig(update_cost=-1.0)
+    assert WaveConfig(staleness=None).cluster_config().staleness is None
+
+
+# ------------------------------------------------------------------- spmd
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_spmd(code: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.spmd
+def test_wave_staleness0_bit_identical_spmd():
+    res = _run_spmd(textwrap.dedent("""
+        import hashlib, json, jax, numpy as np
+        from repro.configs import get_config
+        from repro.core import Env
+        from repro.core.distributions import ShiftedExponential
+        from repro.dist.sharding import use_mesh, make_rules
+        from repro.train.trainer import Trainer, TrainConfig
+        from repro.train.wave import WaveConfig
+
+        def th(t):
+            h = hashlib.sha256()
+            for l in jax.tree.leaves(t):
+                h.update(np.asarray(l).tobytes())
+            return h.hexdigest()
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        cfg = get_config("gc-lm-110m").reduced(n_layers=1, d_model=128)
+        cfg_t = TrainConfig(total_steps=8, warmup=2)
+        env = Env.iid(ShiftedExponential(mu=1e-3, t0=50.0), 4)
+        with use_mesh(mesh, make_rules(cfg)):
+            bar = Trainer(cfg, cfg_t, env, global_batch=4, seed=0,
+                          mesh=mesh, mode="spmd")
+            sb, _ = bar.run(3, log_every=0)
+            wav = Trainer(cfg, cfg_t, env, global_batch=4, seed=0,
+                          mesh=mesh, mode="spmd",
+                          wave=WaveConfig(staleness=0, update_cost=3.0))
+            sw, _ = wav.run(3, log_every=0)
+            wv1 = Trainer(cfg, cfg_t, env, global_batch=4, seed=0,
+                          mesh=mesh, mode="spmd",
+                          wave=WaveConfig(staleness=1, update_cost=3.0))
+            s1, _ = wv1.run(3, log_every=0)
+        print(json.dumps({
+            "match": th((sb.params, sb.opt)) == th((sw.params, sw.opt)),
+            "steps": int(sw.step), "k1_steps": int(s1.step),
+            "k1_stale": max(m["staleness"] for m in wv1.history),
+            "devices": len(jax.devices())}))
+    """))
+    assert res["devices"] == 8
+    assert res["match"], "spmd wave k=0 diverged from barrier"
+    assert res["steps"] == 3 and res["k1_steps"] == 3
+    assert res["k1_stale"] <= 1
