@@ -17,38 +17,24 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== repo hygiene =="
-if git ls-files '*.pyc' | grep -q .; then
-  echo "check.sh: tracked .pyc files (git rm --cached them):" >&2
-  git ls-files '*.pyc' >&2
-  exit 1
-fi
-echo "no tracked .pyc files"
-# committed perf rows live in BENCH_*.json only; per-run dumps
-# (bench_smoke.json, scratch bench output) belong in .gitignore, not
-# the tree — a tracked one silently goes stale and reads as current.
-stray="$(git ls-files '*.json' | grep -Ei '(bench|smoke)' | grep -Ev '^BENCH_[A-Za-z0-9_]+\.json$' || true)"
-if [[ -n "$stray" ]]; then
-  echo "check.sh: tracked bench/smoke artifacts outside BENCH_*.json (git rm --cached them):" >&2
-  echo "$stray" >&2
-  exit 1
-fi
-echo "no stray tracked bench artifacts"
-# the committed async headline must stay at or above the gate the
-# benchmark enforces (benchmarks/wave_step.py MIN_SPEEDUP_FULL) — a
-# regenerated BENCH_async.json below it should fail here, not ship.
-python - <<'EOF'
-import json
-speedup = json.load(open("BENCH_async.json"))["speedup"]
-assert speedup >= 1.2, f"BENCH_async.json headline {speedup:.3f}x < 1.2x"
-print(f"BENCH_async.json headline {speedup:.3f}x >= 1.2x")
-EOF
+echo "== repo hygiene (repro.lint RH001-RH003) =="
+# tracked .pyc, stray bench/smoke JSON outside BENCH_*.json, and the
+# BENCH_async.json headline floor — formerly inline bash/grep here,
+# now rules in src/repro/lint/hygiene.py (stdlib-only, no jax import).
+python -m repro.lint --hygiene
 
-# tier-1 passed-count baseline as of PR 7 (PR 6: 318; PR 5: 280; PR 4:
-# 255; PR 3: 237; PR 2: 208; PR 1: 143; seed: 36).  Bump this when a
-# PR adds tests — it is what catches silently lost/uncollected files,
-# not just failures.
-BASELINE=352
+echo
+echo "== contract lint (repro.lint RL001-RL007) =="
+# retrace / PRNG / side-effect / collective-axis / tiling / deprecation
+# / env-coercion contracts, AST-checked against lint-baseline.json
+# (docs/LINT.md).
+python -m repro.lint src tests benchmarks
+
+# tier-1 passed-count baseline as of PR 8 (PR 7: 352; PR 6: 318; PR 5:
+# 280; PR 4: 255; PR 3: 237; PR 2: 208; PR 1: 143; seed: 36).  Bump
+# this when a PR adds tests — it is what catches silently
+# lost/uncollected files, not just failures.
+BASELINE=383
 # tests carrying @pytest.mark.spmd (registered in pytest.ini): the
 # multi-device subprocess tests the fast lane deselects.
 SPMD_COUNT=8

@@ -1,0 +1,43 @@
+"""Shared one-shot deprecation machinery.
+
+The legacy shims (``repro.train.coded`` entry points, ``serve.engine.
+generate``) warn once per process per key, naming their replacement.
+They warn with ``ReproDeprecationWarning`` — a ``DeprecationWarning``
+subclass — so the firewall can be enforced *dynamically* as well as
+statically (repro.lint RL006): pytest.ini promotes this category to an
+error when the warning attributes to a ``repro.*`` module, proving at
+every tier-1 run that no internal code path touches a shim, while
+test- and user-triggered shim use stays a plain warning.
+
+``warn_once(key, message, stacklevel=3)`` attributes the warning to
+the *caller of the shim* (warn_once → shim → caller); a helper that
+adds a frame between the shim and warn_once passes ``stacklevel=4`` so
+attribution stays on the external caller rather than the shim module
+itself.
+"""
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["ReproDeprecationWarning", "warn_once", "reset_warned"]
+
+
+class ReproDeprecationWarning(DeprecationWarning):
+    """A repro legacy-shim deprecation.  Promoted to an error for
+    internal (``repro.*``) callers in tier-1 — see pytest.ini."""
+
+
+_WARNED: set = set()
+
+
+def warn_once(key: str, message: str, stacklevel: int = 3) -> None:
+    """Warn once per process for ``key``; later calls are silent."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, ReproDeprecationWarning, stacklevel=stacklevel)
+
+
+def reset_warned() -> None:
+    """Forget which one-shot keys already fired (test hook)."""
+    _WARNED.clear()

@@ -137,15 +137,21 @@ def main():
                                  "engine does not take aux_inputs)")
             _serve_stream(cfg, params, args)
             return
-        prompt = jax.random.randint(key, (args.batch, args.prompt_len),
+        # distinct streams per purpose: `key` initialized the model above,
+        # so prompt and aux inputs fold in their own counters instead of
+        # re-consuming it (identical-randomness class, repro.lint RL002).
+        prompt = jax.random.randint(jax.random.fold_in(key, 1),
+                                    (args.batch, args.prompt_len),
                                     0, cfg.vocab)
         aux = None
         if cfg.vision is not None:
-            aux = jax.random.normal(key, (args.batch, cfg.vision.n_patches,
-                                          cfg.vision.d_vision))
+            aux = jax.random.normal(jax.random.fold_in(key, 2),
+                                    (args.batch, cfg.vision.n_patches,
+                                     cfg.vision.d_vision))
         if cfg.encoder is not None:
-            aux = jax.random.normal(key, (args.batch, cfg.encoder.n_frames,
-                                          cfg.d_model))
+            aux = jax.random.normal(jax.random.fold_in(key, 3),
+                                    (args.batch, cfg.encoder.n_frames,
+                                     cfg.d_model))
         t0 = time.time()
         out = generate(cfg, params, prompt, max_new=args.new,
                        temperature=args.temperature, aux_inputs=aux)

@@ -1,0 +1,35 @@
+"""repro.lint — AST-based contract linter for this repository.
+
+Every headline guarantee in this repo (exact decode under stragglers,
+bit-identical wave/barrier equivalence, batch-composition-independent
+key streams, retrace-free hot paths) rests on conventions that runtime
+tests only probe where someone wrote the exact test.  This package
+enforces them *statically*, on every file, with no jax import:
+
+  * ``engine``  — file walker, per-module call graph, traced-context
+    propagation (which functions are reachable from ``jax.jit`` /
+    ``shard_map`` / ``pl.pallas_call``), suppression comments, and the
+    committed-baseline mechanism.
+  * ``rules``   — the rule catalogue RL001-RL007 (see docs/LINT.md for
+    the motivating incident behind each rule).
+  * ``hygiene`` — repo-state checks (RH001-RH003) migrated from the
+    old bash greps in scripts/check.sh.
+  * ``cli``     — ``python -m repro.lint [paths] [--json] [--hygiene]
+    [--baseline lint-baseline.json]``.
+
+The package is stdlib-only by design: CI runs it in a lane with no
+jax installed, and ``import repro.lint`` must never pay for the model
+stack.
+"""
+from .engine import (  # noqa: F401
+    Baseline,
+    Finding,
+    lint_file,
+    lint_paths,
+    lint_source,
+)
+from .hygiene import run_hygiene  # noqa: F401
+from .rules import RULES  # noqa: F401
+
+__all__ = ["Baseline", "Finding", "RULES", "lint_file", "lint_paths",
+           "lint_source", "run_hygiene"]

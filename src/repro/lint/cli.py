@@ -1,0 +1,104 @@
+"""``python -m repro.lint`` — the CLI.
+
+    python -m repro.lint src tests benchmarks        # static rules
+    python -m repro.lint --hygiene                   # repo-state checks
+    python -m repro.lint src --json > findings.json  # machine-readable
+    python -m repro.lint src --baseline lint-baseline.json
+    python -m repro.lint src --no-baseline           # ignore committed one
+
+With no paths and no --hygiene, lints the default tree
+(src tests benchmarks, whichever exist).  ``lint-baseline.json`` at the
+repo root is auto-loaded unless --no-baseline or an explicit
+--baseline is given.  Exit status: 0 clean, 1 findings, 2 bad usage.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from .engine import Baseline, Finding, lint_paths
+from .hygiene import run_hygiene
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+DEFAULT_BASELINE = "lint-baseline.json"
+
+
+def _find_root(start: Path) -> Path:
+    for cand in (start.resolve(), *start.resolve().parents):
+        if (cand / ".git").exists() or (cand / DEFAULT_BASELINE).exists():
+            return cand
+    return start
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="AST-based contract linter for this repo "
+                    "(rules RL001-RL007, hygiene RH001-RH003; docs/LINT.md)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (default: "
+                         f"{' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--json", action="store_true",
+                    help="emit findings as JSON on stdout")
+    ap.add_argument("--hygiene", action="store_true",
+                    help="run repo-state hygiene checks (RH001-RH003); "
+                         "combines with paths, or runs alone when no "
+                         "paths are given")
+    ap.add_argument("--baseline", metavar="PATH",
+                    help="grandfathered-findings JSON "
+                         f"(default: {DEFAULT_BASELINE} at the repo root "
+                         "if present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any committed baseline")
+    args = ap.parse_args(argv)
+
+    root = _find_root(Path.cwd())
+    hygiene_only = args.hygiene and not args.paths
+    findings: List[Finding] = []
+
+    if not hygiene_only:
+        paths = args.paths or [p for p in DEFAULT_PATHS if (root / p).is_dir()]
+        if not paths:
+            ap.error("no paths given and none of the default paths exist")
+        baseline = None
+        if not args.no_baseline:
+            bl_path = Path(args.baseline) if args.baseline \
+                else root / DEFAULT_BASELINE
+            if bl_path.exists():
+                baseline = Baseline.load(bl_path)
+            elif args.baseline:
+                ap.error(f"baseline not found: {bl_path}")
+        try:
+            findings.extend(lint_paths(paths, baseline=baseline,
+                                       relative_to=root))
+        except FileNotFoundError as e:
+            ap.error(str(e))
+        if baseline is not None and not args.json:
+            for stale in baseline.unused():
+                print(f"note: stale baseline entry (matched nothing): "
+                      f"{stale['rule']} {stale['path']}", file=sys.stderr)
+
+    if args.hygiene:
+        findings.extend(run_hygiene(root))
+
+    if args.json:
+        json.dump({"findings": [f.to_dict() for f in findings],
+                   "count": len(findings)}, sys.stdout, indent=2)
+        sys.stdout.write("\n")
+    else:
+        for f in findings:
+            print(f.render())
+        label = "hygiene" if hygiene_only else "lint"
+        if findings:
+            print(f"repro.lint: {len(findings)} {label} finding(s)",
+                  file=sys.stderr)
+        else:
+            print(f"repro.lint: {label} clean")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

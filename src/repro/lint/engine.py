@@ -1,0 +1,435 @@
+"""Rule engine: AST context, traced-context propagation, suppressions,
+baseline.
+
+One ``ModuleContext`` is built per file and handed to every rule.  It
+precomputes what the rules share:
+
+  * a parent map (``ast`` has no parent pointers),
+  * the module-level namespace (assigned names, simple int constants,
+    import aliases),
+  * every function-ish node (def / async def / lambda) with its
+    enclosing-function chain,
+  * a bare-name call graph between module-local functions,
+  * the **traced set**: functions whose bodies execute under a jax
+    trace — roots are functions decorated with / passed to ``jax.jit``,
+    ``jax.shard_map``, ``pl.pallas_call``, ``jax.vmap``, ``jax.grad``,
+    ``lax.scan``-family wrappers; tracedness propagates to module-local
+    callees to a fixpoint.  (Propagation is per-module: a function
+    jitted from *another* module is not marked.  Rules that key on
+    tracedness are therefore conservative — they miss cross-module
+    cases rather than over-fire.)
+
+Suppression: ``# repro-lint: disable=RL003`` (comma list) on the
+finding's line, or on the directly preceding line when that line is a
+standalone comment.  Baseline: a committed JSON list of grandfathered
+findings matched by (rule, path suffix, message substring) — line
+numbers deliberately do not participate, so unrelated edits above a
+grandfathered site don't invalidate the entry.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["Finding", "Baseline", "ModuleContext", "lint_source",
+           "lint_file", "lint_paths", "iter_python_files"]
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Z]{2}\d{3}(?:\s*,\s*[A-Z]{2}\d{3})*)")
+
+#: directories the recursive walker never descends into.  Lint
+#: fixtures are deliberately-broken files — they are linted only when
+#: named explicitly (tests/test_lint.py does), never on a tree walk.
+SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", "lint_fixtures"}
+
+# Wrapper callables whose function argument executes under a jax trace.
+# Matched on the dotted tail; the chain head must look jax-ish (see
+# ``_is_trace_wrapper``) so a builtin ``map(f, xs)`` never matches.
+_TRACE_WRAPPER_TAILS = {
+    "jit", "pallas_call", "shard_map", "vmap", "pmap", "grad",
+    "value_and_grad", "scan", "while_loop", "fori_loop", "cond", "map",
+    "checkpoint", "remat", "custom_vjp", "custom_jvp", "named_call",
+}
+_JAXISH_HEADS = {"jax", "jnp", "lax", "pl", "pallas", "plgpu", "pltpu"}
+
+# Decorators that make per-call construction inside the function safe:
+# the function's result is memoized (lru_cache/cache) or the function
+# itself is the jit entry (its trace is cached by jax on static args).
+_CACHING_DECORATOR_TAILS = {"lru_cache", "cache", "cached_property"}
+_JIT_DECORATOR_TAILS = {"jit", "pallas_call"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint finding.  ``path`` is repo-relative posix where possible."""
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def sort_key(self) -> tuple:
+        return (self.path, self.line, self.col, self.rule)
+
+
+class Baseline:
+    """Committed grandfathered findings (``lint-baseline.json``).
+
+    Entries: ``{"rule": "RL00x", "path": "src/repro/...", "match":
+    "substring", "justification": "..."}`` — ``match`` is optional and
+    tested against the finding message; ``path`` matches on posix
+    suffix so the baseline works from any checkout root.
+    """
+
+    def __init__(self, entries: Sequence[dict]):
+        for e in entries:
+            if "rule" not in e or "path" not in e:
+                raise ValueError(f"baseline entry needs rule+path: {e!r}")
+            if "justification" not in e:
+                raise ValueError(f"baseline entry needs a justification: {e!r}")
+        self.entries = list(entries)
+        self._hits = [0] * len(self.entries)
+
+    @classmethod
+    def load(cls, path) -> "Baseline":
+        return cls(json.loads(Path(path).read_text()))
+
+    def matches(self, f: Finding) -> bool:
+        for i, e in enumerate(self.entries):
+            if e["rule"] != f.rule:
+                continue
+            p = f.path.replace("\\", "/")
+            if not (p == e["path"] or p.endswith("/" + e["path"])):
+                continue
+            if e.get("match") and e["match"] not in f.message:
+                continue
+            self._hits[i] += 1
+            return True
+        return False
+
+    def unused(self) -> List[dict]:
+        """Entries that matched nothing this run (stale — prune them)."""
+        return [e for e, h in zip(self.entries, self._hits) if h == 0]
+
+
+# --------------------------------------------------------------- AST helpers
+def dotted(node) -> Optional[Tuple[str, ...]]:
+    """('jax','lax','psum') for ``jax.lax.psum``; None if not a pure
+    Name/Attribute chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _const_strings(node) -> List[Tuple[str, ast.AST]]:
+    """Every string literal under ``node`` with its owning node."""
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            out.append((n.value, n))
+    return out
+
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+class ModuleContext:
+    def __init__(self, source: str, path: str, tree: Optional[ast.AST] = None):
+        self.source = source
+        self.path = path.replace("\\", "/")
+        self.tree = tree if tree is not None else ast.parse(source)
+        self.lines = source.splitlines()
+
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self.parents[child] = parent
+
+        self.functions: List[ast.AST] = [
+            n for n in ast.walk(self.tree) if isinstance(n, _FUNC_NODES)]
+        self.funcs_by_name: Dict[str, List[ast.AST]] = {}
+        for fn in self.functions:
+            if not isinstance(fn, ast.Lambda):
+                self.funcs_by_name.setdefault(fn.name, []).append(fn)
+
+        self.module_names: Set[str] = set()
+        self.module_consts: Dict[str, int] = {}
+        self.import_modules: Dict[str, str] = {}   # alias -> module path
+        self.import_froms: Dict[str, Tuple[str, str]] = {}  # name -> (mod, orig)
+        self._scan_module_scope()
+
+        self.suppressions = self._scan_suppressions()
+        self.traced: Set[ast.AST] = self._compute_traced()
+
+    # ------------------------------------------------------------ structure
+    def _scan_module_scope(self) -> None:
+        for stmt in self.tree.body:
+            if isinstance(stmt, ast.Import):
+                for a in stmt.names:
+                    self.import_modules[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(stmt, ast.ImportFrom):
+                for a in stmt.names:
+                    self.import_froms[a.asname or a.name] = (
+                        stmt.module or "", a.name)
+                    self.module_names.add(a.asname or a.name)
+            elif isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                           else [stmt.target])
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            self.module_names.add(n.id)
+                value = getattr(stmt, "value", None)
+                if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                        and isinstance(stmt.targets[0], ast.Name)
+                        and isinstance(value, ast.Constant)
+                        and isinstance(value.value, int)):
+                    self.module_consts[stmt.targets[0].id] = value.value
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                self.module_names.add(stmt.name)
+        self.module_names |= set(self.import_modules)
+
+    def _scan_suppressions(self) -> Dict[int, Set[str]]:
+        out: Dict[int, Set[str]] = {}
+        for i, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out.setdefault(i, set()).update(rules)
+            # a standalone-comment directive covers the next line too
+            if line.lstrip().startswith("#"):
+                out.setdefault(i + 1, set()).update(rules)
+        return out
+
+    def suppressed(self, f: Finding) -> bool:
+        return f.rule in self.suppressions.get(f.line, ())
+
+    # ----------------------------------------------------------- navigation
+    def enclosing_function(self, node) -> Optional[ast.AST]:
+        n = self.parents.get(node)
+        while n is not None:
+            if isinstance(n, _FUNC_NODES):
+                return n
+            n = self.parents.get(n)
+        return None
+
+    def enclosing_functions(self, node) -> List[ast.AST]:
+        out, n = [], self.parents.get(node)
+        while n is not None:
+            if isinstance(n, _FUNC_NODES):
+                out.append(n)
+            n = self.parents.get(n)
+        return out
+
+    def in_loop(self, node) -> bool:
+        """Inside a for/while between ``node`` and its enclosing
+        function (or module).  Comprehensions do not count: building a
+        cache dict of jitted fns in one comprehension is construction,
+        not per-call re-construction."""
+        n = self.parents.get(node)
+        while n is not None and not isinstance(n, _FUNC_NODES):
+            if isinstance(n, (ast.For, ast.AsyncFor, ast.While)):
+                return True
+            n = self.parents.get(n)
+        return False
+
+    def resolve_int(self, node) -> Optional[int]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, int):
+            return node.value
+        if isinstance(node, ast.Name):
+            return self.module_consts.get(node.id)
+        return None
+
+    # -------------------------------------------------------- trace context
+    def _is_trace_wrapper(self, call: ast.Call) -> bool:
+        chain = dotted(call.func)
+        if chain is None or chain[-1] not in _TRACE_WRAPPER_TAILS:
+            return False
+        if len(chain) == 1:
+            mod, _ = self.import_froms.get(chain[0], ("", ""))
+            head = mod.split(".")[0]
+            return head in _JAXISH_HEADS or head == "repro" and "jax" in mod
+        return chain[0] in _JAXISH_HEADS or "jax" in chain[:-1]
+
+    def _funcs_in_expr(self, node, _resolving: Optional[Set[str]] = None
+                       ) -> List[ast.AST]:
+        """Function nodes referenced by an argument expression: bare
+        names resolving to local defs, lambdas, and the same through
+        nested wrapper calls (``jax.jit(jax.vmap(one))``),
+        ``functools.partial(kernel, ...)``, or a local assignment
+        (``kern = functools.partial(...)``; ``_resolving`` breaks
+        ``f = jax.jit(f)``-style cycles)."""
+        out: List[ast.AST] = []
+        if isinstance(node, ast.Lambda):
+            out.append(node)
+        elif isinstance(node, ast.Name):
+            cands = list(self.funcs_by_name.get(node.id, ()))
+            if len(cands) > 1:
+                # several same-named defs (e.g. one nested `worker` per
+                # entry point): prefer those visible from this scope
+                visible = set(self.enclosing_functions(node)) | {None}
+                scoped = [f for f in cands
+                          if self.enclosing_function(f) in visible]
+                cands = scoped or cands
+            out.extend(cands)
+            if not cands and node.id not in (_resolving or ()):
+                out.extend(self._funcs_in_local_assign(
+                    node, (_resolving or set()) | {node.id}))
+        elif isinstance(node, ast.Call):
+            chain = dotted(node.func)
+            if self._is_trace_wrapper(node) or (
+                    chain and chain[-1] == "partial"):
+                for a in node.args:
+                    out.extend(self._funcs_in_expr(a, _resolving))
+        return out
+
+    def _funcs_in_local_assign(self, name_node: ast.Name,
+                               _resolving: Set[str]) -> List[ast.AST]:
+        """Resolve a name with no matching def through Call/Lambda
+        assignments to it in the same enclosing function."""
+        fn = self.enclosing_function(name_node)
+        if fn is None:
+            return []
+        out: List[ast.AST] = []
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name) \
+                    and stmt.targets[0].id == name_node.id \
+                    and isinstance(stmt.value, (ast.Call, ast.Lambda)):
+                out.extend(self._funcs_in_expr(stmt.value, _resolving))
+        return out
+
+    def decorator_tails(self, fn) -> Set[str]:
+        """Dotted tails of decorators, descending into
+        ``functools.partial(jax.jit, ...)`` to include 'jit'."""
+        tails: Set[str] = set()
+        for dec in getattr(fn, "decorator_list", ()):
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            chain = dotted(target)
+            if chain:
+                tails.add(chain[-1])
+            if isinstance(dec, ast.Call):
+                d = dotted(dec.func)
+                if d and d[-1] == "partial" and dec.args:
+                    inner = dotted(dec.args[0])
+                    if inner:
+                        tails.add(inner[-1])
+        return tails
+
+    def _compute_traced(self) -> Set[ast.AST]:
+        traced: Set[ast.AST] = set()
+        # roots: decorated with jit-ish, or passed to a trace wrapper
+        for fn in self.functions:
+            if self.decorator_tails(fn) & _JIT_DECORATOR_TAILS:
+                traced.add(fn)
+        for call in (n for n in ast.walk(self.tree) if isinstance(n, ast.Call)):
+            if not self._is_trace_wrapper(call):
+                continue
+            for arg in list(call.args) + [k.value for k in call.keywords]:
+                traced.update(self._funcs_in_expr(arg))
+        # propagate to module-local callees, fixpoint
+        changed = True
+        while changed:
+            changed = False
+            for fn in list(traced):
+                body = fn.body if isinstance(fn.body, list) else [fn.body]
+                for stmt in body:
+                    for call in (n for n in ast.walk(stmt)
+                                 if isinstance(n, ast.Call)):
+                        name = None
+                        if isinstance(call.func, ast.Name):
+                            name = call.func.id
+                        elif isinstance(call.func, ast.Attribute) and \
+                                isinstance(call.func.value, ast.Name) and \
+                                call.func.value.id == "self":
+                            name = call.func.attr
+                        for callee in self.funcs_by_name.get(name or "", ()):
+                            if callee not in traced:
+                                traced.add(callee)
+                                changed = True
+        return traced
+
+    def is_traced(self, node) -> bool:
+        """Is ``node`` inside a function executing under a jax trace?"""
+        return any(fn in self.traced for fn in self.enclosing_functions(node))
+
+
+# ------------------------------------------------------------------ drivers
+def iter_python_files(paths: Iterable) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_file():
+            if p.suffix == ".py":
+                out.append(p)
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not (set(f.parts[:-1]) & SKIP_DIRS):
+                    out.append(f)
+        else:
+            raise FileNotFoundError(f"repro.lint: no such path: {p}")
+    return out
+
+
+def lint_source(source: str, path: str, rules=None,
+                baseline: Optional[Baseline] = None) -> List[Finding]:
+    """Lint one source blob.  ``path`` scopes path-sensitive rules
+    (RL006/RL007 apply under src/repro) and labels findings."""
+    if rules is None:
+        from .rules import RULES as rules
+    try:
+        ctx = ModuleContext(source, path)
+    except SyntaxError as e:
+        return [Finding("RL000", path.replace("\\", "/"),
+                        e.lineno or 0, e.offset or 0,
+                        f"syntax error: {e.msg}")]
+    findings: List[Finding] = []
+    for rule in rules:
+        for f in rule.check(ctx):
+            if ctx.suppressed(f):
+                continue
+            if baseline is not None and baseline.matches(f):
+                continue
+            findings.append(f)
+    return sorted(findings, key=Finding.sort_key)
+
+
+def lint_file(path, rules=None, baseline: Optional[Baseline] = None,
+              relative_to: Optional[Path] = None) -> List[Finding]:
+    p = Path(path)
+    label = p
+    if relative_to is not None:
+        try:
+            label = p.resolve().relative_to(Path(relative_to).resolve())
+        except ValueError:
+            label = p
+    return lint_source(p.read_text(), str(label).replace("\\", "/"),
+                       rules=rules, baseline=baseline)
+
+
+def lint_paths(paths: Iterable, rules=None,
+               baseline: Optional[Baseline] = None,
+               relative_to: Optional[Path] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for f in iter_python_files(paths):
+        findings.extend(lint_file(f, rules=rules, baseline=baseline,
+                                  relative_to=relative_to))
+    return sorted(findings, key=Finding.sort_key)

@@ -1,0 +1,89 @@
+"""Repo-state hygiene checks (RH001-RH003).
+
+These migrated from bash greps in ``scripts/check.sh`` so the lint
+engine is the single owner of repo hygiene — one implementation, one
+output format, no bash/python drift:
+
+  * RH001 — tracked ``.pyc`` files (43 of them shipped before PR 3's
+    cleanup; a tracked bytecode file silently shadows source edits).
+  * RH002 — tracked bench/smoke JSON outside ``BENCH_*.json``:
+    committed perf rows live in ``BENCH_*.json`` only; per-run dumps
+    (``bench_smoke.json``, scratch output) belong in .gitignore — a
+    tracked one silently goes stale and reads as current.
+  * RH003 — the committed ``BENCH_async.json`` headline must stay at
+    or above the wave benchmark's enforcement floor
+    (``benchmarks/wave_step.py`` ``MIN_SPEEDUP_FULL``): a regenerated
+    file below the gate should fail here, not ship.
+"""
+from __future__ import annotations
+
+import json
+import re
+import subprocess
+from pathlib import Path
+from typing import List, Optional
+
+from .engine import Finding
+
+__all__ = ["run_hygiene", "ASYNC_HEADLINE_FLOOR"]
+
+#: keep in sync with benchmarks/wave_step.py MIN_SPEEDUP_FULL
+ASYNC_HEADLINE_FLOOR = 1.2
+
+_BENCHISH = re.compile(r"(bench|smoke)", re.IGNORECASE)
+_COMMITTED = re.compile(r"^BENCH_[A-Za-z0-9_]+\.json$")
+
+
+def _repo_root(start: Optional[Path] = None) -> Path:
+    p = (Path(start) if start else Path.cwd()).resolve()
+    for cand in (p, *p.parents):
+        if (cand / ".git").exists():
+            return cand
+    raise FileNotFoundError(f"repro.lint --hygiene: no .git above {p}")
+
+
+def _tracked_files(root: Path) -> List[str]:
+    out = subprocess.run(["git", "ls-files"], cwd=root, text=True,
+                         capture_output=True, check=True)
+    return [line for line in out.stdout.splitlines() if line]
+
+
+def run_hygiene(root=None) -> List[Finding]:
+    root = _repo_root(root)
+    tracked = _tracked_files(root)
+    findings: List[Finding] = []
+
+    for f in tracked:
+        if f.endswith(".pyc"):
+            findings.append(Finding(
+                "RH001", f, 0, 0,
+                "tracked .pyc file — git rm --cached it (bytecode shadows "
+                "source edits)"))
+
+    for f in tracked:
+        name = f.rsplit("/", 1)[-1]
+        if f.endswith(".json") and _BENCHISH.search(f) \
+                and not _COMMITTED.match(name):
+            findings.append(Finding(
+                "RH002", f, 0, 0,
+                "tracked bench/smoke artifact outside BENCH_*.json — "
+                "git rm --cached it (per-run dumps go stale silently)"))
+
+    async_json = root / "BENCH_async.json"
+    if "BENCH_async.json" in tracked:
+        try:
+            speedup = float(json.loads(async_json.read_text())["speedup"])
+        except (OSError, KeyError, ValueError, json.JSONDecodeError) as e:
+            findings.append(Finding(
+                "RH003", "BENCH_async.json", 0, 0,
+                f"unreadable committed async headline ({e}) — regenerate "
+                "with benchmarks/wave_step.py"))
+        else:
+            if speedup < ASYNC_HEADLINE_FLOOR:
+                findings.append(Finding(
+                    "RH003", "BENCH_async.json", 0, 0,
+                    f"committed async headline {speedup:.3f}x is below the "
+                    f"{ASYNC_HEADLINE_FLOOR}x floor benchmarks/wave_step.py "
+                    "enforces — a regression must not ship as the pinned "
+                    "number"))
+    return findings

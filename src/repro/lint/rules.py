@@ -1,0 +1,738 @@
+"""The rule catalogue (RL001-RL007).
+
+Each rule encodes a contract this repo actually shipped a fix or a
+test for — docs/LINT.md records the motivating incident per rule.
+Rules are heuristic by design: they aim at zero false positives on the
+shipped tree, and anything deliberately kept is either inline-
+suppressed (``# repro-lint: disable=RLxxx``) or grandfathered in
+``lint-baseline.json`` with a justification.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Set, Tuple
+
+from .engine import (Finding, ModuleContext, _CACHING_DECORATOR_TAILS,
+                     _JIT_DECORATOR_TAILS, _const_strings, dotted)
+
+__all__ = ["Rule", "RULES", "rule_ids"]
+
+
+class Rule:
+    id: str = ""
+    title: str = ""
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: ModuleContext, node, message: str) -> Finding:
+        return Finding(self.id, ctx.path, getattr(node, "lineno", 0),
+                       getattr(node, "col_offset", 0), message)
+
+
+def _in_repo_src(ctx: ModuleContext) -> bool:
+    return "repro/" in ctx.path and "/tests/" not in ctx.path \
+        and not ctx.path.startswith("tests/")
+
+
+def _is_test_path(ctx: ModuleContext) -> bool:
+    parts = ctx.path.split("/")
+    return "tests" in parts or parts[-1].startswith("test_") \
+        or parts[-1] == "conftest.py"
+
+
+def _calls(tree) -> List[ast.Call]:
+    return [n for n in ast.walk(tree) if isinstance(n, ast.Call)]
+
+
+def _body_of(fn) -> list:
+    return fn.body if isinstance(fn.body, list) else [fn.body]
+
+
+# ------------------------------------------------------------------- RL001
+class RL001RetraceHazard(Rule):
+    """jit / pallas_call constructed per call or inside a loop.
+
+    Motivating incident: ``serve.engine.generate`` wrapped prefill and
+    decode in fresh ``jax.jit(lambda ...)`` closures on every request,
+    so every generation re-traced and re-compiled (fixed in PR 2 with
+    the ``lru_cache`` factories).  Safe shapes the rule recognizes:
+    module-level construction, jit-as-decorator, construction inside an
+    ``lru_cache``/``cache``-decorated factory, and dict-cache-managed
+    construction (the enclosing function stores into a ``*cache*``
+    container).  The constructed-and-invoked sub-check is skipped under
+    tests/ — a test body runs once, so a throwaway ``jax.jit(f)(x)``
+    there is not a hazard.
+    """
+    id = "RL001"
+    title = "uncached jit/pallas_call construction"
+
+    def _constructs(self, ctx, call) -> Optional[str]:
+        chain = dotted(call.func)
+        if not chain:
+            return None
+        if chain[-1] == "jit":
+            if len(chain) > 1 and chain[0] == "jax":
+                return "jax.jit"
+            if len(chain) == 1 and \
+                    ctx.import_froms.get("jit", ("",))[0] == "jax":
+                return "jax.jit"
+            return None
+        if chain[-1] == "pallas_call":
+            return "pl.pallas_call"
+        return None
+
+    def _cache_managed(self, ctx, fn) -> bool:
+        tails = ctx.decorator_tails(fn)
+        if tails & (_CACHING_DECORATOR_TAILS | _JIT_DECORATOR_TAILS):
+            return True
+        for stmt in _body_of(fn):
+            for n in ast.walk(stmt):
+                if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    targets = (n.targets if isinstance(n, ast.Assign)
+                               else [n.target])
+                    for t in targets:
+                        if isinstance(t, ast.Subscript):
+                            root = dotted(t.value)
+                            if root and any("cache" in part.lower()
+                                            for part in root):
+                                return True
+        return False
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        decorator_nodes: Set[ast.AST] = set()
+        for f in ctx.functions:
+            for dec in getattr(f, "decorator_list", ()):
+                decorator_nodes.update(ast.walk(dec))
+        for call in _calls(ctx.tree):
+            kind = self._constructs(ctx, call)
+            if kind is None or call in decorator_nodes:
+                continue
+            fns = ctx.enclosing_functions(call)
+            if not fns:        # module level: constructed once at import
+                continue
+            if any(self._cache_managed(ctx, f) for f in fns):
+                continue
+            if ctx.in_loop(call):
+                yield self.finding(
+                    ctx, call,
+                    f"{kind} constructed inside a loop — hoist it or cache "
+                    "it (functools.lru_cache factory or a keyed dict cache; "
+                    "see serve/engine.py)")
+                continue
+            parent = ctx.parents.get(call)
+            if kind == "jax.jit":
+                if _is_test_path(ctx):
+                    continue
+                if isinstance(parent, ast.Call) and parent.func is call:
+                    yield self.finding(
+                        ctx, call,
+                        "jax.jit(...) constructed and invoked in one "
+                        "expression — every call of the enclosing function "
+                        "re-traces and re-compiles; build the jitted "
+                        "callable once (module level, lru_cache factory, or "
+                        "a keyed dict cache)")
+            elif not ctx.is_traced(call):
+                yield self.finding(
+                    ctx, call,
+                    "pl.pallas_call constructed in a function that is "
+                    "neither jitted nor cache-managed — wrap the entry "
+                    "point in jax.jit (repo convention: "
+                    "@functools.partial(jax.jit, static_argnames=...)) "
+                    "or memoize the kernel")
+
+
+# ------------------------------------------------------------------- RL002
+_KEYISH_PARAM = ("key", "keys", "rng", "rng_key", "subkey", "prng")
+_KEY_SOURCES = {"PRNGKey", "split", "fold_in", "key", "key_data",
+                "wrap_key_data", "clone"}
+# sampling draws + split: a second use of the same key is identical
+# randomness.  fold_in is *derivation*, not consumption — fold_in(key, a)
+# and fold_in(key, b) with distinct counters is the recommended idiom —
+# so it only participates in the loop sub-rule (where a loop-invariant
+# fold_in derives the same key every iteration).
+_KEY_CONSUMERS = {
+    "normal", "uniform", "bernoulli", "categorical", "gumbel", "bits",
+    "randint", "permutation", "choice", "truncated_normal", "exponential",
+    "laplace", "poisson", "gamma", "beta", "dirichlet", "split",
+    "maxwell", "rademacher", "cauchy", "logistic", "orthogonal", "ball",
+}
+_KEY_DERIVERS = {"fold_in"}
+_HOST_ENTROPY = [
+    (("np", "random"), "np.random"),
+    (("numpy", "random"), "np.random"),
+    (("time", "time"), "time.time()"),
+    (("time", "perf_counter"), "time.perf_counter()"),
+    (("time", "monotonic"), "time.monotonic()"),
+    (("datetime", "now"), "datetime.now()"),
+]
+
+
+class RL002PRNGDiscipline(Rule):
+    """PRNG discipline: key reuse and host entropy under trace.
+
+    A ``jax.random`` key consumed twice without an intervening
+    ``split``/``fold_in`` reassignment yields *identical* randomness —
+    the bug class behind the PR 6 batched-``generate`` fix, where rows
+    past 0 silently shared row 0's sampling stream.  Host entropy
+    (``np.random``, stdlib ``random``, ``time.time``) inside traced
+    context is frozen into the compiled program at trace time: it looks
+    random on the first call and is a constant forever after.
+    """
+    id = "RL002"
+    title = "PRNG key reuse / host entropy under trace"
+
+    # -------------------------------------------------- key-reuse sub-rule
+    def _consumption(self, ctx, call, include_derivers=False) -> Optional[str]:
+        """Name of the key variable consumed by ``jax.random.f(key, …)``."""
+        chain = dotted(call.func)
+        allowed = _KEY_CONSUMERS | (_KEY_DERIVERS if include_derivers
+                                    else set())
+        if not chain or chain[-1] not in allowed:
+            return None
+        jax_random = (len(chain) >= 3 and chain[0] == "jax"
+                      and chain[-2] == "random")
+        if not jax_random and len(chain) == 2:
+            # `from jax import random [as jr]` style aliases
+            jax_random = ctx.import_froms.get(
+                chain[0], ("", ""))[:2] == ("jax", "random")
+        if not jax_random:
+            return None
+        key_arg = call.args[0] if call.args else None
+        for kw in call.keywords:
+            if kw.arg == "key":
+                key_arg = kw.value
+        return key_arg.id if isinstance(key_arg, ast.Name) else None
+
+    def _key_vars(self, ctx, fn) -> Set[str]:
+        names: Set[str] = set()
+        for a in (fn.args.args + fn.args.kwonlyargs + fn.args.posonlyargs):
+            n = a.arg.lower()
+            if n in _KEYISH_PARAM or n.endswith("_key") or n.endswith("_keys"):
+                names.add(a.arg)
+        for stmt in _body_of(fn):
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+                    chain = dotted(n.value.func)
+                    if chain and chain[-1] in _KEY_SOURCES:
+                        for t in n.targets:
+                            for nn in ast.walk(t):
+                                if isinstance(nn, ast.Name):
+                                    names.add(nn.id)
+        return names
+
+    @staticmethod
+    def _assigned_names(node) -> Set[str]:
+        out: Set[str] = set()
+        for n in ast.walk(node):
+            if isinstance(n, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = n.targets if isinstance(n, ast.Assign) else [n.target]
+                for t in targets:
+                    for nn in ast.walk(t):
+                        if isinstance(nn, ast.Name):
+                            out.add(nn.id)
+            elif isinstance(n, (ast.For, ast.AsyncFor)):
+                for nn in ast.walk(n.target):
+                    if isinstance(nn, ast.Name):
+                        out.add(nn.id)
+        return out
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for fn in ctx.functions:
+            if isinstance(fn, ast.Lambda):
+                continue
+            key_vars = self._key_vars(ctx, fn)
+            if key_vars:
+                yield from self._scan_block(ctx, fn.body, key_vars, {})
+        yield from self._check_host_entropy(ctx)
+
+    def _scan_block(self, ctx, stmts, key_vars, consumed) -> Iterator[Finding]:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue  # nested defs get their own pass
+            if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                # loop sub-rule: a consumption inside the loop of a key
+                # the loop body never reassigns replays the same stream
+                # every iteration.
+                assigned = self._assigned_names(stmt)
+                for call in _calls(stmt):
+                    name = self._consumption(ctx, call,
+                                             include_derivers=True)
+                    if name and name in key_vars and name not in assigned:
+                        if self._loop_varying(call, assigned):
+                            continue  # fold_in(key, i) — the good idiom
+                        yield self.finding(
+                            ctx, call,
+                            f"PRNG key {name!r} consumed inside a loop "
+                            "without split/fold_in reassignment — every "
+                            "iteration draws the same stream")
+                for name in assigned:
+                    consumed.pop(name, None)
+                continue
+            if isinstance(stmt, (ast.If, ast.Try)):
+                # branches are exclusive: scan each with a private copy
+                # so cross-branch "reuse" never fires.
+                for block in self._branch_blocks(stmt):
+                    yield from self._scan_block(ctx, block, key_vars,
+                                                dict(consumed))
+                for name in self._assigned_names(stmt):
+                    consumed.pop(name, None)
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                yield from self._scan_block(ctx, stmt.body, key_vars, consumed)
+                continue
+            for call in _calls(stmt):
+                name = self._consumption(ctx, call)
+                if name and name in key_vars:
+                    prev = consumed.get(name)
+                    if prev is not None:
+                        yield self.finding(
+                            ctx, call,
+                            f"PRNG key {name!r} consumed again without an "
+                            "intervening split/fold_in (first consumed on "
+                            f"line {prev}) — identical randomness; split "
+                            "the key or fold in a counter")
+                    else:
+                        consumed[name] = call.lineno
+            for name in self._assigned_names(stmt):
+                consumed.pop(name, None)
+
+    @staticmethod
+    def _loop_varying(call, assigned: Set[str]) -> bool:
+        """``fold_in(key, i)`` with a loop-varying counter derives a
+        fresh key per iteration — the recommended idiom, not reuse.
+        Sampling consumers get no such exemption: a loop-varying shape
+        doesn't make ``normal(key, (i,))`` draw a fresh stream."""
+        chain = dotted(call.func)
+        if not chain or chain[-1] not in _KEY_DERIVERS:
+            return False
+        rest = call.args[1:] + [k.value for k in call.keywords
+                                if k.arg != "key"]
+        return any(isinstance(n, ast.Name) and n.id in assigned
+                   for arg in rest for n in ast.walk(arg))
+
+    @staticmethod
+    def _branch_blocks(stmt) -> List[list]:
+        blocks = [stmt.body]
+        if getattr(stmt, "orelse", None):
+            blocks.append(stmt.orelse)
+        for h in getattr(stmt, "handlers", ()):
+            blocks.append(h.body)
+        if getattr(stmt, "finalbody", None):
+            blocks.append(stmt.finalbody)
+        return blocks
+
+    # ------------------------------------------------ host-entropy sub-rule
+    def _check_host_entropy(self, ctx) -> Iterator[Finding]:
+        for call in _calls(ctx.tree):
+            if not ctx.is_traced(call):
+                continue
+            chain = dotted(call.func)
+            if chain is None:
+                continue
+            label = None
+            for tails, name in _HOST_ENTROPY:
+                if chain[:len(tails)] == tails:
+                    label = name
+                    break
+            if label is None and len(chain) >= 2 and chain[0] == "random" \
+                    and ctx.import_modules.get("random") == "random":
+                label = "stdlib random"
+            if label:
+                yield self.finding(
+                    ctx, call,
+                    f"{label} used in traced context — host entropy is "
+                    "frozen at trace time; thread a jax.random key instead")
+
+
+# ------------------------------------------------------------------- RL003
+class RL003HostSideEffects(Rule):
+    """Host side effects in traced context.
+
+    A ``global`` write, a mutation of a module-level container, or a
+    ``print`` inside a jitted function runs once per *trace*, not once
+    per call — state silently stops updating after compilation and
+    diverges between cache hits and misses.  (The serve engine's
+    ``_TRACE_COUNTS`` increments exploit exactly this to count
+    retraces; they carry inline suppressions.)
+    """
+    id = "RL003"
+    title = "host side effect in traced context"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for fn in sorted(ctx.traced, key=lambda f: f.lineno):
+            for stmt in _body_of(fn):
+                for n in ast.walk(stmt):
+                    if isinstance(n, ast.Global):
+                        yield self.finding(
+                            ctx, n,
+                            f"global write ({', '.join(n.names)}) in traced "
+                            "context — executes at trace time only")
+                    elif isinstance(n, (ast.Assign, ast.AugAssign)):
+                        targets = (n.targets if isinstance(n, ast.Assign)
+                                   else [n.target])
+                        for t in targets:
+                            root = self._store_root(t)
+                            if root and root in ctx.module_names:
+                                yield self.finding(
+                                    ctx, n,
+                                    f"write to module-level {root!r} in "
+                                    "traced context — runs once per trace, "
+                                    "not per call")
+                    elif isinstance(n, ast.Call) and dotted(n.func) == \
+                            ("print",):
+                        yield self.finding(
+                            ctx, n,
+                            "print() in traced context — prints tracers, "
+                            "once per trace; use jax.debug.print")
+
+    @staticmethod
+    def _store_root(target) -> Optional[str]:
+        """Root name of a Subscript/Attribute store (``X[...]``,
+        ``X.attr``) — bare Name stores create locals and are fine."""
+        if isinstance(target, (ast.Subscript, ast.Attribute)):
+            node = target
+            while isinstance(node, (ast.Subscript, ast.Attribute)):
+                node = node.value
+            if isinstance(node, ast.Name):
+                return node.id
+        return None
+
+
+# ------------------------------------------------------------------- RL004
+_COLLECTIVE_TAILS = {"psum", "psum_scatter", "pmean", "pmax", "pmin",
+                     "all_gather", "all_to_all", "axis_index", "ppermute"}
+
+
+class RL004CollectiveAxisName(Rule):
+    """psum/psum_scatter axis-name literal not in the enclosing
+    shard_map's axis specs.
+
+    A collective against a misspelled axis name fails at trace time in
+    the best case and silently reduces over the wrong mesh axis in the
+    worst (when the name happens to exist on the mesh).  Checked only
+    where both sides are static: the collective's axis argument is a
+    string literal and the ``shard_map`` call's specs carry literal
+    axis names — variable axis names (the repo's ``data_axis`` idiom)
+    are out of static reach and stay quiet.
+    """
+    id = "RL004"
+    title = "collective axis name not in shard_map specs"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        for call in _calls(ctx.tree):
+            chain = dotted(call.func)
+            if not chain or chain[-1] != "shard_map":
+                continue
+            axes: Set[str] = set()
+            for kw in call.keywords:
+                if kw.arg in ("in_specs", "out_specs", "axis_names", "mesh"):
+                    axes.update(s for s, _ in _const_strings(kw.value))
+            if not axes or not call.args:
+                continue
+            # the mapped function, plus module-local callees (fixpoint)
+            targets = list(ctx._funcs_in_expr(call.args[0]))
+            seen: Set[ast.AST] = set(targets)
+            while targets:
+                fn = targets.pop()
+                for stmt in _body_of(fn):
+                    for inner in _calls(stmt):
+                        ichain = dotted(inner.func)
+                        if ichain and ichain[-1] in _COLLECTIVE_TAILS:
+                            yield from self._check_collective(
+                                ctx, inner, ichain, axes)
+                        if ichain and len(ichain) == 1:
+                            for callee in ctx.funcs_by_name.get(ichain[0], ()):
+                                if callee not in seen:
+                                    seen.add(callee)
+                                    targets.append(callee)
+
+    def _check_collective(self, ctx, call, chain, axes) -> Iterator[Finding]:
+        axis_arg = None
+        if len(call.args) >= 2:
+            axis_arg = call.args[1]
+        elif len(call.args) == 1 and chain[-1] == "axis_index":
+            axis_arg = call.args[0]
+        for kw in call.keywords:
+            if kw.arg in ("axis_name", "axis"):
+                axis_arg = kw.value
+        if axis_arg is None:
+            return
+        literals: List[Tuple[str, ast.AST]] = []
+        if isinstance(axis_arg, ast.Constant) and isinstance(
+                axis_arg.value, str):
+            literals.append((axis_arg.value, axis_arg))
+        elif isinstance(axis_arg, (ast.Tuple, ast.List)):
+            for el in axis_arg.elts:
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    literals.append((el.value, el))
+        for name, _node in literals:
+            if name not in axes:
+                yield self.finding(
+                    ctx, call,
+                    f"{chain[-1]} over axis {name!r} but the enclosing "
+                    f"shard_map specs only name axes {sorted(axes)} — "
+                    "wrong or misspelled axis name")
+
+
+# ------------------------------------------------------------------- RL005
+class RL005PallasTiling(Rule):
+    """Pallas tiling contracts: lane alignment and host-side padding.
+
+    (a) A grid-tiled ``BlockSpec`` whose lanes (last) dimension is a
+    literal not divisible by 128 maps partial lanes on every tile —
+    pick a 128-multiple and mask the ragged tail in-kernel
+    (``kernels/_tiling.mask_tail_lanes``).  (b) ``jnp.pad`` in the same
+    function as a ``pallas_call`` is the full-array-copy anti-pattern
+    PR 4 removed from the gc kernels: the pad materializes a second
+    copy of the operand in HBM when an in-kernel ragged-tail mask costs
+    nothing.
+    """
+    id = "RL005"
+    title = "Pallas tiling contract"
+
+    LANE = 128
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        pad_flagged: Set[ast.AST] = set()
+        for call in _calls(ctx.tree):
+            chain = dotted(call.func)
+            if not chain or chain[-1] != "pallas_call":
+                continue
+            yield from self._check_blockspecs(ctx, call)
+            yield from self._check_pad(ctx, call, pad_flagged)
+
+    def _kernel_masks(self, ctx, call) -> bool:
+        """Does the kernel (or anything it calls) mask in-kernel?"""
+        targets = list(ctx._funcs_in_expr(call.args[0])) if call.args else []
+        seen = set(targets)
+        while targets:
+            fn = targets.pop()
+            for stmt in _body_of(fn):
+                for n in _calls(stmt):
+                    ch = dotted(n.func)
+                    if ch and ch[-1] in ("mask_tail_lanes", "program_id",
+                                         "broadcasted_iota"):
+                        return True
+                    if ch and len(ch) == 1:
+                        for callee in ctx.funcs_by_name.get(ch[0], ()):
+                            if callee not in seen:
+                                seen.add(callee)
+                                targets.append(callee)
+        return False
+
+    def _check_blockspecs(self, ctx, call) -> Iterator[Finding]:
+        masked = None  # computed lazily, once per pallas_call
+        for spec in _calls(call):
+            chain = dotted(spec.func)
+            if not chain or chain[-1] != "BlockSpec" or not spec.args:
+                continue
+            shape = spec.args[0]
+            index_map = spec.args[1] if len(spec.args) > 1 else None
+            for kw in spec.keywords:
+                if kw.arg == "index_map":
+                    index_map = kw.value
+            if not isinstance(shape, (ast.Tuple, ast.List)) or not shape.elts:
+                continue
+            if not self._axis_is_tiled(index_map, len(shape.elts) - 1):
+                continue
+            dim = ctx.resolve_int(shape.elts[-1])
+            if dim is None or dim % self.LANE == 0:
+                continue
+            if masked is None:
+                masked = self._kernel_masks(ctx, call)
+            if masked:
+                continue
+            yield self.finding(
+                ctx, spec,
+                f"grid-tiled BlockSpec lanes dim {dim} is not a multiple of "
+                f"{self.LANE} and the kernel has no in-kernel mask — align "
+                "the tile and mask the ragged tail "
+                "(kernels/_tiling.mask_tail_lanes)")
+
+    @staticmethod
+    def _axis_is_tiled(index_map, axis: int) -> bool:
+        """Does the index_map lambda's output at ``axis`` depend on a
+        grid-index parameter?  Resident blocks (``lambda i: (0, 0)``)
+        are whole-array and exempt from lane alignment."""
+        if not isinstance(index_map, ast.Lambda):
+            return False
+        params = {a.arg for a in index_map.args.args}
+        ret = index_map.body
+        if isinstance(ret, (ast.Tuple, ast.List)) and axis < len(ret.elts):
+            expr = ret.elts[axis]
+        else:
+            expr = ret
+        return any(isinstance(n, ast.Name) and n.id in params
+                   for n in ast.walk(expr))
+
+    def _check_pad(self, ctx, call, pad_flagged) -> Iterator[Finding]:
+        fn = ctx.enclosing_function(call)
+        if fn is None:
+            return
+        for stmt in _body_of(fn):
+            for n in _calls(stmt):
+                ch = dotted(n.func)
+                if ch and ch[-1] == "pad" and len(ch) >= 2 \
+                        and ch[0] in ("jnp", "np", "numpy", "jax") \
+                        and n not in pad_flagged:
+                    pad_flagged.add(n)
+                    yield self.finding(
+                        ctx, n,
+                        "full-array pad next to a pallas_call — the "
+                        "host-side copy doubles HBM traffic; mask the "
+                        "ragged tail tile in-kernel instead "
+                        "(kernels/_tiling.mask_tail_lanes)")
+
+
+# ------------------------------------------------------------------- RL006
+_SHIM_NAMES = {"build_plan", "solve_blocks", "StragglerSim", "tau_weighted",
+               "_encode_tree", "_scale_tree", "CodingPlan"}
+
+
+class RL006DeprecationFirewall(Rule):
+    """No module under ``src/repro`` may import the legacy shims.
+
+    The ``repro.train.coded`` shims (``build_plan`` / ``solve_blocks``
+    / ``StragglerSim`` / ``tau_weighted`` / ``_encode_tree`` /
+    ``_scale_tree`` / ``CodingPlan``) exist for external callers only;
+    internal code routes through the registry API (``Plan.build``,
+    ``solve_scheme``).  An internal import re-entrenches the old
+    surface and defeats the one-shot DeprecationWarnings (promoted to
+    errors for ``repro.*`` callers in tier-1 — see pytest.ini).  The
+    rule does not fire on ``repro.train.coded`` itself (definitions
+    are not imports) or outside ``src/repro`` (tests exercise the
+    shims on purpose).
+    """
+    id = "RL006"
+    title = "internal import of a deprecated shim"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not _in_repo_src(ctx) or ctx.path.endswith("train/coded.py"):
+            return
+        coded_aliases: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                from_shim_mod = mod.endswith("train.coded") or (
+                    node.level > 0 and mod == "coded")
+                names_coded_mod = mod.endswith("train") or (
+                    node.level > 0 and mod in ("", "train"))
+                for a in node.names:
+                    if from_shim_mod and a.name in _SHIM_NAMES:
+                        yield self.finding(
+                            ctx, node,
+                            f"import of deprecated shim {a.name!r} from "
+                            f"{mod or '.'} — internal code must use the "
+                            "registry API (Plan.build / solve_scheme / "
+                            "plan.simulator)")
+                    if a.name == "coded" and names_coded_mod:
+                        coded_aliases.add(a.asname or a.name)
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name.endswith("train.coded"):
+                        coded_aliases.add(
+                            a.asname or a.name.split(".")[0])
+        if not coded_aliases:
+            return
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Attribute) and node.attr in _SHIM_NAMES:
+                chain = dotted(node)
+                if chain and chain[0] in coded_aliases:
+                    yield self.finding(
+                        ctx, node,
+                        f"attribute access to deprecated shim "
+                        f"{'.'.join(chain)} — internal code must use the "
+                        "registry API (Plan.build / solve_scheme / "
+                        "plan.simulator)")
+
+
+# ------------------------------------------------------------------- RL007
+#: callables documented to ``Env.coerce`` their env argument.  Passing
+#: ``env`` into any of these counts as routing through coercion.
+_COERCING_CALLS = {
+    "coerce", "Env", "solve_scheme", "scheme_bank", "build", "simulate",
+    "simulator", "simulate_plan", "simulate_x", "Trainer", "ClusterSim",
+    "CodedDecode", "ReplicationPlan", "solve_replication", "solve",
+    "bind_env", "draw_times", "to_env", "expected_order_stats",
+    "order_stat_quantile", "subset", "WaveRunner", "PlanSimulator",
+}
+
+
+class RL007EnvCoercion(Rule):
+    """Public entry points taking ``env`` must route through
+    ``Env.coerce``.
+
+    The Env contract (PR 3) is that *bare distributions keep working at
+    every entry point* — a public function that touches ``env.means()``
+    or ``env.dists`` without coercing first crashes the moment a caller
+    passes a ``ShiftedExponential``.  A function is compliant when its
+    body calls ``*.coerce(...)`` or hands ``env`` to a callable that
+    does (``Plan.build``, ``solve_scheme``, ``Trainer``, … — or a
+    module-local function that is itself compliant).  Private helpers
+    (leading underscore) receive already-coerced envs and are exempt.
+    """
+    id = "RL007"
+    title = "env entry point without Env.coerce"
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not _in_repo_src(ctx):
+            return
+        compliant: Set[str] = set()
+        pending = []
+        for fn in ctx.functions:
+            if isinstance(fn, ast.Lambda) or not self._takes_env(fn):
+                continue
+            if self._coerces(ctx, fn, compliant):
+                compliant.add(fn.name)
+            else:
+                pending.append(fn)
+        # module-local delegation fixpoint: handing env to a compliant
+        # local function counts as coercing.
+        changed = True
+        while changed:
+            changed = False
+            for fn in list(pending):
+                if self._coerces(ctx, fn, compliant):
+                    compliant.add(fn.name)
+                    pending.remove(fn)
+                    changed = True
+        for fn in pending:
+            if fn.name.startswith("_"):
+                continue
+            yield self.finding(
+                ctx, fn,
+                f"public entry point {fn.name!r} takes `env` but never "
+                "routes it through Env.coerce (directly or via a coercing "
+                "callee) — bare StragglerDistribution callers will break")
+
+    @staticmethod
+    def _takes_env(fn) -> bool:
+        return any(a.arg == "env" for a in
+                   fn.args.args + fn.args.kwonlyargs + fn.args.posonlyargs)
+
+    @staticmethod
+    def _coerces(ctx, fn, extra: Set[str]) -> bool:
+        for n in ast.walk(fn):
+            if not isinstance(n, ast.Call):
+                continue
+            chain = dotted(n.func)
+            if not chain:
+                continue
+            if chain[-1] == "coerce":
+                return True
+            if chain[-1] in _COERCING_CALLS or chain[-1] in extra:
+                for a in list(n.args) + [k.value for k in n.keywords]:
+                    if isinstance(a, ast.Name) and a.id == "env":
+                        return True
+        return False
+
+
+RULES = [RL001RetraceHazard(), RL002PRNGDiscipline(), RL003HostSideEffects(),
+         RL004CollectiveAxisName(), RL005PallasTiling(),
+         RL006DeprecationFirewall(), RL007EnvCoercion()]
+
+
+def rule_ids() -> List[str]:
+    return [r.id for r in RULES]

@@ -34,7 +34,6 @@ re-solving the partition.
 from __future__ import annotations
 
 import functools
-import warnings
 from collections import Counter
 from dataclasses import dataclass
 from typing import Any, List, Optional
@@ -44,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import Plan
+from repro.deprecation import reset_warned, warn_once
 from repro.models.model import decode_step, prefill
 
 from .coded import CodedDecode
@@ -116,21 +116,16 @@ def _canonical_key(key):
     return key
 
 
-# One-shot DeprecationWarning (the ``repro.train.coded`` idiom): each
-# legacy entry point warns once per process, naming its replacement.
-_WARNED: set = set()
-
-
-def _warn_once(key: str, message: str) -> None:
-    if key in _WARNED:
-        return
-    _WARNED.add(key)
-    warnings.warn(message, DeprecationWarning, stacklevel=3)
+# One-shot deprecations, shared with the ``repro.train.coded`` shims:
+# each legacy entry point warns once per process, naming its
+# replacement, with the ReproDeprecationWarning category tier-1
+# promotes to an error for repro.* callers (repro.deprecation).
+_warn_once = warn_once
 
 
 def _reset_deprecation_warnings() -> None:
     """Forget which one-shot deprecation warnings already fired (tests)."""
-    _WARNED.clear()
+    reset_warned()
 
 
 # --------------------------------------------------------------- jit caching

@@ -13,6 +13,7 @@ inherently event-driven — use ``ClusterSim`` for those.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import numpy as np
@@ -69,6 +70,36 @@ def _round_time_fn(levels, works, n_workers: int, scale: float):
     return one
 
 
+@functools.lru_cache(maxsize=256)
+def _decode_batch_fn(levels: tuple, works: tuple, n_workers: int,
+                     scale: float):
+    """Memoized jitted vmap for one (schedule, population, cost) — a
+    fresh ``jax.jit`` per call would re-trace and re-compile on every
+    MC sweep (the retrace class repro.lint RL001 guards against)."""
+    jax, _ = _jax()
+    one = _round_time_fn(np.asarray(levels, np.int32),
+                         np.asarray(works, np.float64), n_workers, scale)
+    return jax.jit(jax.vmap(one))
+
+
+@functools.lru_cache(maxsize=256)
+def _runtime_batch_fn(levels: tuple, works: tuple, n_workers: int,
+                      scale: float, ndim: int):
+    """Memoized jitted round-runtime evaluator; ``ndim`` selects the
+    single-round (S, N) or multi-round barrier (S, R, N) reduction."""
+    jax, jnp = _jax()
+    one = _round_time_fn(np.asarray(levels, np.int32),
+                         np.asarray(works, np.float64), n_workers, scale)
+
+    def round_max(t):
+        return jnp.max(one(t))
+
+    if ndim == 2:
+        return jax.jit(jax.vmap(round_max))
+    per_round = jax.vmap(round_max)                      # over R
+    return jax.jit(jax.vmap(lambda tr: jnp.sum(per_round(tr))))  # over S
+
+
 def decode_times_batch(schedule, times_batch, *,
                        cost: CostModel = DEFAULT_COST) -> np.ndarray:
     """(S, N) realizations -> (S, n_blocks) absolute decode times (vmap)."""
@@ -77,8 +108,9 @@ def decode_times_batch(schedule, times_batch, *,
     times_batch = np.asarray(times_batch, np.float64)
     n_workers = times_batch.shape[-1]
     levels, works = _arrays_of(schedule)
-    one = _round_time_fn(levels, works, n_workers, cost.scale(n_workers))
-    out = jax.jit(jax.vmap(one))(jnp.asarray(times_batch))
+    fn = _decode_batch_fn(tuple(levels.tolist()), tuple(works.tolist()),
+                          n_workers, cost.scale(n_workers))
+    out = fn(jnp.asarray(times_batch))
     return np.asarray(out, np.float64)
 
 
@@ -94,19 +126,11 @@ def runtime_batch(schedule, times_batch, *,
     times_batch = np.asarray(times_batch, np.float64)
     n_workers = times_batch.shape[-1]
     levels, works = _arrays_of(schedule)
-    one = _round_time_fn(levels, works, n_workers, cost.scale(n_workers))
-
-    def round_max(t):
-        return jnp.max(one(t))
-
-    if times_batch.ndim == 2:
-        fn = jax.jit(jax.vmap(round_max))
-    elif times_batch.ndim == 3:
-        per_round = jax.vmap(round_max)          # over R
-        fn = jax.jit(jax.vmap(lambda tr: jnp.sum(per_round(tr))))  # over S
-    else:
+    if times_batch.ndim not in (2, 3):
         raise ValueError(f"times_batch must be (S,N) or (S,R,N), "
                          f"got {times_batch.shape}")
+    fn = _runtime_batch_fn(tuple(levels.tolist()), tuple(works.tolist()),
+                           n_workers, cost.scale(n_workers), times_batch.ndim)
     return np.asarray(fn(jnp.asarray(times_batch)), np.float64)
 
 

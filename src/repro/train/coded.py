@@ -50,7 +50,6 @@ global batch, to float tolerance — on both pipelines.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Callable
 
 import jax
@@ -61,6 +60,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import Plan, PlanSimulator, UNIT_RESOLUTION, solve_scheme
 from repro.core.runtime import CostModel, DEFAULT_COST
 from repro.core.schemes import get_scheme
+from repro.deprecation import reset_warned, warn_once
 from repro.kernels import ops
 from repro.models.model import train_loss
 
@@ -71,36 +71,32 @@ __all__ = ["CodingPlan", "build_plan", "solve_blocks", "StragglerSim",
 #: Legacy name — ``CodingPlan`` was promoted to ``repro.core.plan.Plan``.
 CodingPlan = Plan
 
-# One-shot DeprecationWarnings: each legacy entry point (and each legacy
+# One-shot deprecations: each legacy entry point (and each legacy
 # scheme key spelling) warns once per process, naming its registry-API
-# replacement.  ``_reset_deprecation_warnings`` is a test hook.
-_WARNED: set = set()
-
-
-def _warn_once(key: str, message: str) -> None:
-    if key in _WARNED:
-        return
-    _WARNED.add(key)
-    warnings.warn(message, DeprecationWarning, stacklevel=3)
+# replacement.  The machinery (and the ReproDeprecationWarning category
+# tier-1 promotes to an error for repro.* callers) is shared with the
+# other shim modules in ``repro.deprecation``.
+_warn_once = warn_once
 
 
 def _reset_deprecation_warnings() -> None:
     """Forget which one-shot deprecation warnings already fired (tests)."""
-    _WARNED.clear()
+    reset_warned()
 
 
 def _warn_legacy_key(name: str) -> None:
     """Legend-string / legacy solver keys resolve via registry aliases;
-    nudge callers toward the canonical scheme name."""
+    nudge callers toward the canonical scheme name.  stacklevel=4 skips
+    this extra frame so the warning attributes to the shim's caller."""
     try:
         canonical = get_scheme(name).name
     except KeyError:
         return  # unknown scheme: let the registry raise its own error
     if canonical != name:
-        _warn_once(f"key:{name}",
-                   f"legacy scheme key {name!r} is deprecated; use the "
-                   f"canonical registry name {canonical!r} "
-                   "(repro.core.available_schemes())")
+        warn_once(f"key:{name}",
+                  f"legacy scheme key {name!r} is deprecated; use the "
+                  f"canonical registry name {canonical!r} "
+                  "(repro.core.available_schemes())", stacklevel=4)
 
 
 def __getattr__(name: str):

@@ -1,0 +1,22 @@
+"""RL001 must fire: jit construction per call and inside a loop."""
+import jax
+
+from repro.lint_fixture_stub import pl  # stand-in pallas namespace
+
+
+def hot_entry(params, batch):
+    # fresh jit every call -> full re-trace + re-compile every call
+    return jax.jit(lambda p, b: p["w"] @ b)(params, batch)
+
+
+def loop_entry(params, batches):
+    outs = []
+    for b in batches:
+        step = jax.jit(lambda p, bb: p["w"] @ bb)
+        outs.append(step(params, b))
+    return outs
+
+
+def bare_pallas(x):
+    # pallas_call built in a plain function: re-specialized per call
+    return pl.pallas_call(lambda x_ref, o_ref: None, out_shape=x)(x)

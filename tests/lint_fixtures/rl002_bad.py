@@ -1,0 +1,34 @@
+"""RL002 must fire: key reuse, loop-invariant streams, host entropy."""
+import random
+import time
+
+import jax
+import numpy as np
+
+
+def sample_pair(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # identical randomness: key reused
+    return a, b
+
+
+def sample_loop(key, n):
+    out = []
+    for _ in range(n):
+        out.append(jax.random.normal(key, (2,)))  # same stream every iter
+    return out
+
+
+def invariant_fold(key, steps):
+    out = []
+    for _ in range(steps):
+        k = jax.random.fold_in(key, 7)  # loop-invariant: same key every iter
+        out.append(jax.random.normal(k, (2,)))
+    return out
+
+
+def make_noisy_step():
+    def step(x):
+        # host entropy baked in at trace time, frozen thereafter
+        return x * np.random.uniform() + time.time() + random.random()
+    return jax.jit(step)

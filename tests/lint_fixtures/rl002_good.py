@@ -1,0 +1,34 @@
+"""RL002 must stay quiet: split / fold_in discipline done right."""
+import jax
+import numpy as np
+
+
+def sample_pair(key):
+    k1, k2 = jax.random.split(key)
+    return jax.random.normal(k1, (4,)), jax.random.uniform(k2, (4,))
+
+
+def sample_loop(key, n):
+    out = []
+    for i in range(n):
+        # fold_in with a loop-varying counter: fresh stream per iter
+        out.append(jax.random.normal(jax.random.fold_in(key, i), (2,)))
+    return out
+
+
+def derived(key):
+    a = jax.random.normal(key, (4,))  # single consumption is fine
+    b = jax.random.fold_in(key, 1)   # derivation, not consumption
+    return a, b
+
+
+def branches(key, flag):
+    # one consumption per control-flow path, never two on the same path
+    if flag:
+        return jax.random.normal(key, (4,))
+    return jax.random.uniform(key, (4,))
+
+
+def host_entropy_outside_trace(x):
+    # np.random in plain host code is not a trace hazard
+    return x + np.random.default_rng(0).uniform()

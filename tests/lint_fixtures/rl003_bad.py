@@ -1,0 +1,21 @@
+"""RL003 must fire: host side effects inside traced functions."""
+import jax
+
+_COUNTS = {}
+_TOTAL = 0
+
+
+def make_step():
+    def step(x):
+        _COUNTS["step"] = _COUNTS.get("step", 0) + 1  # runs per trace only
+        print("tracing", x)                           # prints tracers, once
+        return x * 2
+    return jax.jit(step)
+
+
+def make_acc():
+    def acc(x):
+        global _TOTAL
+        _TOTAL += 1
+        return x
+    return jax.jit(acc)

@@ -1,0 +1,24 @@
+"""RL003 must stay quiet: effects on the host side of the trace line."""
+import jax
+
+_BUILDS = {}
+
+
+def make_step():
+    # factory body runs on the host, before tracing: mutation is fine
+    _BUILDS["step"] = _BUILDS.get("step", 0) + 1
+
+    def step(x):
+        scratch = {}
+        scratch["doubled"] = x * 2  # local state inside the trace is fine
+        jax.debug.print("x = {x}", x=x)  # the traced-print API, not print
+        return scratch["doubled"]
+
+    return jax.jit(step)
+
+
+def host_logger(x):
+    # untraced helper: print and module state are host semantics here
+    print("step", x)
+    _BUILDS["calls"] = _BUILDS.get("calls", 0) + 1
+    return x

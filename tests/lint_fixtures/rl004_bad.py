@@ -1,0 +1,19 @@
+"""RL004 must fire: collective axis name absent from the shard_map spec."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def combine(mesh, x):
+    def worker(v):
+        return jax.lax.psum(v, "dta")  # typo: the mapped axis is 'data'
+    f = jax.shard_map(worker, mesh=mesh, in_specs=P("data"),
+                      out_specs=P("data"))
+    return f(x)
+
+
+def scatter(mesh, x):
+    def worker(v):
+        return jax.lax.psum_scatter(v, "model")  # axis not in this spec
+    f = jax.shard_map(worker, mesh=mesh, in_specs=P("data"),
+                      out_specs=P("data"))
+    return f(x)

@@ -1,0 +1,28 @@
+"""RL004 must stay quiet: axis names that match, or are not literals."""
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def combine(mesh, x):
+    def worker(v):
+        return jax.lax.psum(v, "data")
+    f = jax.shard_map(worker, mesh=mesh, in_specs=P("data"),
+                      out_specs=P("data"))
+    return f(x)
+
+
+def multi_axis(mesh, x):
+    def worker(v):
+        v = jax.lax.psum(v, "model")
+        return jax.lax.psum_scatter(v, "data")
+    f = jax.shard_map(worker, mesh=mesh, in_specs=P("data", "model"),
+                      out_specs=P("data", "model"))
+    return f(x)
+
+
+def variable_axis(mesh, x, axis):
+    def worker(v):
+        return jax.lax.psum(v, axis)  # not a literal: out of scope
+    f = jax.shard_map(worker, mesh=mesh, in_specs=P("data"),
+                      out_specs=P("data"))
+    return f(x)

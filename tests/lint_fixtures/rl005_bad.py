@@ -1,0 +1,31 @@
+"""RL005 must fire: unaligned tiled BlockSpec dims, pad-then-pallas."""
+import jax
+import jax.numpy as jnp
+
+from repro.lint_fixture_stub import pl
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+@jax.jit
+def double_tiled(x):
+    d = x.shape[-1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(d // 100,),
+        in_specs=[pl.BlockSpec((8, 100), lambda i: (0, i))],  # 100 % 128 != 0
+        out_specs=pl.BlockSpec((8, 100), lambda i: (0, i)),
+    )(x)
+
+
+@jax.jit
+def pad_then_call(x):
+    x = jnp.pad(x, ((0, 0), (0, 128 - x.shape[-1] % 128)))  # materializes a copy
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((8, 128), lambda i: (0, i)),
+    )(x)

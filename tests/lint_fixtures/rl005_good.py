@@ -1,0 +1,51 @@
+"""RL005 must stay quiet: aligned tiles, resident blocks, masked kernels."""
+import functools
+
+import jax
+
+from repro.lint_fixture_stub import mask_tail_lanes, pl
+
+TILE_D = 128
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def _masked_kernel(x_ref, o_ref, *, d, tile_d):
+    col0 = pl.program_id(0) * tile_d
+    o_ref[...] = mask_tail_lanes(x_ref[...] * 2.0, d - col0)
+
+
+@jax.jit
+def aligned(x):
+    d = x.shape[-1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(d // TILE_D,),
+        in_specs=[pl.BlockSpec((8, TILE_D), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((8, TILE_D), lambda i: (0, i)),
+    )(x)
+
+
+@jax.jit
+def resident(x):
+    # last dim resident (index_map ignores the grid index): any width ok
+    return pl.pallas_call(
+        _kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 100), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((8, 100), lambda i: (0, 0)),
+    )(x)
+
+
+@jax.jit
+def masked_tail(x, d):
+    # unaligned tile is fine when the kernel masks the tail lanes
+    kern = functools.partial(_masked_kernel, d=d, tile_d=100)
+    return pl.pallas_call(
+        kern,
+        grid=(1 + (d - 1) // 100,),
+        in_specs=[pl.BlockSpec((8, 100), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((8, 100), lambda i: (0, i)),
+    )(x)

@@ -1,0 +1,11 @@
+"""RL006 must fire (linted under a virtual src/repro path): internal
+code importing the deprecated repro.train.coded shims."""
+from repro.train import coded
+from repro.train.coded import build_plan, solve_blocks
+
+
+def legacy(costs, dist):
+    plan = build_plan(costs, dist, 4)
+    rows = solve_blocks("xf", dist, 4, 100)
+    sim = coded.StragglerSim(plan, dist, seed=0)
+    return plan, rows, sim

@@ -1,0 +1,10 @@
+"""RL006 must stay quiet: the registry API, plus non-shim coded names."""
+from repro.core import Plan, solve_scheme
+from repro.train.coded import combine_grads, make_coded_grad_fn
+
+
+def modern(costs, dist):
+    rows = solve_scheme("xf", dist, 4, 100)
+    plan = Plan.build(costs, dist, 4, scheme="xf")
+    fn = make_coded_grad_fn(None, plan, mode="sim")
+    return rows, plan, fn, combine_grads

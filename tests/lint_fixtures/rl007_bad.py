@@ -1,0 +1,8 @@
+"""RL007 must fire (virtual src/repro path): a public entry point that
+uses its ``env`` argument raw instead of routing it through Env.coerce
+(so a bare distribution crashes instead of being promoted to iid)."""
+import numpy as np
+
+
+def expected_runtime(env, n_workers):
+    return float(np.mean(env.means()))

@@ -1,0 +1,23 @@
+"""RL007 must stay quiet: coercion, delegation, and private helpers."""
+from repro.core.env import Env
+
+
+def expected_runtime(env, n_workers):
+    env = Env.coerce(env, n_workers)
+    return float(sum(env.means())) / n_workers
+
+
+def delegated(env, n_workers):
+    # passes env straight to a module-local compliant entry point
+    return expected_runtime(env, n_workers) * 2.0
+
+
+def solver_pass_through(env, n_workers):
+    from repro.core import solve_scheme
+    # coercing callee from the known-coercing API surface
+    return solve_scheme("xf", env, n_workers, 100)
+
+
+def _helper(env):
+    # underscore-private: callers coerced already
+    return env.means()

@@ -1,0 +1,11 @@
+"""Suppression fixture: RL001-triggering code silenced two ways."""
+import jax
+
+
+def hot_inline(params, batch):
+    return jax.jit(lambda p, b: p @ b)(params, batch)  # repro-lint: disable=RL001
+
+
+def hot_comment_line(params, batch):
+    # repro-lint: disable=RL001  one-off debug path, retrace is fine here
+    return jax.jit(lambda p, b: p @ b)(params, batch)

@@ -81,6 +81,41 @@ def test_tree_loop_helpers_warn_once_with_replacement(coded):
     np_.testing.assert_allclose(np_.asarray(s["w"]), 2.0 * np_.asarray(c["w"]))
 
 
+def test_internal_shim_use_is_promoted_to_error(coded):
+    """The pytest.ini firewall: a ReproDeprecationWarning attributed to
+    a ``repro.*`` module (i.e. internal code still on a shim) errors at
+    tier-1.  warn_explicit lets us forge the attribution both ways."""
+    from repro.deprecation import ReproDeprecationWarning
+
+    with pytest.raises(ReproDeprecationWarning):
+        warnings.warn_explicit("internal shim use", ReproDeprecationWarning,
+                               "src/repro/fake/mod.py", 1,
+                               module="repro.fake.mod")
+    # external / test attribution stays a plain (recorded) warning under
+    # the same ambient filters — catch_warnings copies them, record=True
+    # only redirects delivery, so an 'error' action would still raise.
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.warn_explicit("external shim use", ReproDeprecationWarning,
+                               "somewhere/user_script.py", 1,
+                               module="user_script")
+    assert [w for w in rec if w.category is ReproDeprecationWarning]
+
+
+def test_shim_warning_attributes_to_the_caller(coded):
+    """stacklevel bookkeeping: solve_blocks' entry-point *and* legacy-key
+    warnings must attribute to this test file, not to repro.train.coded
+    (misattribution would trip the repro\\. error filter on every legacy
+    call, even external ones)."""
+    coded._reset_deprecation_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        coded.solve_blocks("Tandon et al. (alpha)", DIST, 4, 100)
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 2  # entry point + legacy key spelling
+    for w in deps:
+        assert w.filename == __file__
+
+
 def test_legend_string_key_warns_with_canonical_name(coded):
     coded.solve_blocks("xf", DIST, 4, 100)  # consume the entry-point warning
     with pytest.warns(DeprecationWarning, match="'tandon-alpha'"):

@@ -1,0 +1,159 @@
+"""repro.lint: the contract linter's own tier-1 suite.
+
+Three layers:
+  * fixture pairs — every rule RL001-RL007 fires on its ``rlNNN_bad.py``
+    counterexample and stays quiet on the blessed ``rlNNN_good.py``
+    idioms (tests/lint_fixtures/; linted under a virtual src/repro path
+    so the path-scoped rules are in scope);
+  * machinery — suppressions, baseline matching/staleness, traced-
+    context propagation, the RL000 syntax-error funnel, the CLI;
+  * the repo itself — ``src tests benchmarks`` lints clean against the
+    committed baseline, with no stale baseline entries, and the
+    hygiene checks (RH001-RH003) pass.  This is the gate that keeps
+    every future PR on the contracts.
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.lint import (Baseline, Finding, lint_paths, lint_source,
+                        run_hygiene)
+from repro.lint.cli import main as lint_main
+from repro.lint.engine import iter_python_files
+from repro.lint.rules import RULES
+
+REPO = Path(__file__).resolve().parents[1]
+FIXDIR = Path(__file__).resolve().parent / "lint_fixtures"
+RULE_IDS = [r.id for r in RULES]
+
+
+def lint_fixture(name, baseline=None):
+    """Lint a fixture under a virtual src/repro path so the path-scoped
+    rules (RL006/RL007, RL001's non-test half) apply."""
+    return lint_source((FIXDIR / name).read_text(),
+                       f"src/repro/fixture/{name}", baseline=baseline)
+
+
+# ------------------------------------------------------------ fixture pairs
+def test_rule_catalogue_is_complete():
+    assert RULE_IDS == [f"RL{i:03d}" for i in range(1, 8)]
+
+
+@pytest.mark.parametrize("rule_id", [f"RL{i:03d}" for i in range(1, 8)])
+def test_bad_fixture_fires_only_its_rule(rule_id):
+    findings = lint_fixture(f"{rule_id.lower()}_bad.py")
+    assert findings, f"{rule_id} counterexample produced no findings"
+    assert {f.rule for f in findings} == {rule_id}
+
+
+@pytest.mark.parametrize("rule_id", [f"RL{i:03d}" for i in range(1, 8)])
+def test_good_fixture_is_clean(rule_id):
+    findings = lint_fixture(f"{rule_id.lower()}_good.py")
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_findings_carry_location_and_message():
+    f = lint_fixture("rl001_bad.py")[0]
+    assert f.path == "src/repro/fixture/rl001_bad.py"
+    assert f.line > 0
+    assert "RL001" in f.render() and str(f.line) in f.render()
+    assert set(f.to_dict()) >= {"rule", "path", "line", "col", "message"}
+
+
+# ------------------------------------------------------------- suppressions
+def test_suppression_comment_silences_both_placements():
+    assert lint_fixture("suppressed.py") == []
+
+
+def test_without_suppression_the_same_code_fires():
+    src = (FIXDIR / "suppressed.py").read_text().replace(
+        "repro-lint: disable=RL001", "")
+    findings = lint_source(src, "src/repro/fixture/suppressed.py")
+    assert {f.rule for f in findings} == {"RL001"}
+    assert len(findings) == 2
+
+
+# ----------------------------------------------------------------- baseline
+def test_baseline_grandfathers_matching_findings():
+    bl = Baseline([{"rule": "RL007", "path": "src/repro/fixture/rl007_bad.py",
+                    "match": "env", "justification": "fixture"}])
+    assert lint_fixture("rl007_bad.py", baseline=bl) == []
+    assert bl.unused() == []
+
+
+def test_baseline_reports_stale_entries():
+    bl = Baseline([{"rule": "RL001", "path": "src/repro/nope.py",
+                    "justification": "stale"}])
+    lint_fixture("rl007_bad.py", baseline=bl)
+    assert [e["path"] for e in bl.unused()] == ["src/repro/nope.py"]
+
+
+def test_baseline_entries_require_a_justification():
+    with pytest.raises(ValueError, match="justification"):
+        Baseline([{"rule": "RL001", "path": "x.py"}])
+
+
+# ---------------------------------------------------------------- machinery
+def test_syntax_error_becomes_rl000_finding():
+    findings = lint_source("def broken(:\n", "src/repro/broken.py")
+    assert [f.rule for f in findings] == ["RL000"]
+
+
+def test_traced_context_propagates_through_local_calls():
+    src = (
+        "import jax\n"
+        "import numpy as np\n"
+        "def helper(x):\n"
+        "    return x * np.random.uniform()\n"
+        "def entry(x):\n"
+        "    return jax.jit(lambda v: helper(v))\n"
+    )
+    findings = lint_source(src, "scratch.py")
+    assert any(f.rule == "RL002" and "np.random" in f.message
+               for f in findings)
+
+
+def test_tree_walk_skips_the_fixture_directory():
+    files = iter_python_files([REPO / "tests"])
+    assert files, "tests directory should contain python files"
+    assert not any("lint_fixtures" in str(p) for p in files)
+
+
+# ---------------------------------------------------------------------- CLI
+def test_cli_exit_one_and_json_on_findings(capsys, monkeypatch):
+    monkeypatch.chdir(REPO)
+    rc = lint_main([str(FIXDIR / "rl002_bad.py"), "--json"])
+    assert rc == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["count"] == len(payload["findings"]) > 0
+    assert {f["rule"] for f in payload["findings"]} == {"RL002"}
+
+
+def test_cli_exit_zero_on_clean_path(capsys, monkeypatch):
+    monkeypatch.chdir(REPO)
+    rc = lint_main([str(FIXDIR / "rl002_good.py")])
+    assert rc == 0
+    assert "lint clean" in capsys.readouterr().out
+
+
+# ------------------------------------------------------- the repo is clean
+def test_repo_lints_clean_against_committed_baseline():
+    baseline = Baseline.load(REPO / "lint-baseline.json")
+    findings = lint_paths([REPO / "src", REPO / "tests", REPO / "benchmarks"],
+                          baseline=baseline, relative_to=REPO)
+    assert findings == [], "\n".join(f.render() for f in findings)
+    stale = baseline.unused()
+    assert stale == [], f"stale baseline entries: {stale}"
+
+
+def test_repo_hygiene_is_clean():
+    findings = run_hygiene(REPO)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_cli_hygiene_mode(capsys, monkeypatch):
+    monkeypatch.chdir(REPO)
+    rc = lint_main(["--hygiene"])
+    assert rc == 0
+    assert "hygiene clean" in capsys.readouterr().out
