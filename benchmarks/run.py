@@ -33,13 +33,14 @@ def main(argv=None) -> None:
                     help="dump all section rows + statuses as JSON")
     args = ap.parse_args(argv)
 
-    from . import adaptive_env, coded_step, fig3_partitions, fig4a_runtime_vs_n
-    from . import fig4b_runtime_vs_mu, heterogeneous_env, kernel_bench
-    from . import roofline, serve_load, sim_cluster, wave_step
+    from . import adaptive_env, ckpt_recovery, coded_step, fig3_partitions
+    from . import fig4a_runtime_vs_n, fig4b_runtime_vs_mu, heterogeneous_env
+    from . import kernel_bench, roofline, serve_load, sim_cluster, wave_step
 
     known = {"fig3_partitions", "fig4a_runtime_vs_n", "fig4b_runtime_vs_mu",
              "kernel_bench", "coded_step", "roofline", "sim_cluster",
-             "heterogeneous_env", "adaptive_env", "serve_load", "wave_step"}
+             "heterogeneous_env", "adaptive_env", "serve_load", "wave_step",
+             "ckpt_recovery"}
     rows = []
     sections: dict = {}
     only = {s.strip() for s in args.only.split(",") if s.strip()}
@@ -73,6 +74,7 @@ def main(argv=None) -> None:
     section("adaptive_env", adaptive_env.main, smoke=smoke)  # re-planning payoff
     section("serve_load", serve_load.main, smoke=smoke)      # coded decode p99 gate
     section("wave_step", wave_step.main, smoke=smoke)        # async-vs-barrier gate
+    section("ckpt_recovery", ckpt_recovery.main, smoke=smoke)  # coded-ckpt gate
 
     print("\nname,metric,value,status")
     for r in rows:

@@ -17,9 +17,10 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== repo hygiene (repro.lint RH001-RH003) =="
-# tracked .pyc, stray bench/smoke JSON outside BENCH_*.json, and the
-# BENCH_async.json headline floor — formerly inline bash/grep here,
+echo "== repo hygiene (repro.lint RH001-RH004) =="
+# tracked .pyc, stray bench/smoke JSON outside BENCH_*.json, the
+# BENCH_async.json headline floor, and the BENCH_ckpt.json coded-
+# checkpoint storage-overhead floor — formerly inline bash/grep here,
 # now rules in src/repro/lint/hygiene.py (stdlib-only, no jax import).
 python -m repro.lint --hygiene
 
@@ -30,14 +31,14 @@ echo "== contract lint (repro.lint RL001-RL007) =="
 # (docs/LINT.md).
 python -m repro.lint src tests benchmarks
 
-# tier-1 passed-count baseline as of PR 8 (PR 7: 352; PR 6: 318; PR 5:
-# 280; PR 4: 255; PR 3: 237; PR 2: 208; PR 1: 143; seed: 36).  Bump
-# this when a PR adds tests — it is what catches silently
+# tier-1 passed-count baseline as of PR 9 (PR 8: 383; PR 7: 352; PR 6:
+# 318; PR 5: 280; PR 4: 255; PR 3: 237; PR 2: 208; PR 1: 143; seed:
+# 36).  Bump this when a PR adds tests — it is what catches silently
 # lost/uncollected files, not just failures.
-BASELINE=383
+BASELINE=415
 # tests carrying @pytest.mark.spmd (registered in pytest.ini): the
 # multi-device subprocess tests the fast lane deselects.
-SPMD_COUNT=8
+SPMD_COUNT=9
 
 PYTEST_ARGS=(-x -q --durations=10)
 if [[ "${1:-}" == "--fast" ]]; then
@@ -80,8 +81,12 @@ echo "== smoke benchmarks =="
 # benchmarks/serve_load.py) — and the wave_step async guard: the
 # wave-pipelined loop at staleness 1 must beat the barrier by >=1.15x
 # at the smoke horizon, with k=0 pricing exactly at the barrier
-# (assertions inside benchmarks/wave_step.py).  bench_smoke.json is
-# the machine-readable row dump (uploaded as a CI artifact).
+# (assertions inside benchmarks/wave_step.py) — and the ckpt_recovery
+# robustness guard: every <=s loss pattern restores bit-exactly, the
+# e2e worker-death recovery completes, and the coded storage overhead
+# stays under 1.5*(s/N + 1) (assertions inside
+# benchmarks/ckpt_recovery.py).  bench_smoke.json is the
+# machine-readable row dump (uploaded as a CI artifact).
 python -m benchmarks.run --smoke --json bench_smoke.json
 
 echo

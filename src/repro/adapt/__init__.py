@@ -18,8 +18,8 @@ fresh ``Plan`` for the trainer to hot-swap behind a step boundary.
 
 Design notes: docs/ADAPTIVE.md.
 """
-from .controller import AdaptConfig, AdaptiveController
-from .monitor import DriftReport, RuntimeMonitor
+from .controller import AdaptConfig, AdaptiveController, RecoveryEvent
+from .monitor import DeathWatch, DriftReport, RuntimeMonitor
 
-__all__ = ["AdaptConfig", "AdaptiveController", "DriftReport",
-           "RuntimeMonitor"]
+__all__ = ["AdaptConfig", "AdaptiveController", "DeathWatch", "DriftReport",
+           "RecoveryEvent", "RuntimeMonitor"]

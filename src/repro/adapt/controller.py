@@ -41,7 +41,7 @@ from repro.core.runtime import CostModel, DEFAULT_COST, tau_hat_batch
 
 from .monitor import DriftReport, RuntimeMonitor
 
-__all__ = ["AdaptConfig", "AdaptiveController", "SwapEvent"]
+__all__ = ["AdaptConfig", "AdaptiveController", "RecoveryEvent", "SwapEvent"]
 
 
 @dataclass(frozen=True)
@@ -90,6 +90,22 @@ class SwapEvent:
     x_old: np.ndarray
     x_new: np.ndarray
     predicted_gain: float     # 1 - E[tau_new]/E[tau_old] under the estimate
+
+
+@dataclass(frozen=True)
+class RecoveryEvent:
+    """One worker-death recovery: provenance for logs/benchmarks,
+    symmetric to ``SwapEvent`` (which records *why the plan moved*;
+    this records *why the state moved*).  Emitted by the trainer's
+    recovery path: death detected -> forced re-plan -> coded restore
+    from the survivors -> training continues from ``ckpt_step``.
+    """
+
+    step: int                  # trainer step at which death was detected
+    dead_workers: tuple        # cumulative dead set at recovery time
+    ckpt_step: int             # checkpoint step the state rewound to
+    swap: Optional[SwapEvent]  # the forced re-plan (None: no controller
+    #                            or too little signal to re-solve yet)
 
 
 def _abstract_leaves(params_or_costs):
@@ -214,6 +230,50 @@ class AdaptiveController:
             x_new=np.asarray(new_plan.x).copy(), predicted_gain=gain))
         self.plan = new_plan
         self.monitor.reset()
+        return new_plan
+
+    def replan_now(self, report: Optional[DriftReport] = None) -> Optional[Plan]:
+        """Forced re-plan, outside the drift/gain gates: the worker-death
+        recovery path.  A death is not a statistical question — the
+        partition *must* move off the dead worker — so the only gate
+        kept is signal existence: with fewer than 4 observed rounds in
+        the window there is nothing to estimate from and ``None`` comes
+        back (the caller restores from survivors anyway and re-plans at
+        the next opportunity).  The window is NOT cross-fit here (all
+        recent rounds feed the estimate — post-death rows carry the
+        degradation that steers work off the corpse) and the swap is
+        accepted unconditionally; ``predicted_gain`` on the recent rows
+        is recorded for provenance only.
+        """
+        recent = self.monitor.window_times()
+        recent = recent[recent.shape[0] // 2:]
+        if recent.shape[0] < 4:
+            return None
+        from repro.core.env import Env
+        from repro.sim.trace import Trace  # deferred: sim imports core
+
+        env_fit = Env.from_trace(Trace.from_times(recent), per_worker=True,
+                                 mc_samples=self.cfg.mc_samples)
+        scheme = self.cfg.scheme or self.plan.scheme
+        self._replan_count += 1
+        new_plan = Plan.build(
+            self.params_or_costs, env_fit, scheme=scheme,
+            rng=self.cfg.rng + self._replan_count, cost=self.cost,
+            total=int(self.plan.total_units), warm_start=None,
+            s_cap=self.cfg.s_cap,
+            prefer_fractional=self.plan.codes.prefer_fractional)
+        tau_cur, tau_new = self._price_rows(new_plan, recent)
+        gain = 1.0 - float(tau_new.mean()) / float(tau_cur.mean())
+        if report is None:
+            report = DriftReport(True, np.zeros(self.plan.n_workers), np.inf,
+                                 np.zeros(self.plan.n_workers), np.inf, -1)
+        self.swaps.append(SwapEvent(
+            round_idx=self.monitor.rounds_seen, drift=report,
+            x_old=np.asarray(self.plan.x).copy(),
+            x_new=np.asarray(new_plan.x).copy(), predicted_gain=gain))
+        self.plan = new_plan
+        self.monitor.reset()
+        self._cooldown_until = 0
         return new_plan
 
     # ------------------------------------------------------------- pricing

@@ -46,7 +46,21 @@ _LAZY = {
     # adaptive re-planning (numpy-only; lazy to keep the facade slim)
     "AdaptConfig": ("repro.adapt", "AdaptConfig"),
     "AdaptiveController": ("repro.adapt", "AdaptiveController"),
+    "DeathWatch": ("repro.adapt", "DeathWatch"),
+    "RecoveryEvent": ("repro.adapt", "RecoveryEvent"),
     "RuntimeMonitor": ("repro.adapt", "RuntimeMonitor"),
+    # checkpointing (monolithic + erasure-coded; docs/CHECKPOINT.md)
+    "CkptConfig": ("repro.checkpoint", "CkptConfig"),
+    "CheckpointManager": ("repro.checkpoint", "CheckpointManager"),
+    "CodedSpec": ("repro.checkpoint", "CodedSpec"),
+    "save_checkpoint": ("repro.checkpoint", "save_checkpoint"),
+    "load_checkpoint": ("repro.checkpoint", "load_checkpoint"),
+    "restore_train_state": ("repro.checkpoint", "restore_train_state"),
+    "save_coded_checkpoint": ("repro.checkpoint", "save_coded_checkpoint"),
+    "load_coded_checkpoint": ("repro.checkpoint", "load_coded_checkpoint"),
+    "restore_coded_train_state": ("repro.checkpoint",
+                                  "restore_coded_train_state"),
+    "latest_step": ("repro.checkpoint", "latest_step"),
     # trainer stack (imports jax models)
     "Trainer": ("repro.train.trainer", "Trainer"),
     "TrainConfig": ("repro.train.trainer", "TrainConfig"),

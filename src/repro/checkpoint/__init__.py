@@ -1,14 +1,41 @@
-"""Orbax-free checkpointing (flat npz + json meta, atomic rename)."""
+"""Orbax-free checkpointing (flat npz + json meta, atomic rename),
+plus the erasure-coded variant (MDS parity stripes across workers;
+bit-exact restore from any N - s survivors) and the cadence/retention
+manager the trainer wires in.  See docs/CHECKPOINT.md.
+"""
 from .ckpt import (
+    intact_steps,
     latest_step,
     load_checkpoint,
     restore_train_state,
     save_checkpoint,
 )
+from .coded import (
+    CheckpointError,
+    CodedSpec,
+    ShardCorruptionError,
+    ShardLossError,
+    latest_coded_step,
+    load_coded_checkpoint,
+    restore_coded_train_state,
+    save_coded_checkpoint,
+)
+from .manager import CheckpointManager, CkptConfig
 
 __all__ = [
+    "CheckpointError",
+    "CheckpointManager",
+    "CkptConfig",
+    "CodedSpec",
+    "ShardCorruptionError",
+    "ShardLossError",
+    "intact_steps",
+    "latest_coded_step",
     "latest_step",
     "load_checkpoint",
+    "load_coded_checkpoint",
+    "restore_coded_train_state",
     "restore_train_state",
     "save_checkpoint",
+    "save_coded_checkpoint",
 ]

@@ -1,24 +1,67 @@
 """Checkpointing: pytree -> step-numbered directory of .npz + json meta.
 
 No orbax dependency: leaves are saved as a flat npz keyed by tree path,
-metadata (step, config name, tree structure) as json.  Atomic via
-write-to-tmp + rename.  Works for TrainState or any pytree of arrays.
+metadata (step, config name, tree structure) as json.  Works for
+TrainState or any pytree of arrays.
+
+Crash atomicity.  A checkpoint becomes visible only through the final
+``os.rename`` of its staging dir, and everything the rename publishes
+is durable *before* it happens: the npz and meta files are fsynced,
+then the staging directory itself, and the parent directory entry is
+fsynced after the rename (rename alone does not survive power loss —
+the directory entry may still be in the page cache).  A crash at any
+point leaves either the previous checkpoint set intact plus an orphaned
+``step_*.tmp`` staging dir (swept by the next save), or the new
+checkpoint fully durable.  ``_crash_hook`` lets tests kill the writer
+at each fsync/rename boundary (tests/test_checkpoint.py).
+
+Discovery is defensive: ``latest_step``/``load_checkpoint`` skip stray
+``step_*`` entries with non-numeric suffixes and step dirs missing
+``meta.json``/``arrays.npz`` (each skip warns once per path), falling
+back to the newest *intact* checkpoint instead of crashing on the
+debris a crashed or foreign writer left behind.
+
+The erasure-coded variant (``repro.checkpoint.coded``) shares this
+module's staging/fsync machinery; its step dirs carry ``manifest.json``
+instead of ``arrays.npz`` and are skipped (once-warned) by the
+monolithic loader here.
 """
 from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
-from typing import Any, Optional
+import warnings
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step", "restore_train_state"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "restore_train_state", "intact_steps"]
 
 
 _UINT_FOR_SIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+#: once-per-path memory of discovery warnings (a stray entry or torn
+#: checkpoint warns the first time it is skipped, then stays silent).
+_WARNED_PATHS: set = set()
+
+
+def _warn_once(path: str, message: str) -> None:
+    if path in _WARNED_PATHS:
+        return
+    _WARNED_PATHS.add(path)
+    warnings.warn(message, RuntimeWarning, stacklevel=3)
+
+
+def reset_discovery_warnings() -> None:
+    """Forget which skip warnings already fired (test hook)."""
+    _WARNED_PATHS.clear()
 
 
 def _flatten_with_paths(tree):
@@ -46,50 +89,183 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+# --------------------------------------------------------- durable staging
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _sweep_orphan_tmp(ckpt_dir: str, keep: Optional[str] = None) -> None:
+    """Remove ``step_*.tmp`` staging dirs a crashed writer left behind."""
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and d.endswith(".tmp") and d != keep:
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def _hook(crash_hook: Optional[Callable[[str], None]], stage: str) -> None:
+    if crash_hook is not None:
+        crash_hook(stage)
+
+
+def write_staged(ckpt_dir: str, step: int,
+                 write_files: Callable[[str], None], *,
+                 _crash_hook: Optional[Callable[[str], None]] = None) -> str:
+    """Write one checkpoint step dir with full crash atomicity.
+
+    ``write_files(tmp_dir)`` materializes the step's files into the
+    staging dir; it must call ``fsync_payload(path)`` (== this module's
+    ``_fsync_file``) on each file it writes, or durability stops at the
+    page cache.  Shared by the monolithic and erasure-coded savers.
+
+    ``_crash_hook(stage)`` is invoked after each durability boundary
+    ("payload_synced", "staging_synced", "renamed", "parent_synced");
+    a hook that raises simulates a crash at that point — no cleanup
+    runs, exactly like a real kill (tests assert the previous
+    checkpoint survives every stage).
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
+    _sweep_orphan_tmp(ckpt_dir, keep=None)
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    arrays, dtypes = _flatten_with_paths(tree)
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-    meta = {"step": int(step), "n_leaves": len(arrays), "dtypes": dtypes,
-            "extra": extra or {}}
-    with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump(meta, f, indent=2)
+    write_files(tmp)
+    _hook(_crash_hook, "payload_synced")
+    _fsync_dir(tmp)
+    _hook(_crash_hook, "staging_synced")
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _hook(_crash_hook, "renamed")
+    _fsync_dir(ckpt_dir)
+    _hook(_crash_hook, "parent_synced")
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    extra: Optional[dict] = None, *,
+                    _crash_hook: Optional[Callable[[str], None]] = None) -> str:
+    arrays, dtypes = _flatten_with_paths(tree)
+    meta = {"step": int(step), "n_leaves": len(arrays), "dtypes": dtypes,
+            "extra": extra or {}}
+
+    def write_files(tmp: str) -> None:
+        arrays_path = os.path.join(tmp, "arrays.npz")
+        with open(arrays_path, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        _hook(_crash_hook, "arrays_synced")
+        meta_path = os.path.join(tmp, "meta.json")
+        with open(meta_path, "w") as f:
+            json.dump(meta, f, indent=2)
+            f.flush()
+            os.fsync(f.fileno())
+        _hook(_crash_hook, "meta_synced")
+
+    return write_staged(ckpt_dir, step, write_files, _crash_hook=_crash_hook)
+
+
+# -------------------------------------------------------------- discovery
+def intact_steps(ckpt_dir: str) -> list[tuple[int, str]]:
+    """``(step, kind)`` for every well-formed step dir, newest first.
+
+    ``kind`` is ``"monolithic"`` (has ``arrays.npz``) or ``"coded"``
+    (has ``manifest.json``).  Stray ``step_*`` entries (non-numeric
+    suffix, files, staging ``.tmp`` dirs) and step dirs missing
+    ``meta.json`` + a payload are skipped; each skip warns once per
+    path.  This is the one scan every loader/manager shares.
+    """
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+        return []
+    out = []
+    for d in sorted(os.listdir(ckpt_dir), reverse=True):
+        if not d.startswith("step_"):
+            continue
+        if d.endswith(".tmp"):  # staging debris: expected, swept on save
+            continue
+        path = os.path.join(ckpt_dir, d)
+        m = _STEP_RE.match(d)
+        if m is None or not os.path.isdir(path):
+            _warn_once(path, f"skipping stray checkpoint entry {path!r} "
+                             "(not a step_<number> directory)")
+            continue
+        if not os.path.isfile(os.path.join(path, "meta.json")):
+            _warn_once(path, f"skipping malformed checkpoint {path!r} "
+                             "(missing meta.json)")
+            continue
+        if os.path.isfile(os.path.join(path, "arrays.npz")):
+            out.append((int(m.group(1)), "monolithic"))
+        elif os.path.isfile(os.path.join(path, "manifest.json")):
+            out.append((int(m.group(1)), "coded"))
+        else:
+            _warn_once(path, f"skipping malformed checkpoint {path!r} "
+                             "(missing arrays.npz / manifest.json)")
+    return out
 
 
-def load_checkpoint(ckpt_dir: str, step: Optional[int] = None) -> tuple[dict, dict]:
-    """Returns (flat path->array dict, meta)."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = intact_steps(ckpt_dir)
+    return steps[0][0] if steps else None
+
+
+def _load_step_dir(path: str) -> tuple[dict, dict]:
     with np.load(os.path.join(path, "arrays.npz")) as z:
         arrays = {k: z[k] for k in z.files}
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
-    import ml_dtypes  # jax dependency; restores bf16/fp8 views
+    import ml_dtypes  # noqa: F401  jax dependency; restores bf16/fp8 views
 
     for k, dt in meta.get("dtypes", {}).items():
         if k in arrays and str(arrays[k].dtype) != dt:
             arrays[k] = arrays[k].view(np.dtype(dt))
     return arrays, meta
+
+
+def load_checkpoint(ckpt_dir: str, step: Optional[int] = None) -> tuple[dict, dict]:
+    """Returns (flat path->array dict, meta).
+
+    With ``step=None`` the newest *loadable* monolithic checkpoint wins:
+    malformed or torn step dirs (and erasure-coded ones, which this
+    loader cannot decode) are skipped with a once-per-path warning
+    instead of crashing the restore.  An explicit ``step`` is strict —
+    a broken dir raises.
+    """
+    if step is not None:
+        path = os.path.join(ckpt_dir, f"step_{step:08d}")
+        if not os.path.isdir(path):
+            raise FileNotFoundError(f"no checkpoint {path}")
+        if not os.path.isfile(os.path.join(path, "arrays.npz")) and \
+                os.path.isfile(os.path.join(path, "manifest.json")):
+            raise ValueError(f"{path} is an erasure-coded checkpoint; use "
+                             "repro.checkpoint.coded.load_coded_checkpoint")
+        return _load_step_dir(path)
+    for s, kind in intact_steps(ckpt_dir):
+        path = os.path.join(ckpt_dir, f"step_{s:08d}")
+        if kind != "monolithic":
+            _warn_once(path + "#coded",
+                       f"skipping erasure-coded checkpoint {path!r} "
+                       "(monolithic loader; use repro.checkpoint.coded)")
+            continue
+        try:
+            return _load_step_dir(path)
+        except (OSError, ValueError, KeyError, json.JSONDecodeError) as e:
+            _warn_once(path + "#torn",
+                       f"skipping unreadable checkpoint {path!r} ({e}); "
+                       "falling back to the next newest")
+    raise FileNotFoundError(f"no loadable checkpoints under {ckpt_dir}")
 
 
 def restore_train_state(template: Any, ckpt_dir: str, step: Optional[int] = None) -> Any:

@@ -1,0 +1,491 @@
+"""Erasure-coded checkpointing: MDS parity stripes over the flat state.
+
+The repo already tolerates ``s`` losses out of ``N`` for *gradients*;
+this module applies the same trade to the *state*.  A TrainState pytree
+is flattened to bytes (exotic dtypes ride the same uint-view trick as
+``ckpt.py`` — bf16/fp8 NaN and inf payloads are just bytes here),
+packed into one lane-aligned buffer by ``FlatLayout.for_bytes`` (the
+fused gradient pipeline's offset contract, reapplied to stripes), and
+split into ``K = N - s`` equal data stripes.  ``s`` parity stripes are
+computed with the ``gc_encode`` kernel path and worker ``i`` of ``N``
+holds stripe ``i`` — lose any ``s`` of the ``N`` shards and the state
+restores bit-exactly from the ``N - s`` survivors, at ``~s/N`` storage
+overhead instead of replication's ``(s+1)x``.
+
+Exactness through a float kernel.  The parity matrix is a generalized
+Vandermonde ``P[i, j] = (j+1)^i`` (``i < s``, ``j < K``): totally
+positive, so *every* square submatrix is nonsingular — the MDS
+property, for any mix of lost data and parity stripes.  Stripes are
+decomposed into base-``2^b`` digits sized so that every partial sum in
+``C = P @ G`` stays below ``2^24`` and is therefore *exactly*
+representable through the kernel's fp32 accumulation: integer in,
+integer out, no rounding anywhere.  Decode subtracts the surviving
+data's contribution (the same exact kernel matmul), solves the tiny
+``|missing| x |missing|`` integer system in float64 on the host (error
+``~cond * 2^24 * 2^-53`` — many orders of magnitude under the 0.5
+rounding threshold), rounds to the nearest integer, and *verifies the
+reconstructed stripe against the manifest's per-shard crc32* — the
+end-to-end integrity check that turns "should be exact" into "checked
+exact" on every restore.
+
+Parity digits need ``b + log2(sum_j (j+1)^(s-1))`` bits, so parity
+stripes are stored byte-packed at the minimal width (typically 3 bytes
+per 2 payload bytes): the measured storage overhead is
+``s/N * width_ratio``, a small constant times the MDS ideal — the fp32
+exactness tax.  See docs/CHECKPOINT.md for the full contract and the
+overhead math; ``benchmarks/ckpt_recovery.py`` measures it.
+
+Every failure point degrades gracefully: a torn shard (unreadable npz),
+a missing shard, or a bit flip (crc mismatch) just demotes that shard
+to "lost"; restore succeeds while any ``N - s`` shards survive and
+raises ``ShardLossError`` naming the deficit when they don't.  A torn
+manifest makes the whole step dir malformed — the discovery fallback in
+``ckpt.py`` then steps back to the previous intact checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import zlib
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core.flat import FlatLayout, LANE
+
+from .ckpt import (
+    _UINT_FOR_SIZE,
+    _flatten_with_paths,
+    _path_str,
+    intact_steps,
+    write_staged,
+)
+
+__all__ = [
+    "CheckpointError",
+    "CodedSpec",
+    "ShardCorruptionError",
+    "ShardLossError",
+    "latest_coded_step",
+    "load_coded_checkpoint",
+    "restore_coded_train_state",
+    "save_coded_checkpoint",
+]
+
+#: fp32 mantissa width: every parity partial sum must stay strictly
+#: below 2**_F32_EXACT_BITS so the kernel's fp32 accumulate is exact.
+_F32_EXACT_BITS = 24
+
+MANIFEST_VERSION = 1
+PARITY_CODE = "vandermonde-v1"
+
+
+class CheckpointError(RuntimeError):
+    """Base class for coded-checkpoint failures."""
+
+
+class ShardLossError(CheckpointError):
+    """More shards lost than the (N, s) contract tolerates."""
+
+
+class ShardCorruptionError(CheckpointError):
+    """Decode produced bytes that fail the manifest's integrity check
+    (or a digit outside its base — both mean corrupted survivors)."""
+
+
+@dataclass(frozen=True)
+class CodedSpec:
+    """The (N, s) storage-coding contract a checkpoint is written under.
+
+    ``n_shards`` (N) total stripes — one per worker; ``parity`` (s) of
+    them are parity, so ``k_data = N - s`` carry payload and any
+    ``N - s`` survivors restore.  ``digit_bits`` is the payload digit
+    width fed through the fp32 kernel (``None``: the widest of 16/8
+    that keeps every parity sum exactly representable).
+    """
+
+    n_shards: int
+    parity: int
+    digit_bits: Optional[int] = None
+    lane: int = LANE
+
+    def __post_init__(self):
+        if not (0 < self.parity < self.n_shards):
+            raise ValueError(f"need 0 < parity < n_shards, got "
+                             f"s={self.parity}, N={self.n_shards}")
+        if self.digit_bits is not None and self.digit_bits not in (8, 16):
+            raise ValueError(f"digit_bits must be 8, 16, or None (auto); "
+                             f"got {self.digit_bits}")
+        b = self.digit_bits
+        if b is not None and self.max_parity_value(b) >= 2 ** _F32_EXACT_BITS:
+            raise ValueError(
+                f"digit_bits={b} overflows the fp32-exact budget for "
+                f"(N={self.n_shards}, s={self.parity}): max parity sum "
+                f"{self.max_parity_value(b)} >= 2^{_F32_EXACT_BITS}")
+        if self.digit_bits is None and \
+                self.max_parity_value(8) >= 2 ** _F32_EXACT_BITS:
+            raise ValueError(
+                f"(N={self.n_shards}, s={self.parity}) has no fp32-exact "
+                "digit width: the Vandermonde row sum "
+                f"{self._row_sum()} leaves no payload bits under "
+                f"2^{_F32_EXACT_BITS}")
+
+    # ------------------------------------------------------------- geometry
+    @property
+    def k_data(self) -> int:
+        return self.n_shards - self.parity
+
+    def _row_sum(self) -> int:
+        """Largest parity-row coefficient sum: sum_j (j+1)^(s-1)."""
+        return int(sum((j + 1) ** (self.parity - 1)
+                       for j in range(self.k_data)))
+
+    def max_parity_value(self, digit_bits: Optional[int] = None) -> int:
+        b = self.resolved_digit_bits() if digit_bits is None else digit_bits
+        return (2 ** b - 1) * self._row_sum()
+
+    def resolved_digit_bits(self) -> int:
+        if self.digit_bits is not None:
+            return self.digit_bits
+        for b in (16, 8):
+            if self.max_parity_value(b) < 2 ** _F32_EXACT_BITS:
+                return b
+        raise AssertionError("unreachable: __post_init__ validated")
+
+    def parity_byte_width(self) -> int:
+        """Bytes per stored parity digit (minimal little-endian width)."""
+        return (int(self.max_parity_value()).bit_length() + 7) // 8
+
+    def parity_matrix(self) -> np.ndarray:
+        """(s, K) generalized Vandermonde P[i, j] = (j+1)^i — totally
+        positive over distinct positive nodes, so every square submatrix
+        is nonsingular: the MDS guarantee for arbitrary loss patterns."""
+        j = np.arange(1, self.k_data + 1, dtype=np.float64)
+        i = np.arange(self.parity, dtype=np.float64)
+        return j[None, :] ** i[:, None]
+
+    def storage_overhead(self) -> float:
+        """Parity bytes per payload byte (padding excluded): the
+        measured counterpart of the MDS ideal s/N."""
+        digit_bytes = self.resolved_digit_bits() // 8
+        return self.parity * self.parity_byte_width() \
+            / (self.k_data * digit_bytes)
+
+    # --------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        return {"n_shards": int(self.n_shards), "parity": int(self.parity),
+                "digit_bits": int(self.resolved_digit_bits()),
+                "lane": int(self.lane)}
+
+    @classmethod
+    def from_dict(cls, blob: dict) -> "CodedSpec":
+        return cls(n_shards=int(blob["n_shards"]), parity=int(blob["parity"]),
+                   digit_bits=int(blob["digit_bits"]), lane=int(blob["lane"]))
+
+
+# --------------------------------------------------------------- byte plumbing
+def _leaf_records(tree):
+    """Flatten like ckpt.py and view every leaf as bytes.  Returns
+    (records, byte_leaves): records carry the manifest contract per leaf
+    (key, true dtype, uint storage dtype, shape), byte_leaves the flat
+    uint8 views in the same order."""
+    arrays, dtypes = _flatten_with_paths(tree)
+    records, byte_leaves = [], []
+    for key, arr in arrays.items():
+        flat = np.ascontiguousarray(arr).reshape(-1)
+        byte = flat.view(np.uint8) if flat.size else flat.astype(np.uint8)
+        records.append({
+            "key": key,
+            "dtype": dtypes[key],
+            "store_dtype": str(arr.dtype),
+            "shape": [int(d) for d in np.asarray(
+                arrays[key]).shape],
+            "nbytes": int(byte.size),
+        })
+        byte_leaves.append(byte)
+    return records, byte_leaves
+
+
+def _pack_uints(vals: np.ndarray, width: int) -> np.ndarray:
+    """(..., D) uint64 -> (..., D*width) uint8, little-endian digits."""
+    out = np.empty(vals.shape + (width,), np.uint8)
+    for k in range(width):
+        out[..., k] = (vals >> (8 * k)) & 0xFF
+    return out.reshape(vals.shape[:-1] + (-1,))
+
+def _unpack_uints(raw: np.ndarray, width: int) -> np.ndarray:
+    """Inverse of ``_pack_uints``."""
+    parts = raw.reshape(raw.shape[:-1] + (-1, width)).astype(np.uint64)
+    vals = np.zeros(parts.shape[:-1], np.uint64)
+    for k in range(width):
+        vals |= parts[..., k] << np.uint64(8 * k)
+    return vals
+
+
+def _encode_digits(p_sub: np.ndarray, digits: np.ndarray) -> np.ndarray:
+    """Integer-exact C = P @ G through the gradient-coding encode path
+    (Pallas kernel on TPU, its jnp oracle elsewhere) — both operands are
+    integer-valued float32 within the fp32-exact budget, so the result
+    is the exact integer matrix."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    c = ops.encode(jnp.asarray(np.asarray(p_sub, np.float32)),
+                   jnp.asarray(np.asarray(digits, np.float32)))
+    return np.asarray(c, np.float64)
+
+
+def _digit_dtype(bits: int):
+    return np.uint16 if bits == 16 else np.uint8
+
+
+def _stripes_to_digits(stripes: np.ndarray, bits: int) -> np.ndarray:
+    """(K, stripe_bytes) uint8 -> (K, D_digits) float32, exact."""
+    return stripes.view(_digit_dtype(bits)).astype(np.float32)
+
+
+def _digits_to_stripe(digits: np.ndarray, bits: int) -> np.ndarray:
+    """(D_digits,) integer array -> (stripe_bytes,) uint8."""
+    return np.ascontiguousarray(digits.astype(_digit_dtype(bits))) \
+        .view(np.uint8)
+
+
+def _crc(byte_arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(byte_arr).tobytes()) & 0xFFFFFFFF
+
+
+def _shard_name(i: int) -> str:
+    return f"shard_{i:03d}.npz"
+
+
+# ------------------------------------------------------------------- save
+def save_coded_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                          spec: CodedSpec, extra: Optional[dict] = None, *,
+                          _crash_hook: Optional[Callable[[str], None]] = None,
+                          ) -> str:
+    """Shard ``tree`` across ``spec.n_shards`` workers with ``spec.parity``
+    parity stripes; returns the published step dir.  Atomicity and
+    durability ride ``ckpt.write_staged`` (fsync files + staging dir,
+    rename, fsync parent), so a crash anywhere leaves the previous
+    checkpoint intact."""
+    records, byte_leaves = _leaf_records(tree)
+    layout = FlatLayout.for_bytes([r["nbytes"] for r in records],
+                                  spec.k_data, lane=spec.lane)
+    buf = np.zeros(layout.level_sizes[0], np.uint8)
+    for j, off in zip(layout.level_leaves[0], layout.level_offsets[0]):
+        buf[off:off + byte_leaves[j].size] = byte_leaves[j]
+    stripes = buf.reshape(spec.k_data, -1)
+    stripe_bytes = int(stripes.shape[1])
+    bits = spec.resolved_digit_bits()
+    if stripe_bytes % (bits // 8):
+        raise ValueError(f"stripe width {stripe_bytes} is not a multiple of "
+                         f"the {bits}-bit digit size; lower CodedSpec.lane "
+                         "alignment never produces this")
+
+    digits = _stripes_to_digits(stripes, bits)
+    parity = _encode_digits(spec.parity_matrix(), digits)
+    if not np.all(parity == np.rint(parity)) or \
+            float(parity.max(initial=0.0)) > spec.max_parity_value():
+        raise AssertionError("parity encode left the fp32-exact budget — "
+                             "CodedSpec validation is out of sync")
+    width = spec.parity_byte_width()
+    parity_bytes = _pack_uints(parity.astype(np.uint64), width)
+
+    shards = []
+    for i in range(spec.k_data):
+        shards.append({"file": _shard_name(i), "role": "data",
+                       "crc32": _crc(stripes[i]),
+                       "nbytes": int(stripes[i].size)})
+    for i in range(spec.parity):
+        shards.append({"file": _shard_name(spec.k_data + i), "role": "parity",
+                       "crc32": _crc(parity_bytes[i]),
+                       "nbytes": int(parity_bytes[i].size)})
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "kind": "coded",
+        "parity_code": PARITY_CODE,
+        "step": int(step),
+        "spec": spec.to_dict(),
+        "byteorder": sys.byteorder,
+        "parity_byte_width": width,
+        "stripe_bytes": stripe_bytes,
+        "payload_bytes": int(sum(r["nbytes"] for r in records)),
+        "layout": layout.to_dict(),
+        "leaves": records,
+        "shards": shards,
+        "extra": extra or {},
+    }
+    meta = {"step": int(step), "kind": "coded", "n_leaves": len(records),
+            "extra": extra or {}}
+
+    def write_files(tmp: str) -> None:
+        payloads = [stripes[i] for i in range(spec.k_data)] + \
+                   [parity_bytes[i] for i in range(spec.parity)]
+        for i, payload in enumerate(payloads):
+            with open(os.path.join(tmp, _shard_name(i)), "wb") as f:
+                np.savez(f, stripe=payload)
+                f.flush()
+                os.fsync(f.fileno())
+        _hook(_crash_hook, "shards_synced")
+        for name, blob in (("manifest.json", manifest), ("meta.json", meta)):
+            with open(os.path.join(tmp, name), "w") as f:
+                json.dump(blob, f, indent=2)
+                f.flush()
+                os.fsync(f.fileno())
+        _hook(_crash_hook, "manifest_synced")
+
+    return write_staged(ckpt_dir, step, write_files, _crash_hook=_crash_hook)
+
+
+def _hook(crash_hook, stage: str) -> None:
+    if crash_hook is not None:
+        crash_hook(stage)
+
+
+# ------------------------------------------------------------------- load
+def latest_coded_step(ckpt_dir: str) -> Optional[int]:
+    for s, kind in intact_steps(ckpt_dir):
+        if kind == "coded":
+            return s
+    return None
+
+
+def _read_shard(path: str, entry: dict) -> Optional[np.ndarray]:
+    """One shard file -> its payload, or None when the shard is lost:
+    missing file, torn write (unreadable npz), or bit flip / truncation
+    (crc or length mismatch against the manifest)."""
+    try:
+        with np.load(path) as z:
+            arr = np.asarray(z["stripe"])
+    except Exception:  # noqa: BLE001 - any unreadable shard is just lost
+        return None
+    if arr.dtype != np.uint8 or int(arr.size) != int(entry["nbytes"]):
+        return None
+    if _crc(arr) != int(entry["crc32"]):
+        return None
+    return arr
+
+
+def load_coded_checkpoint(ckpt_dir: str, step: Optional[int] = None, *,
+                          missing: Sequence[int] = ()) -> tuple[dict, dict]:
+    """Returns (flat path->array dict, manifest), decoding from whatever
+    shards survive.  ``missing`` marks shard indices to treat as lost on
+    top of real file loss/corruption — the worker-death path passes the
+    dead workers' shard ids here (and tests/benchmarks use it to
+    exercise every loss pattern without touching the filesystem)."""
+    if step is None:
+        step = latest_coded_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no coded checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(f"unreadable coded manifest in {path}: {e}") \
+            from e
+    if manifest.get("parity_code") != PARITY_CODE:
+        raise CheckpointError(
+            f"unknown parity code {manifest.get('parity_code')!r} in {path}")
+    if manifest.get("byteorder") != sys.byteorder:
+        raise CheckpointError(
+            f"checkpoint written on a {manifest.get('byteorder')}-endian "
+            f"host cannot decode on this {sys.byteorder}-endian one")
+    spec = CodedSpec.from_dict(manifest["spec"])
+    missing_set = {int(i) for i in missing}
+    bad = missing_set - set(range(spec.n_shards))
+    if bad:
+        raise ValueError(f"missing shard ids {sorted(bad)} out of range "
+                         f"[0, {spec.n_shards})")
+
+    shards = manifest["shards"]
+    stripe_bytes = int(manifest["stripe_bytes"])
+    width = int(manifest["parity_byte_width"])
+    bits = spec.resolved_digit_bits()
+    data: dict[int, np.ndarray] = {}
+    parity: dict[int, np.ndarray] = {}
+    for i, entry in enumerate(shards):
+        if i in missing_set:
+            continue
+        payload = _read_shard(os.path.join(path, entry["file"]), entry)
+        if payload is None:
+            continue
+        if entry["role"] == "data":
+            data[i] = payload
+        else:
+            parity[i - spec.k_data] = _unpack_uints(payload, width)
+
+    lost = [j for j in range(spec.k_data) if j not in data]
+    if lost:
+        if len(parity) < len(lost):
+            raise ShardLossError(
+                f"{path}: {len(lost)} data shard(s) {lost} lost with only "
+                f"{len(parity)} intact parity shard(s) — the (N={spec.n_shards}, "
+                f"s={spec.parity}) contract tolerates at most {spec.parity} "
+                "losses; restore needs any "
+                f"{spec.k_data} of {spec.n_shards} shards")
+        rows = sorted(parity)[:len(lost)]
+        p = spec.parity_matrix()
+        known = sorted(data)
+        rhs = np.stack([parity[r].astype(np.float64) for r in rows])
+        if known:
+            kept = np.stack([data[j] for j in known])
+            corr = _encode_digits(p[np.ix_(rows, known)],
+                                  _stripes_to_digits(kept, bits))
+            rhs = rhs - corr
+        sol = np.linalg.solve(p[np.ix_(rows, lost)], rhs)
+        digits = np.rint(sol)
+        if np.any(digits < 0) or np.any(digits >= 2 ** bits) or \
+                float(np.max(np.abs(sol - digits), initial=0.0)) > 0.25:
+            raise ShardCorruptionError(
+                f"{path}: decode produced out-of-range digits — surviving "
+                "shards are inconsistent (undetected corruption?)")
+        for pos, j in enumerate(lost):
+            stripe = _digits_to_stripe(digits[pos], bits)
+            if _crc(stripe) != int(shards[j]["crc32"]):
+                raise ShardCorruptionError(
+                    f"{path}: reconstructed shard {j} fails its manifest "
+                    "crc32 — surviving shards are inconsistent")
+            data[j] = stripe
+
+    buf = np.concatenate([data[j] for j in range(spec.k_data)])
+    layout = FlatLayout.from_dict(manifest["layout"])
+    import ml_dtypes  # noqa: F401  restores bf16/fp8 views
+
+    arrays = {}
+    offsets = dict(zip(layout.level_leaves[0], layout.level_offsets[0]))
+    for j, rec in enumerate(manifest["leaves"]):
+        raw = buf[offsets[j]:offsets[j] + int(rec["nbytes"])]
+        store = np.dtype(rec["store_dtype"])
+        arr = raw.view(store) if raw.size else np.zeros(0, store)
+        if rec["store_dtype"] != rec["dtype"]:
+            arr = arr.view(np.dtype(rec["dtype"]))
+        arrays[rec["key"]] = arr.reshape(rec["shape"])
+    return arrays, manifest
+
+
+def restore_coded_train_state(template: Any, ckpt_dir: str,
+                              step: Optional[int] = None, *,
+                              missing: Sequence[int] = ()) -> Any:
+    """Restore into the structure of ``template`` from any ``N - s``
+    surviving shards (shapes must match)."""
+    import jax
+    import jax.numpy as jnp
+
+    arrays, _ = load_coded_checkpoint(ckpt_dir, step, missing=missing)
+    flat = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_, leaf in flat[0]:
+        key = "/".join(_path_str(p) for p in path_)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat[1], leaves)

@@ -87,6 +87,21 @@ class FlatLayout:
                    level_used=tuple(level_used),
                    level_sizes=tuple(level_sizes))
 
+    @classmethod
+    def for_bytes(cls, byte_sizes: Sequence[int], n_shards: int, *,
+                  lane: int = LANE) -> "FlatLayout":
+        """Single-level byte-stripe layout: every leaf is a flat run of
+        ``byte_sizes[j]`` bytes in one level-0 buffer padded to
+        ``lcm(lane, n_shards)``, so the buffer splits into ``n_shards``
+        equal lane-aligned stripes.  This is the erasure-coded
+        checkpoint's packing plan (``repro.checkpoint.coded``): the same
+        deterministic offset contract the fused gradient pipeline uses,
+        reapplied to checkpoint stripes instead of gradient levels.
+        """
+        sizes = [int(n) for n in byte_sizes]
+        return cls.build([(n,) for n in sizes], [0] * len(sizes), n_shards,
+                         lane=lane)
+
     # --------------------------------------------------------------- queries
     @property
     def n_levels(self) -> int:

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.ckpt import save_checkpoint
+from repro.checkpoint import CheckpointManager, CkptConfig, CodedSpec
 from repro.configs import get_config
 from repro.core import Env, Plan, ShiftedExponential
 from repro.data.pipeline import DataConfig, SyntheticTokens, coded_worker_batches
@@ -64,6 +64,14 @@ def main():
                     help="sliding-window rounds for the runtime monitor")
     ap.add_argument("--uncoded", action="store_true")
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N steps (0: once, after training "
+                         "ends); resumes from the newest intact checkpoint "
+                         "under --ckpt on startup")
+    ap.add_argument("--ckpt-coded", type=int, default=0, metavar="S",
+                    help="erasure-code checkpoints across the workers with S "
+                         "parity shards (any workers-S survivors restore "
+                         "bit-exactly; 0: monolithic npz)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -82,16 +90,31 @@ def main():
     data = SyntheticTokens(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
                                       global_batch=args.global_batch))
 
+    manager = None
+    if args.ckpt:
+        spec = CodedSpec(n_shards=args.workers, parity=args.ckpt_coded) \
+            if args.ckpt_coded else None
+        manager = CheckpointManager(CkptConfig(
+            dir=args.ckpt, every=args.ckpt_every, coded=spec))
+
     with use_mesh(mesh, make_rules(cfg)):
         state, axes = init_train_state(cfg, jax.random.PRNGKey(0))
         print(f"{cfg.name}: {count_params(state.params)/1e6:.1f}M params, "
               f"mesh {dict(mesh.shape)}, coded={not args.uncoded}")
+        if manager is not None:
+            restored = manager.restore_latest(state)
+            if restored is not None:
+                state, resumed = restored
+                print(f"resumed from checkpoint step {resumed} "
+                      f"under {args.ckpt}")
         if args.uncoded:
             step = jax.jit(make_train_step(cfg, cfg_t))
-            for i in range(args.steps):
+            while (i := int(state.step)) < args.steps:
                 batch = {"tokens": jnp.asarray(data.batch(i))}
                 t0 = time.perf_counter()
                 state, metrics = step(state, batch)
+                if manager is not None:
+                    manager.maybe_save(int(state.step), state)
                 if i % 10 == 0 or i == args.steps - 1:
                     print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
                           f"({time.perf_counter()-t0:.2f}s)")
@@ -118,12 +141,15 @@ def main():
                     AdaptConfig(window=args.adapt_window), plan, state.params)
             print(f"plan x={plan.x.tolist()} s_max={plan.s_max} mode={mode} "
                   f"adapt={bool(controller)}")
-            for i in range(args.steps):
+            while (i := int(state.step)) < args.steps:
                 wb = jnp.asarray(coded_worker_batches(data, i, args.workers,
                                                       plan.s_max))
                 dec_w, rec = sim.step()
                 t0 = time.perf_counter()
                 state, metrics = step(state, wb, dec_w)
+                if manager is not None:
+                    manager.maybe_save(int(state.step), state,
+                                       extra={"plan": plan.to_dict()})
                 if controller is not None:
                     new_plan = controller.observe(rec["times"])
                     if new_plan is not None:
@@ -141,10 +167,9 @@ def main():
             if controller is not None:
                 print(f"adaptive: {len(controller.swaps)} plan swap(s), "
                       f"{controller.checks} drift check(s)")
-    if args.ckpt:
+    if manager is not None and manager.last_saved != int(state.step):
         extra = {} if args.uncoded else {"plan": plan.to_dict()}
-        print("saved:", save_checkpoint(args.ckpt, int(state.step), state,
-                                        extra=extra))
+        print("saved:", manager.save(int(state.step), state, extra=extra))
 
 
 if __name__ == "__main__":

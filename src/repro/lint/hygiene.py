@@ -1,4 +1,4 @@
-"""Repo-state hygiene checks (RH001-RH003).
+"""Repo-state hygiene checks (RH001-RH004).
 
 These migrated from bash greps in ``scripts/check.sh`` so the lint
 engine is the single owner of repo hygiene — one implementation, one
@@ -14,6 +14,13 @@ output format, no bash/python drift:
     or above the wave benchmark's enforcement floor
     (``benchmarks/wave_step.py`` ``MIN_SPEEDUP_FULL``): a regenerated
     file below the gate should fail here, not ship.
+  * RH004 — the committed ``BENCH_ckpt.json`` coded-checkpoint storage
+    overhead must stay under the erasure-coding floor
+    ``1.5 * (s/N + 1)`` bytes per payload byte (total stored / payload
+    — the MDS ideal is ``s/N + 1``; the 1.5 headroom covers digit
+    byte-packing and lane padding).  A coded checkpoint that costs
+    replication-class storage defeats its own point and must not ship
+    as the pinned number.
 """
 from __future__ import annotations
 
@@ -25,10 +32,17 @@ from typing import List, Optional
 
 from .engine import Finding
 
-__all__ = ["run_hygiene", "ASYNC_HEADLINE_FLOOR"]
+__all__ = ["run_hygiene", "ASYNC_HEADLINE_FLOOR", "ckpt_overhead_floor"]
 
 #: keep in sync with benchmarks/wave_step.py MIN_SPEEDUP_FULL
 ASYNC_HEADLINE_FLOOR = 1.2
+
+
+def ckpt_overhead_floor(n_shards: int, parity: int) -> float:
+    """Max allowed coded-checkpoint bytes per payload byte: the MDS
+    ideal ``s/N + 1`` with 1.5x headroom for digit packing + padding.
+    Shared by RH004 and benchmarks/ckpt_recovery.py's own gate."""
+    return 1.5 * (parity / n_shards + 1.0)
 
 _BENCHISH = re.compile(r"(bench|smoke)", re.IGNORECASE)
 _COMMITTED = re.compile(r"^BENCH_[A-Za-z0-9_]+\.json$")
@@ -86,4 +100,28 @@ def run_hygiene(root=None) -> List[Finding]:
                     f"{ASYNC_HEADLINE_FLOOR}x floor benchmarks/wave_step.py "
                     "enforces — a regression must not ship as the pinned "
                     "number"))
+
+    ckpt_json = root / "BENCH_ckpt.json"
+    if "BENCH_ckpt.json" in tracked:
+        try:
+            blob = json.loads(ckpt_json.read_text())
+            n = int(blob["coded"]["n_shards"])
+            s = int(blob["coded"]["parity"])
+            overhead = float(blob["coded"]["bytes_per_payload_byte"])
+        except (OSError, KeyError, TypeError, ValueError,
+                json.JSONDecodeError) as e:
+            findings.append(Finding(
+                "RH004", "BENCH_ckpt.json", 0, 0,
+                f"unreadable committed checkpoint headline ({e}) — "
+                "regenerate with benchmarks/ckpt_recovery.py"))
+        else:
+            floor = ckpt_overhead_floor(n, s)
+            if overhead > floor:
+                findings.append(Finding(
+                    "RH004", "BENCH_ckpt.json", 0, 0,
+                    f"coded checkpoint stores {overhead:.3f} bytes per "
+                    f"payload byte, above the 1.5*(s/N + 1) = {floor:.3f} "
+                    f"floor for (N={n}, s={s}) — replication-class storage "
+                    "defeats erasure coding and must not ship as the "
+                    "pinned number"))
     return findings

@@ -27,7 +27,8 @@ import numpy as np
 
 from repro.core.env import DegradedWorker, WorkerDeath
 
-__all__ = ["WorkerDeath", "DegradedWorker", "apply_faults", "heterogeneous"]
+__all__ = ["WorkerDeath", "DegradedWorker", "apply_faults", "drop_shard",
+           "flip_bit", "heterogeneous", "torn_write"]
 
 
 def apply_faults(times: np.ndarray, faults: Sequence):
@@ -55,6 +56,50 @@ def apply_faults(times: np.ndarray, faults: Sequence):
         else:
             raise TypeError(f"unknown fault {f!r}")
     return times, deaths
+
+
+# ------------------------------------------------------- storage faults
+# Filesystem-level fault injection for the erasure-coded checkpoint
+# (repro.checkpoint.coded): the same realize-the-fault philosophy as
+# apply_faults, applied to bytes at rest instead of cycle times.  Each
+# injector deterministically damages one file the way a real failure
+# would — a crash mid-write tears the tail off, cosmic rays / bad DIMMs
+# flip bits, a dead worker's disk simply vanishes — so tests and
+# benchmarks can assert the decode path degrades exactly as designed
+# (crc catches the flip, the torn/missing shard demotes to "lost", any
+# N - s survivors still restore bit-exactly).
+
+def torn_write(path: str, keep_fraction: float = 0.5) -> None:
+    """Truncate ``path`` to ``keep_fraction`` of its bytes: a writer
+    killed mid-write (the file exists, its tail never hit the disk)."""
+    import os
+
+    if not 0.0 <= keep_fraction < 1.0:
+        raise ValueError("keep_fraction must be in [0, 1)")
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(int(size * keep_fraction))
+
+
+def flip_bit(path: str, byte_offset: int, bit: int = 0) -> None:
+    """Flip one bit of ``path`` in place (silent media corruption —
+    the shard stays readable, its crc32 no longer matches)."""
+    if not 0 <= bit < 8:
+        raise ValueError("bit must be in [0, 8)")
+    with open(path, "r+b") as f:
+        f.seek(byte_offset)
+        b = f.read(1)
+        if not b:
+            raise ValueError(f"byte_offset {byte_offset} past end of {path}")
+        f.seek(byte_offset)
+        f.write(bytes([b[0] ^ (1 << bit)]))
+
+
+def drop_shard(path: str) -> None:
+    """Delete ``path``: the dead worker's local shard is simply gone."""
+    import os
+
+    os.remove(path)
 
 
 def heterogeneous(dist, n_workers: int, slow_workers: dict):

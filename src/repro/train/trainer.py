@@ -112,13 +112,22 @@ class Trainer:
     of the barrier loop — staleness 0 is bit-identical to the barrier,
     staleness k overlaps up to k rounds; see docs/ASYNC.md.  Composes
     with ``adapt`` (swaps quiesce in-flight waves first).
+
+    ``ckpt`` is an optional ``repro.checkpoint.CkptConfig``: the trainer
+    then checkpoints every ``ckpt.every`` steps at step boundaries
+    (erasure-coded across the workers when ``ckpt.coded`` is set),
+    resumes from the newest intact checkpoint on construction
+    (``ckpt.resume``), and arms the worker-death recovery path: a
+    ``DeathWatch`` tripwire over the realized round times triggers
+    forced re-plan + restore-from-survivors in one motion, recorded as
+    a ``RecoveryEvent`` in ``self.recoveries``; see docs/CHECKPOINT.md.
     """
 
     def __init__(self, cfg, cfg_t: TrainConfig, env, *, n_workers: int = None,
                  scheme: str = None, global_batch: int = 32, seed: int = 0,
                  mesh=None, mode: str = "sim", data_kind: str = "zipf",
                  solver: str = None, pipeline: str = "auto", adapt=None,
-                 wave=None):
+                 wave=None, ckpt=None):
         if scheme is None:
             scheme = solver if solver is not None else "xf"  # `solver` is the legacy kw
         if n_workers is None:
@@ -152,6 +161,19 @@ class Trainer:
             self.controller = AdaptiveController(adapt, self.plan,
                                                  self.state.params)
         self.history: list[dict] = []
+        self.recoveries: list = []
+        self.manager = self.deathwatch = None
+        if ckpt is not None:
+            from repro.adapt.monitor import DeathWatch
+            from repro.checkpoint.manager import CheckpointManager
+
+            self.manager = CheckpointManager(ckpt)
+            if n_workers >= 2:
+                self.deathwatch = DeathWatch(n_workers)
+            if ckpt.resume:
+                restored = self.manager.restore_latest(self.state)
+                if restored is not None:
+                    self.state = restored[0]
         self.wave = None
         if wave is not None:
             from .wave import WaveRunner
@@ -193,6 +215,46 @@ class Trainer:
             self.controller.monitor.reset()
         self.step_fn = self._step_fn_for(plan)
 
+    # ------------------------------------------------------------- recovery
+    def recover_from_deaths(self, newly_dead, log_fn=None):
+        """Worker-death recovery in one motion: forced re-plan (routes
+        future work off the dead workers) + erasure-coded restore from
+        the surviving shards (rewinds to the last checkpoint — the dead
+        workers' shards are gone, but any ``N - s`` survivors rebuild
+        the exact state).  Returns the ``RecoveryEvent``, or ``None``
+        when there is no checkpoint to restore from (training continues
+        on gradient-level redundancy alone).
+
+        The data stream is keyed by ``state.step``, so the rewound
+        steps replay deterministically under the new plan.
+        """
+        from repro.adapt.controller import RecoveryEvent
+
+        dead = tuple(sorted(self.deathwatch.dead)) \
+            if self.deathwatch is not None else tuple(sorted(newly_dead))
+        detected_at = int(self.state.step)
+        swap = None
+        if self.controller is not None:
+            new_plan = self.controller.replan_now()
+            if new_plan is not None:
+                swap = self.controller.swaps[-1]
+                self.swap_plan(new_plan)
+        if self.manager is None or self.manager.latest() is None:
+            if log_fn:
+                log_fn(f"step {detected_at:5d}  worker death {list(newly_dead)}"
+                       " — no checkpoint to restore; continuing on redundancy")
+            return None
+        self.state, ckpt_step = self.manager.restore_from_survivors(
+            self.state, missing=dead)
+        ev = RecoveryEvent(step=detected_at, dead_workers=dead,
+                           ckpt_step=ckpt_step, swap=swap)
+        self.recoveries.append(ev)
+        if log_fn:
+            log_fn(f"step {detected_at:5d}  worker death {list(newly_dead)} -> "
+                   f"re-plan{' + swap' if swap else ' skipped'}, coded restore "
+                   f"from survivors @ step {ckpt_step}")
+        return ev
+
     def run(self, n_steps: int, log_every: int = 10, log_fn=print):
         if self.wave is not None:
             return self.wave.run(n_steps, log_every, log_fn)
@@ -214,6 +276,17 @@ class Trainer:
                         log_fn(f"step {metrics['step']:5d}  plan swap -> "
                                f"x={new_plan.x.tolist()} (predicted gain "
                                f"{self.controller.swaps[-1].predicted_gain:.1%})")
+            if self.deathwatch is not None:
+                newly = self.deathwatch.observe(rec["times"])
+                if newly:
+                    ev = self.recover_from_deaths(
+                        newly, log_fn if log_every else None)
+                    if ev is not None:
+                        metrics["recovery"] = 1
+                        metrics["recovery_ckpt_step"] = ev.ckpt_step
+            if self.manager is not None:
+                self.manager.maybe_save(int(self.state.step), self.state,
+                                        extra={"plan": self.plan.to_dict()})
             self.history.append(metrics)
             if log_every and (i % log_every == 0 or i == n_steps - 1):
                 log_fn(f"step {metrics['step']:5d}  loss {metrics['loss']:.4f}  "

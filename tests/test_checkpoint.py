@@ -18,11 +18,13 @@ jax = pytest.importorskip("jax")
 import jax.numpy as jnp
 
 from repro.checkpoint import (
+    intact_steps,
     latest_step,
     load_checkpoint,
     restore_train_state,
     save_checkpoint,
 )
+from repro.checkpoint.ckpt import reset_discovery_warnings
 
 
 def _tree(seed=0):
@@ -127,6 +129,132 @@ def test_restore_validates_shape_and_missing(tmp_path):
         restore_train_state({"x": jnp.zeros((4,))}, str(tmp_path))
     with pytest.raises(KeyError, match="missing leaf"):
         restore_train_state({"y": jnp.zeros((3,))}, str(tmp_path))
+
+
+# ------------------------------------------------------ discovery hardening
+def test_stray_entries_skipped_with_one_shot_warning(tmp_path):
+    """latest_step/load_checkpoint survive the debris a crashed or
+    foreign writer leaves: non-numeric step_* names, step files (not
+    dirs), dirs missing meta.json or the payload — each skipped with
+    exactly one warning, and only the newest *intact* checkpoint wins."""
+    reset_discovery_warnings()
+    save_checkpoint(str(tmp_path), 7, {"x": jnp.arange(3.0)})
+    (tmp_path / "step_banana").mkdir()              # non-numeric suffix
+    (tmp_path / "step_00000zzz").write_text("?")    # stray file
+    nometa = tmp_path / "step_00000900"
+    nometa.mkdir()                                   # newer, but no meta.json
+    (nometa / "arrays.npz").write_bytes(b"x")
+    nopay = tmp_path / "step_00000800"
+    nopay.mkdir()                                    # meta but no payload
+    (nopay / "meta.json").write_text("{}")
+    with pytest.warns(RuntimeWarning, match="skipping"):
+        assert latest_step(str(tmp_path)) == 7
+    arrays, meta = load_checkpoint(str(tmp_path))
+    assert meta["step"] == 7
+    assert np.array_equal(arrays["x"], np.arange(3.0))
+    # one-shot: the same debris does not warn again
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        assert latest_step(str(tmp_path)) == 7
+
+
+def test_torn_newest_falls_back_to_intact(tmp_path):
+    """A newest step dir with a corrupt arrays.npz is skipped (warned
+    once) and load_checkpoint(step=None) falls back to the previous
+    intact checkpoint; the explicit-step load stays strict."""
+    reset_discovery_warnings()
+    save_checkpoint(str(tmp_path), 3, {"x": jnp.arange(2.0)})
+    save_checkpoint(str(tmp_path), 9, {"x": jnp.arange(2.0) + 1})
+    torn = tmp_path / "step_00000009" / "arrays.npz"
+    torn.write_bytes(b"not an npz at all")
+    assert latest_step(str(tmp_path)) == 9  # structurally intact...
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        arrays, meta = load_checkpoint(str(tmp_path))  # ...but unloadable
+    assert meta["step"] == 3
+    with pytest.raises(Exception):
+        load_checkpoint(str(tmp_path), 9)  # explicit step: strict
+    # every candidate torn -> a clear FileNotFoundError, not a crash
+    torn3 = tmp_path / "step_00000003" / "arrays.npz"
+    torn3.write_bytes(b"also garbage")
+    reset_discovery_warnings()
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(FileNotFoundError, match="no loadable"):
+            load_checkpoint(str(tmp_path))
+
+
+def test_intact_steps_reports_kind(tmp_path):
+    from repro.checkpoint import CodedSpec, save_coded_checkpoint
+
+    save_checkpoint(str(tmp_path), 1, {"x": jnp.arange(2.0)})
+    save_coded_checkpoint(str(tmp_path), 4, {"x": jnp.arange(8.0)},
+                          CodedSpec(n_shards=4, parity=1))
+    assert intact_steps(str(tmp_path)) == [(4, "coded"), (1, "monolithic")]
+    # the monolithic loader refuses a coded dir explicitly...
+    with pytest.raises(ValueError, match="erasure-coded"):
+        load_checkpoint(str(tmp_path), 4)
+    # ...and skips it (warning once) when scanning for the newest
+    reset_discovery_warnings()
+    with pytest.warns(RuntimeWarning, match="erasure-coded"):
+        arrays, meta = load_checkpoint(str(tmp_path))
+    assert meta["step"] == 1
+
+
+# --------------------------------------------------------- crash atomicity
+class _CrashAt:
+    """Crash hook that raises at one named durability stage."""
+
+    def __init__(self, stage):
+        self.stage = stage
+        self.seen = []
+
+    def __call__(self, stage):
+        self.seen.append(stage)
+        if stage == self.stage:
+            raise KeyboardInterrupt(f"injected crash at {stage}")
+
+
+CRASH_STAGES = ["arrays_synced", "meta_synced", "payload_synced",
+                "staging_synced", "renamed", "parent_synced"]
+
+
+@pytest.mark.parametrize("stage", CRASH_STAGES)
+def test_crash_at_every_boundary_keeps_previous_checkpoint(tmp_path, stage):
+    """Kill the writer at each fsync/rename boundary: the previous
+    checkpoint must stay loadable, and the next save must recover
+    (sweeping any orphaned staging dir) regardless of where the crash
+    landed."""
+    reset_discovery_warnings()
+    old = {"x": jnp.arange(4.0)}
+    new = {"x": jnp.arange(4.0) * 10}
+    save_checkpoint(str(tmp_path), 1, old)
+    with pytest.raises(KeyboardInterrupt):
+        save_checkpoint(str(tmp_path), 2, new, _crash_hook=_CrashAt(stage))
+    # previous checkpoint survives the crash at every stage
+    arrays, meta = load_checkpoint(str(tmp_path), 1)
+    assert np.array_equal(arrays["x"], np.arange(4.0))
+    # discovery never trips over the debris; crashes after the rename
+    # legitimately expose the (fully written) new checkpoint
+    arrays, meta = load_checkpoint(str(tmp_path))
+    assert meta["step"] in (1, 2)
+    if stage in ("renamed", "parent_synced"):
+        assert meta["step"] == 2
+    # the next save sweeps any orphan and lands cleanly
+    save_checkpoint(str(tmp_path), 3, new)
+    assert latest_step(str(tmp_path)) == 3
+    assert not any(d.endswith(".tmp") for d in os.listdir(str(tmp_path)))
+    arrays, _ = load_checkpoint(str(tmp_path), 3)
+    assert np.array_equal(arrays["x"], np.arange(4.0) * 10)
+
+
+def test_crash_hook_stage_order(tmp_path):
+    """The durability boundaries fire in the documented order — the
+    atomicity argument depends on it (files before staging dir before
+    rename before parent)."""
+    hook = _CrashAt(stage=None)
+    save_checkpoint(str(tmp_path), 0, {"x": jnp.zeros(2)}, _crash_hook=hook)
+    assert hook.seen == CRASH_STAGES
 
 
 def test_meta_json_is_readable(tmp_path):
