@@ -1,0 +1,203 @@
+"""Autotuner correctness + payoff gate — the ``repro.tune`` headline.
+
+Two parts, both asserted:
+
+**Exhaustive-correctness (N=4, iid).** On a space small enough to
+enumerate by hand — schemes {xf, xt} x s_cap {0..3} x both pipelines x
+both reduce modes x both grad dtypes — an independent brute force
+(price every candidate with the same public APIs: ``Plan.build`` +
+``Plan.simulate`` + ``repro.tune`` pricing helpers, then argmin) must
+select exactly the candidate ``autotune`` returns.  This pins the
+search against silent enumeration or tie-break drift.
+
+**Budget + payoff (gc-lm-110m, heterogeneous).** The wave-bench fleet
+(6 current-generation workers + 2 previous-generation at 2.5x) with a
+``BUDGET_GB`` per-worker HBM cap sized to genuinely bite (it prunes the
+uncapped fp32/psum candidates, ~6.8 GiB, while admitting plenty).
+Asserts every admissible candidate fits the budget, every pruned
+candidate carries a reason, and the headline:
+
+    tuned_vs_default = best hand-picked default's time / tuned time
+
+where the hand-picked defaults are the admissible candidates at the
+pre-autotuner launch knobs (flat / psum / fp32, any scheme, uncapped or
+capped).  ``tuned >= 1.0x`` holds by argmin construction whenever any
+default is admissible — the gate (and hygiene rule RH005 on the
+committed ``BENCH_autotune.json``) pins that the autotuner never ships
+a worse configuration than the old hand-picked path.
+
+The non-smoke run writes the committed ``BENCH_autotune.json``;
+``--smoke`` (CI) shrinks the simulate horizon and skips the default
+JSON so the committed numbers are never clobbered.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+
+import numpy as np
+
+#: part-2 per-worker HBM cap (GiB) — sized to prune the uncapped
+#: fp32/psum footprints (~6.8 GiB at gc-lm-110m x N=8) but admit most
+BUDGET_GB = 5.0
+#: the committed headline must stay at or above this (RH005)
+HEADLINE_FLOOR = 1.0
+
+JSON_DEFAULT = "BENCH_autotune.json"
+
+
+def _fleet(n_fast: int = 6, n_slow: int = 2, slow_factor: float = 2.5):
+    from repro.core import Env
+    from repro.core.distributions import ScaledStraggler, ShiftedExponential
+
+    fast = ShiftedExponential(mu=1e-3, t0=50.0)
+    slow = ScaledStraggler(base=fast, factor=slow_factor)
+    return Env.coerce([fast] * n_fast + [slow] * n_slow, n_fast + n_slow)
+
+
+def _brute_force(cfg, env, *, schemes, steps, seed):
+    """Independent argmin over the same space, via public APIs only."""
+    from repro.core import Plan
+    from repro.core.runtime import DEFAULT_COST
+    from repro.tune import estimate_memory
+    from repro.tune.tune import _overhead_units
+
+    from repro.train.state import abstract_train_state
+
+    shapes, _ = abstract_train_state(cfg)
+    price_env = env.solver_view()
+    best_key, best_time = None, np.inf
+    seen = set()
+    for scheme in schemes:
+        for s_cap in range(env.n_workers):
+            plan = Plan.build(shapes.params, env, scheme=scheme, rng=seed,
+                              s_cap=s_cap)
+            sig = (scheme, tuple(int(v) for v in plan.x))
+            if sig in seen:
+                continue
+            seen.add(sig)
+            cap = None if plan.s_max > s_cap else s_cap
+            sim = plan.simulate(price_env, steps, seed=seed,
+                                cost=DEFAULT_COST, backend="eq2")
+            tau = float(np.mean([r["tau_coded"] for r in sim.ledger]))
+            for pipeline in ("flat", "tree"):
+                for reduce_mode in ("psum", "psum_scatter"):
+                    for grad_dtype in ("fp32", "bf16"):
+                        t = tau + _overhead_units(plan, pipeline,
+                                                  reduce_mode, grad_dtype)
+                        key = (scheme, -1 if cap is None else cap, pipeline,
+                               reduce_mode, grad_dtype)
+                        if (t, key) < (best_time,
+                                       best_key or ("~",) * 5):
+                            best_time, best_key = t, key
+    return best_key, best_time
+
+
+def run(smoke: bool = False, verbose: bool = True, seed: int = 0,
+        json_path: str = JSON_DEFAULT) -> dict:
+    from repro.core import Env
+    from repro.core.distributions import ShiftedExponential
+    from repro.configs import get_config
+    from repro.tune import MemBudget, autotune
+
+    steps = 60 if smoke else 200
+
+    # ---- part 1: exhaustive-correctness on an enumerable space -------
+    cfg_small = get_config("gc-lm-110m").reduced()
+    env4 = Env.iid(ShiftedExponential(mu=1e-3, t0=50.0), 4)
+    schemes = ("xf", "xt")
+    res = autotune(cfg_small, env4, None, schemes=schemes, steps=steps,
+                   seed=seed, backend="eq2")
+    bf_key, bf_time = _brute_force(cfg_small, env4, schemes=schemes,
+                                   steps=steps, seed=seed)
+    got = res.best.key()
+    assert got == bf_key, (
+        f"autotune selected {got}, independent brute force says {bf_key}")
+    assert abs(res.best.time - bf_time) <= 1e-9 * max(1.0, bf_time), (
+        f"argmin times disagree: {res.best.time} vs {bf_time}")
+    if verbose:
+        print(f"exhaustive (N=4, {len(res.report.candidates)} candidates): "
+              f"autotune == brute force == {res.best.label()}")
+
+    # ---- part 2: budget + payoff at gc-lm-110m scale -----------------
+    cfg = get_config("gc-lm-110m")
+    env = _fleet()
+    budget = MemBudget.from_gb(BUDGET_GB)
+    res2 = autotune(cfg, env, budget, steps=steps, seed=seed)
+    rep = res2.report
+    assert rep.pruned, (
+        f"budget {budget} pruned nothing — the cap no longer bites; "
+        "lower BUDGET_GB so the gate stays meaningful")
+    over = [c for c in rep.candidates if c.mem.total > budget.hbm_bytes]
+    assert not over, (
+        f"{len(over)} admissible candidate(s) exceed the budget: "
+        f"{[c.label() for c in over[:3]]}")
+    unreasoned = [c for c in rep.pruned if not c.prune_reason]
+    assert not unreasoned, (
+        f"{len(unreasoned)} pruned candidate(s) carry no reason")
+
+    defaults = [c for c in rep.candidates
+                if (c.pipeline, c.reduce_mode, c.grad_dtype)
+                == ("flat", "psum", "fp32")]
+    assert defaults, "budget pruned every hand-picked default knob setting"
+    best_default = min(defaults, key=lambda c: (c.time, c.key()))
+    tuned_vs_default = best_default.time / res2.best.time
+    if verbose:
+        print(rep.table(limit=8))
+        print(f"tuned   : {res2.best.label()}  time {res2.best.time:.4g}  "
+              f"mem {res2.best.mem.total / 2**30:.2f} GiB")
+        print(f"default : {best_default.label()}  "
+              f"time {best_default.time:.4g}")
+        print(f"headline: tuned {tuned_vs_default:.3f}x best hand-picked "
+              f"default ({len(rep.candidates)} admissible, "
+              f"{len(rep.pruned)} pruned under {budget})")
+    assert tuned_vs_default >= HEADLINE_FLOOR, (
+        f"REGRESSION: tuned plan {tuned_vs_default:.3f}x vs the hand-picked "
+        f"default — the autotuner selected a worse configuration")
+
+    out = {
+        "bench": "autotune",
+        "smoke": bool(smoke),
+        "config": cfg.name,
+        "n_workers": env.n_workers,
+        "fleet": "6x fast + 2x 2.5-slow (ShiftedExponential mu=1e-3 t0=50)",
+        "budget_gb": BUDGET_GB,
+        "steps": steps,
+        "exhaustive_check": {"n_workers": 4, "schemes": list(schemes),
+                             "selected": res.best.label(),
+                             "agrees_with_brute_force": True},
+        "tuned": res2.best.to_dict(),
+        "best_default": best_default.to_dict(),
+        "tuned_vs_default": tuned_vs_default,
+        "n_admissible": len(rep.candidates),
+        "n_pruned": len(rep.pruned),
+        "host": {"platform": platform.platform(),
+                 "cpu_count": os.cpu_count()},
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        if verbose:
+            print(f"wrote {json_path}")
+    return out
+
+
+def main(smoke: bool = False, json_path: str = None) -> dict:
+    """Smoke runs skip the default JSON file so CI never clobbers the
+    committed full-scale ``BENCH_autotune.json``."""
+    if json_path is None:
+        json_path = "" if smoke else JSON_DEFAULT
+    out = run(smoke=smoke, json_path=json_path)
+    print("autotune: OK")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    main(smoke=args.smoke, json_path=args.json)

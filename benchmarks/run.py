@@ -33,14 +33,15 @@ def main(argv=None) -> None:
                     help="dump all section rows + statuses as JSON")
     args = ap.parse_args(argv)
 
-    from . import adaptive_env, ckpt_recovery, coded_step, fig3_partitions
-    from . import fig4a_runtime_vs_n, fig4b_runtime_vs_mu, heterogeneous_env
-    from . import kernel_bench, roofline, serve_load, sim_cluster, wave_step
+    from . import adaptive_env, autotune, ckpt_recovery, coded_step
+    from . import fig3_partitions, fig4a_runtime_vs_n, fig4b_runtime_vs_mu
+    from . import heterogeneous_env, kernel_bench, roofline, serve_load
+    from . import sim_cluster, wave_step
 
     known = {"fig3_partitions", "fig4a_runtime_vs_n", "fig4b_runtime_vs_mu",
              "kernel_bench", "coded_step", "roofline", "sim_cluster",
              "heterogeneous_env", "adaptive_env", "serve_load", "wave_step",
-             "ckpt_recovery"}
+             "ckpt_recovery", "autotune"}
     rows = []
     sections: dict = {}
     only = {s.strip() for s in args.only.split(",") if s.strip()}
@@ -75,6 +76,7 @@ def main(argv=None) -> None:
     section("serve_load", serve_load.main, smoke=smoke)      # coded decode p99 gate
     section("wave_step", wave_step.main, smoke=smoke)        # async-vs-barrier gate
     section("ckpt_recovery", ckpt_recovery.main, smoke=smoke)  # coded-ckpt gate
+    section("autotune", autotune.main, smoke=smoke)  # tuner == brute-force gate
 
     print("\nname,metric,value,status")
     for r in rows:

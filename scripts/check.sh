@@ -17,11 +17,12 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== repo hygiene (repro.lint RH001-RH004) =="
+echo "== repo hygiene (repro.lint RH001-RH005) =="
 # tracked .pyc, stray bench/smoke JSON outside BENCH_*.json, the
-# BENCH_async.json headline floor, and the BENCH_ckpt.json coded-
-# checkpoint storage-overhead floor — formerly inline bash/grep here,
-# now rules in src/repro/lint/hygiene.py (stdlib-only, no jax import).
+# BENCH_async.json headline floor, the BENCH_ckpt.json coded-
+# checkpoint storage-overhead floor, and the BENCH_autotune.json
+# tuned-vs-default floor — formerly inline bash/grep here, now rules
+# in src/repro/lint/hygiene.py (stdlib-only, no jax import).
 python -m repro.lint --hygiene
 
 echo
@@ -31,11 +32,11 @@ echo "== contract lint (repro.lint RL001-RL007) =="
 # (docs/LINT.md).
 python -m repro.lint src tests benchmarks
 
-# tier-1 passed-count baseline as of PR 9 (PR 8: 383; PR 7: 352; PR 6:
-# 318; PR 5: 280; PR 4: 255; PR 3: 237; PR 2: 208; PR 1: 143; seed:
-# 36).  Bump this when a PR adds tests — it is what catches silently
-# lost/uncollected files, not just failures.
-BASELINE=415
+# tier-1 passed-count baseline as of PR 10 (PR 9: 415; PR 8: 383; PR 7:
+# 352; PR 6: 318; PR 5: 280; PR 4: 255; PR 3: 237; PR 2: 208; PR 1:
+# 143; seed: 36).  Bump this when a PR adds tests — it is what catches
+# silently lost/uncollected files, not just failures.
+BASELINE=447
 # tests carrying @pytest.mark.spmd (registered in pytest.ini): the
 # multi-device subprocess tests the fast lane deselects.
 SPMD_COUNT=9
@@ -85,8 +86,12 @@ echo "== smoke benchmarks =="
 # robustness guard: every <=s loss pattern restores bit-exactly, the
 # e2e worker-death recovery completes, and the coded storage overhead
 # stays under 1.5*(s/N + 1) (assertions inside
-# benchmarks/ckpt_recovery.py).  bench_smoke.json is the
-# machine-readable row dump (uploaded as a CI artifact).
+# benchmarks/ckpt_recovery.py) — and the autotune correctness guard:
+# the tuner's pick must equal an independent brute-force argmin on the
+# exhaustive N=4 space, admit nothing over the memory budget, and beat
+# the hand-picked default (assertions inside benchmarks/autotune.py).
+# bench_smoke.json is the machine-readable row dump (uploaded as a CI
+# artifact).
 python -m benchmarks.run --smoke --json bench_smoke.json
 
 echo

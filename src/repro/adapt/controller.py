@@ -202,8 +202,13 @@ class AdaptiveController:
                                  per_worker=True, mc_samples=cfg.mc_samples)
         price_times = recent[1::2]
         scheme = cfg.scheme or self.plan.scheme
+        # thread the seed only where the scheme consumes it: closed
+        # forms would discard it with a ReproWarning otherwise
+        from repro.core.schemes import scheme_accepts_warm_start
+
         warm = (np.asarray(self.plan.x, np.float64)
-                if cfg.warm_start else None)
+                if cfg.warm_start and scheme_accepts_warm_start(scheme)
+                else None)
         # distinct seed per re-solve: the estimate changed, the solve
         # stream should too (still deterministic given the time stream)
         self._replan_count += 1

@@ -78,6 +78,7 @@ from .schemes import (
     available_schemes,
     get_scheme,
     register_scheme,
+    scheme_accepts_warm_start,
     scheme_bank,
     solve_scheme,
 )

@@ -370,6 +370,13 @@ class ScaledStraggler(StragglerDistribution):
     def __post_init__(self):
         if self.base is None:
             raise ValueError("ScaledStraggler needs a base distribution")
+        if not hasattr(self.base, "sample"):
+            # the classic misbinding: ScaledStraggler(dist, 2.5) binds the
+            # inherited mc_samples field first — insist on keywords
+            raise TypeError(
+                f"base must be a StragglerDistribution, got "
+                f"{type(self.base).__name__!r}; construct with keywords: "
+                "ScaledStraggler(base=dist, factor=2.5)")
         if self.factor <= 0:
             raise ValueError("factor must be positive")
 

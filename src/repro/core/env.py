@@ -9,7 +9,8 @@ layer consumes — solvers (``solve_scheme``), ``Plan.build``,
 ``launch/train.py``:
 
     env = Env.iid(ShiftedExponential(mu=1e-3, t0=50.0), 8)
-    env = Env.heterogeneous([fast] * 6 + [ScaledStraggler(fast, 2.5)] * 2)
+    env = Env.heterogeneous(
+        [fast] * 6 + [ScaledStraggler(base=fast, factor=2.5)] * 2)
     env = env.with_faults(WorkerDeath(0, at_round=5),
                           DegradedWorker(3, 6.0, from_round=10))
     env = Env.from_trace("cluster.json")          # measured, per-worker

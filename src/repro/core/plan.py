@@ -109,22 +109,38 @@ class Plan:
     def build(cls, params_or_costs, env, n_workers: Optional[int] = None, *,
               scheme: str = "xf", rng: int = 0, cost: CostModel = DEFAULT_COST,
               prefer_fractional: bool = False, s_cap=None,
-              total: int = UNIT_RESOLUTION, warm_start=None) -> "Plan":
+              total: int = UNIT_RESOLUTION, warm_start=None,
+              budget=None) -> "Plan":
         """Optimize the partition and bind it to this model's leaves.
 
         ``env`` is an ``Env`` (``n_workers`` then optional, validated if
         given) or anything ``Env.coerce`` accepts — a bare
         ``StragglerDistribution`` with ``n_workers``, or a per-worker
         distribution list.  ``scheme`` is any name from
-        ``available_schemes()`` (or a registered alias).
-        ``prefer_fractional=False``: the trainer always uses Tandon's
-        cyclic code so every level shares the one cyclic shard
-        allocation I_n.  ``s_cap`` bounds the top redundancy level
-        (SPMD work/tolerance co-design).  ``warm_start`` seeds
-        iterative schemes (spsg) from a previous block vector — the
-        adaptive re-planning hot path (``repro.adapt``); closed forms
-        ignore it.
+        ``available_schemes()`` (or a registered alias), or ``"auto"``
+        to search (scheme x s_cap) with ``repro.tune.autotune_plan`` —
+        runtime-priced via ``simulate``, optionally pruned by a
+        ``repro.tune.MemBudget`` passed as ``budget`` (only meaningful
+        with ``scheme="auto"``); the winner carries its search record
+        as ``plan.tune_report``.  ``prefer_fractional=False``: the
+        trainer always uses Tandon's cyclic code so every level shares
+        the one cyclic shard allocation I_n.  ``s_cap`` bounds the top
+        redundancy level (SPMD work/tolerance co-design).
+        ``warm_start`` seeds iterative schemes (spsg) from a previous
+        block vector — the adaptive re-planning hot path
+        (``repro.adapt``); closed forms ignore it.
         """
+        if scheme == "auto":
+            from repro.tune import autotune_plan  # deferred: avoid cycle
+
+            return autotune_plan(
+                params_or_costs, env, n_workers, budget=budget, rng=rng,
+                cost=cost, total=total, s_cap=s_cap,
+                prefer_fractional=prefer_fractional)
+        if budget is not None:
+            raise ValueError(
+                "budget= is only meaningful with scheme='auto' — a fixed "
+                "scheme solves one plan and has nothing to prune")
         env = Env.coerce(env, n_workers)
         n_workers = env.n_workers
         x = solve_scheme(scheme, env, n_workers, total, cost=cost, rng=rng,

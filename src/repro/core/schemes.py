@@ -49,6 +49,7 @@ __all__ = [
     "get_scheme",
     "available_schemes",
     "solve_scheme",
+    "scheme_accepts_warm_start",
     "scheme_bank",
 ]
 
@@ -139,7 +140,9 @@ def solve_scheme(name: str, env, n_workers: int, total: int, *,
     from (the adaptive re-planning path: re-solve close to the current
     plan's x).  It is forwarded only to schemes whose solve function
     declares a ``warm_start`` parameter (``spsg`` does); closed forms
-    and baselines ignore it — their solutions are seed-free.
+    and baselines discard it — their solutions are seed-free — and the
+    discard warns once per scheme (``ReproWarning``) so callers relying
+    on a seed that never arrives find out.
     """
     scheme = get_scheme(name)
     # solver view: static degradations folded in, transient faults
@@ -147,8 +150,19 @@ def solve_scheme(name: str, env, n_workers: int, total: int, *,
     # against the same effective population.
     env = Env.coerce(env, n_workers).solver_view()
     kw = {}
-    if warm_start is not None and _accepts_warm_start(scheme):
-        kw["warm_start"] = np.asarray(warm_start, np.float64)
+    if warm_start is not None:
+        if _accepts_warm_start(scheme):
+            kw["warm_start"] = np.asarray(warm_start, np.float64)
+        else:
+            from repro.deprecation import ReproWarning, warn_once
+
+            warn_once(
+                f"warm-start-discarded:{scheme.name}",
+                f"scheme {scheme.name!r} does not declare a warm_start "
+                "parameter; the provided seed vector is discarded (its "
+                "solution is seed-free). Pass warm_start only to "
+                "iterative schemes (check scheme_accepts_warm_start).",
+                category=ReproWarning)
     x = scheme.solve(env, n_workers, total, cost=cost, rng=rng, s_cap=s_cap,
                      **kw)
     x = np.asarray(x, np.float64)
@@ -163,6 +177,13 @@ def _accepts_warm_start(scheme: Scheme) -> bool:
         return "warm_start" in inspect.signature(scheme.solve).parameters
     except (TypeError, ValueError):  # builtins/C callables: assume not
         return False
+
+
+def scheme_accepts_warm_start(name: str) -> bool:
+    """Public check: does scheme ``name`` consume a ``warm_start`` seed?
+    Callers that thread a previous solution generically (the adaptive
+    re-planner) gate on this instead of tripping the discard warning."""
+    return _accepts_warm_start(get_scheme(name))
 
 
 def scheme_bank(env, n_workers: int, total: int, rng=0,

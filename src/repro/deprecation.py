@@ -19,7 +19,8 @@ from __future__ import annotations
 
 import warnings
 
-__all__ = ["ReproDeprecationWarning", "warn_once", "reset_warned"]
+__all__ = ["ReproDeprecationWarning", "ReproWarning", "warn_once",
+           "reset_warned"]
 
 
 class ReproDeprecationWarning(DeprecationWarning):
@@ -27,15 +28,23 @@ class ReproDeprecationWarning(DeprecationWarning):
     internal (``repro.*``) callers in tier-1 — see pytest.ini."""
 
 
+class ReproWarning(UserWarning):
+    """A one-shot repro usability warning (e.g. a ``warm_start`` seed
+    silently discarded by a closed-form scheme).  Deliberately NOT a
+    ``ReproDeprecationWarning``: internal callers may legitimately hit
+    these paths, so the tier-1 shim firewall must not promote them."""
+
+
 _WARNED: set = set()
 
 
-def warn_once(key: str, message: str, stacklevel: int = 3) -> None:
+def warn_once(key: str, message: str, stacklevel: int = 3,
+              category=ReproDeprecationWarning) -> None:
     """Warn once per process for ``key``; later calls are silent."""
     if key in _WARNED:
         return
     _WARNED.add(key)
-    warnings.warn(message, ReproDeprecationWarning, stacklevel=stacklevel)
+    warnings.warn(message, category, stacklevel=stacklevel)
 
 
 def reset_warned() -> None:

@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from repro.configs import INPUT_SHAPES, get_config, list_archs, shape_supported
 from repro.core import ShiftedExponential
 from repro.dist.sharding import make_rules, pspec_for_axes, use_mesh
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, dtype_nbytes
 from repro.launch.mesh import HW, make_production_mesh
 from repro.launch.specs import input_specs
 from repro.models.model import train_loss
@@ -37,10 +37,10 @@ from repro.train.coded import make_coded_grad_fn
 from repro.train.state import abstract_train_state, state_shardings
 from repro.train.trainer import TrainConfig, make_coded_train_step, make_train_step
 
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
-                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# dtype widths come from hlo_analysis.dtype_nbytes — one table, one
+# unknown-token policy (inferred width + one-shot warning), no drift
+# between the two HLO parsers.
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
@@ -63,13 +63,14 @@ def parse_collectives(hlo_text: str) -> dict:
             shape_part = lhs.split("=", 1)[1]
             nbytes = 0
             for dt, dims in _SHAPE_RE.findall(shape_part):
-                if dt not in _DTYPE_BYTES:
+                b = dtype_nbytes(dt)
+                if b is None:  # structural token, not an array dtype
                     continue
                 n = 1
                 if dims:
                     for d in dims.split(","):
                         n *= int(d)
-                nbytes += n * _DTYPE_BYTES[dt]
+                nbytes += n * b
             out[kind]["bytes"] += nbytes
             out[kind]["count"] += 1
             break

@@ -25,12 +25,15 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
-__all__ = ["analyze_hlo", "HloCost"]
+__all__ = ["analyze_hlo", "HloCost", "dtype_nbytes"]
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
                 "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
                 "s4": 1, "u4": 1}
+
+# first digit run after the kind letters: f8e4m3b11fnuz -> 8, s4 -> 4
+_BITS_RE = re.compile(r"^[a-z]+?([0-9]+)")
 
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
 # "  %name = <shape> opcode(...)," — opcode is the token right after shape
@@ -67,19 +70,50 @@ _ZERO_COST = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
               "all-reduce-start", "all-reduce-done"}
 
 
+def dtype_nbytes(dt: str) -> int | None:
+    """Bytes per element for an HLO dtype token, ``None`` for structural
+    tokens that aren't array dtypes (``token``, ``opaque``).
+
+    Tokens missing from ``_DTYPE_BYTES`` (newer dtypes: ``f8e4m3b11fnuz``
+    variants, narrow ints) DEGRADE instead of being dropped: the element
+    width is inferred from the first digit run in the token (``f8…`` →
+    8 bits, ``s4`` → 4 bits, byte-ceiled) and a one-shot ``ReproWarning``
+    names the token — one unparseable op must not silently zero out (or
+    abort) a whole-module memory/roofline analysis.  ``analyze_hlo``
+    additionally counts such tokens into ``HloCost.unknown_dtypes``.
+    """
+    b = _DTYPE_BYTES.get(dt)
+    if b is not None:
+        return b
+    m = _BITS_RE.match(dt)
+    if m is None:
+        return None
+    bits = int(m.group(1))
+    from repro.deprecation import ReproWarning, warn_once
+
+    warn_once(
+        f"hlo-unknown-dtype:{dt}",
+        f"HLO dtype token {dt!r} is not in the known byte table; "
+        f"counting it at an inferred {bits} bits/element into the "
+        "unknown_dtype bucket (see HloCost.unknown_dtypes)",
+        category=ReproWarning)
+    return max(1, (bits + 7) // 8)
+
+
 def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
     """Total (elements, bytes) over all array components in a shape string."""
     elems = 0
     nbytes = 0
     for dt, dims in _SHAPE_RE.findall(shape_str):
-        if dt not in _DTYPE_BYTES:
+        b = dtype_nbytes(dt)
+        if b is None:
             continue
         n = 1
         if dims:
             for d in dims.split(","):
                 n *= int(d)
         elems += n
-        nbytes += n * _DTYPE_BYTES[dt]
+        nbytes += n * b
     return elems, nbytes
 
 
@@ -115,6 +149,10 @@ class HloCost:
     collective_bytes: dict = field(default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
     collective_counts: dict = field(default_factory=lambda: {k: 0 for k in COLLECTIVES})
     while_trips: list = field(default_factory=list)
+    #: dtype tokens missing from the byte table -> occurrence count in
+    #: the analyzed text; their bytes are counted at an inferred width
+    #: (``dtype_nbytes``) rather than dropped.
+    unknown_dtypes: dict = field(default_factory=dict)
 
     @property
     def total_collective_bytes(self) -> float:
@@ -450,4 +488,10 @@ def analyze_hlo(text: str, entry: str | None = None) -> HloCost:
         # fall back: a computation never called by others
         roots = [c for c in comps if c not in called]
         entry = roots[-1] if roots else next(iter(comps))
-    return _Analyzer(comps).comp_cost(entry)
+    cost = _Analyzer(comps).comp_cost(entry)
+    unknown: dict[str, int] = {}
+    for dt, _dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES and _BITS_RE.match(dt):
+            unknown[dt] = unknown.get(dt, 0) + 1
+    cost.unknown_dtypes = unknown
+    return cost

@@ -46,7 +46,13 @@ def main():
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--scheme", "--solver", dest="scheme", default="xf",
-                    help="any name from repro.core.available_schemes()")
+                    help="any name from repro.core.available_schemes(), or "
+                         "'auto' to search the launch space (repro.tune)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="shorthand for --scheme auto")
+    ap.add_argument("--hbm-gb", type=float, default=0.0,
+                    help="per-worker HBM cap in GiB for the autotuner "
+                         "(0: uncapped); implies --autotune")
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--data-par", type=int, default=1)
@@ -119,7 +125,25 @@ def main():
                     print(f"step {i:4d} loss {float(metrics['loss']):.4f} "
                           f"({time.perf_counter()-t0:.2f}s)")
         else:
-            plan = Plan.build(state.params, env, scheme=args.scheme)
+            reduce_mode, grad_dtype, pipeline = "psum", None, "auto"
+            if args.autotune or args.hbm_gb or args.scheme == "auto":
+                from repro.tune import MemBudget, autotune
+
+                budget = (MemBudget.from_gb(args.hbm_gb)
+                          if args.hbm_gb else None)
+                res = autotune(cfg, env, budget,
+                               global_batch=args.global_batch,
+                               seq_len=args.seq)
+                plan, best = res.plan, res.best
+                reduce_mode, pipeline = best.reduce_mode, best.pipeline
+                grad_dtype = jnp.bfloat16 if best.grad_dtype == "bf16" else None
+                print(f"autotune: {len(res.report.candidates)} admissible, "
+                      f"{len(res.report.pruned)} pruned "
+                      f"(budget {budget or 'uncapped'})")
+                print(res.report.table())
+                print(f"selected {best.label()}")
+            else:
+                plan = Plan.build(state.params, env, scheme=args.scheme)
             sim = plan.simulator(env)
             mode = "spmd" if args.data_par == args.workers else "sim"
             step_mesh = mesh if mode == "spmd" else None
@@ -129,7 +153,9 @@ def main():
                 key = p.partition_key()
                 if key not in step_cache:
                     step_cache[key] = jax.jit(make_coded_train_step(
-                        cfg, cfg_t, p, mesh=step_mesh, mode=mode))
+                        cfg, cfg_t, p, mesh=step_mesh, mode=mode,
+                        reduce_mode=reduce_mode, grad_dtype=grad_dtype,
+                        pipeline=pipeline))
                 return step_cache[key]
 
             step = step_for(plan)

@@ -1,4 +1,4 @@
-"""Repo-state hygiene checks (RH001-RH004).
+"""Repo-state hygiene checks (RH001-RH005).
 
 These migrated from bash greps in ``scripts/check.sh`` so the lint
 engine is the single owner of repo hygiene — one implementation, one
@@ -21,6 +21,11 @@ output format, no bash/python drift:
     byte-packing and lane padding).  A coded checkpoint that costs
     replication-class storage defeats its own point and must not ship
     as the pinned number.
+  * RH005 — the committed ``BENCH_autotune.json`` headline
+    (``tuned_vs_default``) must stay at or above 1.0: the autotuner
+    selecting a configuration slower than the hand-picked default
+    (xf / flat / psum / fp32) is a selection bug, not a tuning result,
+    and must not ship as the pinned number.
 """
 from __future__ import annotations
 
@@ -32,10 +37,14 @@ from typing import List, Optional
 
 from .engine import Finding
 
-__all__ = ["run_hygiene", "ASYNC_HEADLINE_FLOOR", "ckpt_overhead_floor"]
+__all__ = ["run_hygiene", "ASYNC_HEADLINE_FLOOR", "AUTOTUNE_HEADLINE_FLOOR",
+           "ckpt_overhead_floor"]
 
 #: keep in sync with benchmarks/wave_step.py MIN_SPEEDUP_FULL
 ASYNC_HEADLINE_FLOOR = 1.2
+
+#: keep in sync with benchmarks/autotune.py HEADLINE_FLOOR
+AUTOTUNE_HEADLINE_FLOOR = 1.0
 
 
 def ckpt_overhead_floor(n_shards: int, parity: int) -> float:
@@ -124,4 +133,25 @@ def run_hygiene(root=None) -> List[Finding]:
                     f"floor for (N={n}, s={s}) — replication-class storage "
                     "defeats erasure coding and must not ship as the "
                     "pinned number"))
+
+    tune_json = root / "BENCH_autotune.json"
+    if "BENCH_autotune.json" in tracked:
+        try:
+            ratio = float(json.loads(
+                tune_json.read_text())["tuned_vs_default"])
+        except (OSError, KeyError, TypeError, ValueError,
+                json.JSONDecodeError) as e:
+            findings.append(Finding(
+                "RH005", "BENCH_autotune.json", 0, 0,
+                f"unreadable committed autotune headline ({e}) — "
+                "regenerate with benchmarks/autotune.py"))
+        else:
+            if ratio < AUTOTUNE_HEADLINE_FLOOR:
+                findings.append(Finding(
+                    "RH005", "BENCH_autotune.json", 0, 0,
+                    f"committed autotune headline {ratio:.3f}x is below "
+                    f"the {AUTOTUNE_HEADLINE_FLOOR}x floor — the tuner "
+                    "selected a configuration slower than the hand-picked "
+                    "default, which is a selection bug and must not ship "
+                    "as the pinned number"))
     return findings

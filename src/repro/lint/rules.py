@@ -354,8 +354,9 @@ class RL003HostSideEffects(Rule):
     ``print`` inside a jitted function runs once per *trace*, not once
     per call — state silently stops updating after compilation and
     diverges between cache hits and misses.  (The serve engine's
-    ``_TRACE_COUNTS`` increments exploit exactly this to count
-    retraces; they carry inline suppressions.)
+    retrace counter used to exploit exactly this and was the one
+    baselined finding; it now derives counts from the jit objects'
+    compiled-signature caches instead, and the baseline is empty.)
     """
     id = "RL003"
     title = "host side effect in traced context"

@@ -140,10 +140,52 @@ def _reset_deprecation_warnings() -> None:
 # pytree argument (None and array pytrees trace fine) so it no longer
 # forces a rebuild.
 #
-# ``_TRACE_COUNTS`` increments only while jax *traces* (python execution
-# of the wrapped function), giving tests a retrace counter that is
-# independent of jax version internals.
-_TRACE_COUNTS: Counter = Counter()
+# Trace counting is derived, not recorded: every jitted callable the
+# factories hand out is wrapped in a ``_CountingJit`` registered under
+# its entry-point kind, and ``trace_counts`` sums the distinct abstract
+# input signatures each wrapper has seen.  For a fixed jit object every
+# trace-relevant static input is already in the factory memo key, so a
+# retrace happens exactly when a call presents a new (treedef, shapes,
+# dtypes) signature; recording that signature happens at dispatch time
+# on the host — never under trace (lint RL003: a traced function must
+# stay replayable from its jaxpr).  The jit object's own
+# ``_cache_size()`` is NOT usable here: it counts C++ dispatch keys,
+# which split committed vs uncommitted inputs without a retrace.
+_JIT_REGISTRY: list = []  # (kind, _CountingJit)
+
+
+def _leaf_sig(leaf):
+    shape = getattr(leaf, "shape", None)
+    dtype = getattr(leaf, "dtype", None)
+    if shape is None or dtype is None:  # weak host scalar
+        return ((), np.asarray(leaf).dtype.str, True)
+    return (tuple(shape), str(dtype), False)
+
+
+class _CountingJit:
+    """Host-side wrapper deriving a jitted callable's trace count from
+    the distinct abstract input signatures it has been called with."""
+
+    __slots__ = ("fn", "signatures")
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.signatures = set()
+
+    def __call__(self, *args):
+        leaves, treedef = jax.tree.flatten(args)
+        self.signatures.add((treedef, tuple(_leaf_sig(l) for l in leaves)))
+        return self.fn(*args)
+
+    @property
+    def n_traces(self) -> int:
+        return len(self.signatures)
+
+
+def _register_jit(kind: str, jitted) -> _CountingJit:
+    wrapper = _CountingJit(jitted)
+    _JIT_REGISTRY.append((kind, wrapper))
+    return wrapper
 
 
 def _sharding_ctx_key():
@@ -158,20 +200,18 @@ def _sharding_ctx_key():
 @functools.lru_cache(maxsize=64)
 def _prefill_fn(cfg, target_len: int, ctx_key):
     def fn(p, tokens, aux_inputs):
-        _TRACE_COUNTS["prefill"] += 1
         return prefill(cfg, p, tokens, aux_inputs=aux_inputs,
                        target_len=target_len)
 
-    return jax.jit(fn)
+    return _register_jit("prefill", jax.jit(fn))
 
 
 @functools.lru_cache(maxsize=64)
 def _decode_fn(cfg, ctx_key):
     def fn(p, caches, token, aux_inputs):
-        _TRACE_COUNTS["decode"] += 1
         return decode_step(cfg, p, caches, token, aux_inputs=aux_inputs)
 
-    return jax.jit(fn)
+    return _register_jit("decode", jax.jit(fn))
 
 
 @functools.lru_cache(maxsize=64)
@@ -180,10 +220,9 @@ def _insert_fn(cfg, ctx_key):
     different slots share one compilation."""
 
     def fn(slab, pref_caches, slot):
-        _TRACE_COUNTS["insert"] += 1
         return insert_request(cfg, slab, pref_caches, slot)
 
-    return jax.jit(fn)
+    return _register_jit("insert", jax.jit(fn))
 
 
 @functools.lru_cache(maxsize=64)
@@ -197,18 +236,23 @@ def _serve_step_fn(cfg, ctx_key):
     """
 
     def fn(p, slab, tok, keys, steps, temps):
-        _TRACE_COUNTS["decode"] += 1
         logits, slab = decode_step(cfg, p, slab, tok, aux_inputs=None)
         new_keys = jax.vmap(jax.random.fold_in)(keys, steps - 1)
         nxt = jax.vmap(_sample_row)(logits[:, -1], new_keys, temps)
         return slab, nxt.astype(jnp.int32), new_keys
 
-    return jax.jit(fn)
+    return _register_jit("decode", jax.jit(fn))
 
 
 def trace_counts() -> dict:
-    """How many times the serving entry points have been (re)traced."""
-    return dict(_TRACE_COUNTS)
+    """How many times the serving entry points have been (re)traced:
+    per kind, the summed distinct-signature counts of every registered
+    jitted callable.  Kinds that never traced are omitted (matching the
+    old in-trace counter, which only held keys that fired)."""
+    out = Counter()
+    for kind, wrapper in _JIT_REGISTRY:
+        out[kind] += wrapper.n_traces
+    return {k: v for k, v in out.items() if v}
 
 
 def clear_jit_cache() -> None:
@@ -217,7 +261,7 @@ def clear_jit_cache() -> None:
     _decode_fn.cache_clear()
     _insert_fn.cache_clear()
     _serve_step_fn.cache_clear()
-    _TRACE_COUNTS.clear()
+    _JIT_REGISTRY.clear()
 
 
 # ------------------------------------------------------------------ engine

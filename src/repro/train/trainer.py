@@ -101,6 +101,13 @@ class Trainer:
     size) or a bare ``StragglerDistribution`` (coerced to
     ``Env.iid(dist, n_workers)``, the pre-Env behavior unchanged).
 
+    ``scheme="auto"`` searches the joint launch space with
+    ``repro.tune.autotune`` (optionally under a ``budget=MemBudget``):
+    the winning candidate sets the plan AND any step knob the caller
+    left at its open default — ``pipeline`` ('auto'), ``reduce_mode``
+    ('psum'), ``grad_dtype`` (None) — and the search record lands on
+    ``self.tune_report`` (docs/AUTOTUNE.md).
+
     ``adapt`` is an optional ``repro.adapt.AdaptConfig``: the trainer
     then feeds every round's realized per-worker completion times into
     an ``AdaptiveController`` and hot-swaps the plan (``swap_plan``)
@@ -127,7 +134,8 @@ class Trainer:
                  scheme: str = None, global_batch: int = 32, seed: int = 0,
                  mesh=None, mode: str = "sim", data_kind: str = "zipf",
                  solver: str = None, pipeline: str = "auto", adapt=None,
-                 wave=None, ckpt=None):
+                 wave=None, ckpt=None, budget=None, reduce_mode: str = "psum",
+                 grad_dtype: str = None):
         if scheme is None:
             scheme = solver if solver is not None else "xf"  # `solver` is the legacy kw
         if n_workers is None:
@@ -142,16 +150,38 @@ class Trainer:
         self.env = self.dist = env  # `dist` is the legacy attribute name
         self.n_workers = n_workers
         self.mesh, self.mode, self.pipeline = mesh, mode, pipeline
+        self.reduce_mode, self.grad_dtype = reduce_mode, grad_dtype
+        self.tune_report = None
         key = jax.random.PRNGKey(seed)
         self.state, self.axes = init_train_state(cfg, key)
-        self.plan = Plan.build(self.state.params, env,
-                               scheme=scheme, rng=seed)
+        if scheme == "auto":
+            # model-aware search: the winner sets the plan AND the step
+            # knobs (pipeline/reduce_mode/grad_dtype) the user left open
+            from repro.tune import autotune
+
+            res = autotune(cfg, env, budget, global_batch=global_batch,
+                           seq_len=min(cfg.max_seq, 512), seed=seed)
+            self.plan = res.plan
+            self.tune_report = res.report
+            best = res.best
+            if pipeline == "auto":
+                self.pipeline = best.pipeline
+            if reduce_mode == "psum":       # the open default
+                self.reduce_mode = best.reduce_mode
+            if grad_dtype is None:
+                self.grad_dtype = best.grad_dtype
+        elif budget is not None:
+            raise ValueError("budget= requires scheme='auto'")
+        else:
+            self.plan = Plan.build(self.state.params, env,
+                                   scheme=scheme, rng=seed)
         self.sim = self.plan.simulator(env, seed=seed)
         self.data = SyntheticTokens(DataConfig(
             vocab=cfg.vocab, seq_len=min(cfg.max_seq, 512),
             global_batch=global_batch, seed=seed, kind=data_kind))
-        #: compiled coded steps keyed by (partition, pipeline) — a swap
-        #: back to a previously-seen partition reuses the compiled step.
+        #: compiled coded steps keyed by (partition, pipeline,
+        #: reduce_mode, grad_dtype) — a swap back to a previously-seen
+        #: partition reuses the compiled step.
         self._step_cache: dict = {}
         self.step_fn = self._step_fn_for(self.plan)
         self.controller = None
@@ -182,11 +212,16 @@ class Trainer:
 
     # ------------------------------------------------------------- hot swap
     def _step_fn_for(self, plan: Plan):
-        key = (plan.partition_key(), self.pipeline)
+        key = (plan.partition_key(), self.pipeline, self.reduce_mode,
+               self.grad_dtype)
         fn = self._step_cache.get(key)
         if fn is None:
+            gd = (jnp.bfloat16 if self.grad_dtype == "bf16"
+                  else None if self.grad_dtype in (None, "fp32")
+                  else self.grad_dtype)
             fn = jax.jit(make_coded_train_step(
                 self.cfg, self.cfg_t, plan, mesh=self.mesh, mode=self.mode,
+                reduce_mode=self.reduce_mode, grad_dtype=gd,
                 pipeline=self.pipeline))
             self._step_cache[key] = fn
         return fn
@@ -198,9 +233,9 @@ class Trainer:
         stream, and step count are untouched — only the plan the next
         step codes against changes.  The straggler simulator keeps its
         env/rng/ledger and just prices future rounds with the new plan;
-        the compiled coded step comes from a per-(partition, pipeline)
-        cache, so swapping back to a previous plan is free (tested
-        bit-identical in tests/test_adaptive.py).
+        the compiled coded step comes from a per-(partition, pipeline,
+        reduce_mode, grad_dtype) cache, so swapping back to a previous
+        plan is free (tested bit-identical in tests/test_adaptive.py).
         """
         if plan.n_workers != self.n_workers:
             raise ValueError(f"plan has {plan.n_workers} workers, trainer "

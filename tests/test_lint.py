@@ -147,6 +147,15 @@ def test_repo_lints_clean_against_committed_baseline():
     assert stale == [], f"stale baseline entries: {stale}"
 
 
+def test_committed_baseline_is_empty():
+    """The last grandfathered finding (serve/engine.py's in-trace
+    ``_TRACE_COUNTS``) was replaced by the derived-signature counter;
+    the baseline must stay empty — a new entry needs a justification
+    AND a reviewer deliberately deleting this test's guarantee."""
+    blob = json.loads((REPO / "lint-baseline.json").read_text())
+    assert blob == [], f"lint-baseline.json regained entries: {blob}"
+
+
 def test_repo_hygiene_is_clean():
     findings = run_hygiene(REPO)
     assert findings == [], "\n".join(f.render() for f in findings)

@@ -245,3 +245,42 @@ def test_api_all_exports_resolve():
     assert "annotations" not in api.__all__
     for name in api.__all__:
         assert getattr(api, name) is not None, name
+
+
+# ------------------------------------------------------- warm-start contract
+def test_warm_start_discarded_by_closed_form_warns_once():
+    """A seed vector passed to a seed-free scheme is silently useless —
+    the caller hears about it exactly once per scheme, as a
+    ``ReproWarning`` (NOT the deprecation category: internal callers
+    may legitimately hit this path, and the tier-1 firewall must not
+    promote it to an error)."""
+    import warnings
+
+    from repro.deprecation import ReproWarning, reset_warned
+
+    reset_warned()
+    seed = np.full(4, 5000.0)
+    with pytest.warns(ReproWarning, match="does not declare a warm_start"):
+        x1 = solve_scheme("xf", DIST, 4, 20_000, warm_start=seed)
+    # one-shot: the second call is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ReproWarning)
+        x2 = solve_scheme("xf", DIST, 4, 20_000, warm_start=seed)
+    np.testing.assert_array_equal(x1, x2)   # and the seed changed nothing
+    reset_warned()
+
+
+def test_warm_start_accepted_by_spsg_without_warning():
+    import warnings
+
+    from repro.core.schemes import scheme_accepts_warm_start
+    from repro.deprecation import ReproWarning, reset_warned
+
+    assert scheme_accepts_warm_start("spsg")
+    assert not scheme_accepts_warm_start("xf")
+    reset_warned()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", ReproWarning)
+        x = solve_scheme("spsg", DIST, 4, 1000,
+                         warm_start=np.full(4, 250.0))
+    assert x.sum() == 1000

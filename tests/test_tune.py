@@ -1,0 +1,269 @@
+"""repro.tune: the launch-configuration autotuner.
+
+Four layers:
+  * selection correctness — ``autotune`` equals an independent
+    brute-force argmin on an exhaustively enumerable space, with a
+    deterministic tie-break;
+  * the memory model — monotone in every knob it claims to price
+    (K = s_max+1 shards, psum vs psum_scatter, fp32 vs bf16), and the
+    budget prunes exactly the over-cap candidates, never the winner;
+  * wiring — ``Plan.build(scheme="auto")`` and ``Trainer`` adopt the
+    tuned knobs and carry the search report;
+  * scale — every registered arch (gemma2-27b, mixtral-8x22b,
+    deepseek-v3-671b, ...) prices a full candidate list through
+    ``jax.eval_shape`` abstract shapes without allocating a single
+    device buffer.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Env, Plan
+from repro.core.distributions import ScaledStraggler, ShiftedExponential
+from repro.core.runtime import DEFAULT_COST
+from repro.tune import (Candidate, MemBudget, MemEstimate, TuneError,
+                        TuneReport, autotune, autotune_plan, estimate_memory)
+
+FAST = ShiftedExponential(mu=1e-3, t0=50.0)
+
+
+def _env4():
+    return Env.iid(FAST, 4)
+
+
+def _het8():
+    return Env.coerce([FAST] * 6
+                      + [ScaledStraggler(base=FAST, factor=2.5)] * 2, 8)
+
+
+def _small_cfg():
+    from repro.configs import get_config
+
+    return get_config("gc-lm-110m").reduced()
+
+
+# ----------------------------------------------------- selection correctness
+def test_autotune_matches_independent_brute_force():
+    """The N=4 two-scheme space is small enough to enumerate by hand:
+    the tuner's argmin must match a from-scratch sweep over the same
+    public APIs, exactly."""
+    from repro.train.state import abstract_train_state
+    from repro.tune.tune import _overhead_units
+
+    cfg, env = _small_cfg(), _env4()
+    schemes, steps, seed = ("xf", "xt"), 40, 0
+    res = autotune(cfg, env, None, schemes=schemes, steps=steps, seed=seed,
+                   backend="eq2")
+
+    shapes, _ = abstract_train_state(cfg)
+    price = env.solver_view()
+    best_key, best_time = None, np.inf
+    seen = set()
+    for scheme in schemes:
+        for s_cap in range(env.n_workers):
+            plan = Plan.build(shapes.params, env, scheme=scheme, rng=seed,
+                              s_cap=s_cap)
+            sig = (scheme, tuple(int(v) for v in plan.x))
+            if sig in seen:
+                continue
+            seen.add(sig)
+            cap = None if plan.s_max > s_cap else s_cap
+            sim = plan.simulate(price, steps, seed=seed, cost=DEFAULT_COST,
+                                backend="eq2")
+            tau = float(np.mean([r["tau_coded"] for r in sim.ledger]))
+            for pipe in ("flat", "tree"):
+                for red in ("psum", "psum_scatter"):
+                    for gd in ("fp32", "bf16"):
+                        t = tau + _overhead_units(plan, pipe, red, gd)
+                        key = (scheme, -1 if cap is None else cap,
+                               pipe, red, gd)
+                        if best_key is None or (t, key) < (best_time,
+                                                           best_key):
+                            best_time, best_key = t, key
+    assert res.best.key() == best_key
+    assert res.best.time == pytest.approx(best_time, rel=1e-12)
+
+
+def test_ranking_is_deterministic_and_sorted():
+    res = autotune(_small_cfg(), _env4(), None, schemes=("xf", "xt"),
+                   steps=30)
+    times = [c.time for c in res.report.candidates]
+    assert times == sorted(times)
+    res2 = autotune(_small_cfg(), _env4(), None, schemes=("xf", "xt"),
+                    steps=30)
+    assert [c.key() for c in res.report.candidates] \
+        == [c.key() for c in res2.report.candidates]
+
+
+def test_solve_failures_are_recorded_not_fatal():
+    """A scheme that cannot solve must become a reasoned pruned entry,
+    not abort the whole search."""
+    from repro.core.schemes import register_scheme, _REGISTRY
+
+    @register_scheme("_always-broken", kind="extra",
+                     description="test-only: raises on every solve")
+    def _broken(dist, n_workers, total, *, cost=DEFAULT_COST, rng=0,
+                s_cap=None):
+        raise RuntimeError("deliberately unsolvable")
+
+    try:
+        res = autotune(_small_cfg(), _env4(), None,
+                       schemes=("_always-broken", "xf"), steps=20)
+        assert res.best.scheme == "xf"
+        broken = [c for c in res.report.pruned
+                  if c.scheme == "_always-broken"]
+        assert broken and all("solve failed" in c.prune_reason
+                              for c in broken)
+    finally:
+        _REGISTRY.pop("_always-broken", None)
+
+
+# ------------------------------------------------------------- memory model
+def test_memory_monotone_in_the_knobs():
+    plan = Plan.build(np.array([4.0, 2.0, 1.0, 1.0]), _env4(), scheme="xf")
+    base = estimate_memory(plan, grad_dtype="fp32", reduce_mode="psum")
+    assert estimate_memory(plan, grad_dtype="bf16").total < base.total
+    assert estimate_memory(plan, reduce_mode="psum_scatter").total \
+        < base.total
+    assert base.grad_bytes > 0 and base.params_bytes > 0
+    with pytest.raises(ValueError, match="grad_dtype"):
+        estimate_memory(plan, grad_dtype="fp16")
+
+
+def test_memory_scales_with_redundancy():
+    """K = s_max+1 stacked per-shard gradients is what the cap buys:
+    more redundancy must cost strictly more gradient HBM."""
+    env = _env4()
+    costs = np.array([4.0, 2.0, 1.0, 1.0])
+    lo = Plan.build(costs, env, scheme="xf", s_cap=0)
+    hi = Plan.build(costs, env, scheme="xf", s_cap=3)
+    assert hi.s_max > lo.s_max
+    assert estimate_memory(hi).grad_bytes > estimate_memory(lo).grad_bytes
+
+
+def test_budget_never_admits_over_cap_candidates():
+    cfg, env = _small_cfg(), _het8()
+    open_res = autotune(cfg, env, None, schemes=("xf", "xt"), steps=30)
+    mems = sorted(c.mem.total for c in open_res.report.candidates)
+    cap = MemBudget(0.5 * (mems[0] + mems[-1]))   # bites mid-range
+    res = autotune(cfg, env, cap, schemes=("xf", "xt"), steps=30)
+    assert res.report.pruned, "cap was chosen to prune something"
+    assert all(c.mem.total <= cap.hbm_bytes for c in res.report.candidates)
+    assert all(c.prune_reason.startswith("memory")
+               for c in res.report.pruned)
+    # the winner among survivors equals the open-search winner among
+    # the same admissible set
+    admissible_keys = {c.key() for c in res.report.candidates}
+    expect = next(c for c in open_res.report.candidates
+                  if c.key() in admissible_keys)
+    assert res.best.key() == expect.key()
+
+
+def test_unsatisfiable_budget_raises_with_report():
+    with pytest.raises(TuneError) as ei:
+        autotune(_small_cfg(), _env4(), MemBudget(1.0), schemes=("xf",),
+                 steps=20)
+    assert isinstance(ei.value.report, TuneReport)
+    assert ei.value.report.pruned and not ei.value.report.candidates
+
+
+def test_membudget_constructors():
+    b = MemBudget.from_gb(16)
+    assert b.hbm_bytes == 16 * 2**30
+    assert "16" in str(b)
+    assert "2.00 GiB" in str(MemBudget(2 * 2**30))
+
+
+# ------------------------------------------------------------------ report
+def test_report_json_roundtrip(tmp_path):
+    res = autotune(_small_cfg(), _env4(),
+                   MemBudget.from_gb(1024), schemes=("xf",), steps=20)
+    path = tmp_path / "report.json"
+    blob = json.loads(res.report.to_json(str(path)))
+    assert blob == json.loads(path.read_text())
+    assert blob["n_workers"] == 4
+    assert blob["n_admissible"] == len(res.report.candidates)
+    assert blob["budget_bytes"] == 1024 * 2**30
+    first = blob["candidates"][0]
+    assert first["time"] == pytest.approx(res.best.time)
+    assert first["mem"]["total_bytes"] == pytest.approx(res.best.mem.total)
+    assert isinstance(res.report.table(), str)
+    # every candidate row is itself JSON-clean (no numpy scalars)
+    json.dumps(blob)
+
+
+# ------------------------------------------------------------------ wiring
+def test_plan_build_auto_scheme():
+    plan = Plan.build(np.array([4.0, 2.0, 1.0, 0.5]), _env4(),
+                      scheme="auto")
+    assert plan.scheme in ("xf", "xt", "single-bcgc", "single-real",
+                           "uniform", "tandon-alpha", "ferdinand-l",
+                           "ferdinand-l2")
+    assert isinstance(plan.tune_report, TuneReport)
+    assert plan.tune_report.best.scheme == plan.scheme
+
+
+def test_plan_build_budget_requires_auto():
+    with pytest.raises(ValueError, match="scheme='auto'"):
+        Plan.build(np.array([1.0, 1.0, 1.0, 1.0]), _env4(), scheme="xf",
+                   budget=MemBudget.from_gb(1))
+
+
+def test_autotune_plan_respects_explicit_s_cap():
+    plan = autotune_plan(np.array([4.0, 2.0, 1.0, 0.5]), _env4(), s_cap=1)
+    assert plan.s_max <= 1
+
+
+def test_trainer_auto_adopts_tuned_knobs():
+    from repro.train.trainer import TrainConfig, Trainer
+
+    tr = Trainer(_small_cfg(), TrainConfig(total_steps=4), FAST,
+                 n_workers=4, scheme="auto", budget=MemBudget.from_gb(64),
+                 global_batch=8, seed=0)
+    best = tr.tune_report.best
+    assert (tr.pipeline, tr.reduce_mode, tr.grad_dtype) \
+        == (best.pipeline, best.reduce_mode, best.grad_dtype)
+    assert tr.plan.partition_key() is not None
+    # the compiled-step cache keys on the adopted knobs
+    fn = tr._step_fn_for(tr.plan)
+    assert (tr.plan.partition_key(), tr.pipeline, tr.reduce_mode,
+            tr.grad_dtype) in tr._step_cache
+    assert fn is tr._step_fn_for(tr.plan)
+
+
+def test_trainer_budget_requires_auto():
+    from repro.train.trainer import TrainConfig, Trainer
+
+    with pytest.raises(ValueError, match="scheme='auto'"):
+        Trainer(_small_cfg(), TrainConfig(total_steps=4), FAST,
+                n_workers=4, scheme="xf", budget=MemBudget.from_gb(1))
+
+
+# ---------------------------------------------------------- abstract scale
+def _list_archs():
+    from repro.configs import list_archs
+
+    return list_archs()
+
+
+@pytest.mark.parametrize("arch", _list_archs())
+def test_every_arch_prices_abstractly(arch):
+    """Param shapes + FlatLayout + a priced candidate list for every
+    registered config — including the 27B/141B/671B ones — via
+    ``jax.eval_shape`` only.  Any real allocation at deepseek-v3-671b
+    scale would OOM the host outright, so passing IS the no-device-
+    allocation proof."""
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    res = autotune(cfg, _env4(), None, schemes=("xf", "xt"),
+                   s_caps=(0, 3), steps=10)
+    assert res.report.candidates
+    best = res.best
+    assert best.mem.params_bytes > 0
+    assert best.mem.total > 0
+    assert best.plan.flat_layout is not None
+    # the report prices every expanded candidate, not just the winner
+    for c in res.report.candidates:
+        assert np.isfinite(c.time) and c.mem.total > 0
